@@ -1,0 +1,53 @@
+"""Paper Fig. 1: time breakdown across the programming abstraction.
+
+CPU-scale reproduction: one reduced-model train step decomposed into
+trace (framework/python), compile (framework/XLA), and steady-state math,
+plus the per-step python dispatch overhead — the 'programmability tax'
+stack for a JAX framework."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduced
+from repro.models import forward_train, model_defs
+from repro.models import module as m
+
+
+def main() -> None:
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+
+    def step(p, b):
+        loss, _ = forward_train(p, cfg, b)
+        return loss
+
+    t0 = time.perf_counter()
+    lowered = jax.jit(step).lower(params, batch)
+    t_trace = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    jax.block_until_ready(compiled(params, batch))
+    t0 = time.perf_counter()
+    iters = 20
+    for _ in range(iters):
+        out = compiled(params, batch)
+    jax.block_until_ready(out)
+    t_math = (time.perf_counter() - t0) / iters
+
+    emit("fig01.trace_python", t_trace * 1e6, "one-time")
+    emit("fig01.compile_xla", t_compile * 1e6, "one-time")
+    emit("fig01.steady_step", t_math * 1e6,
+         f"amortized_tax_pct_100steps="
+         f"{100 * (t_trace + t_compile) / (t_trace + t_compile + 100 * t_math):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Fig. 4: speedup of asynchronous over synchronous scheduling.
+
+Two measurements:
+  * wall-clock on CPU for a reduced MoE layer: ``moe.apply`` (async-style
+    dispatch) vs ``moe.apply_sync_schedule`` (one expert at a time);
+  * production-mesh estimate from the cost model: pools=guideline vs pools=1
+    for every arch (the Fig. 4 bar chart analogue).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import ARCH_IDS, SHAPES, get_config, reduced
+from repro.core import autotune, tuner
+from repro.models import moe
+from repro.models import module as m
+
+
+def main() -> None:
+    # --- wall clock, reduced scale
+    cfg = reduced(get_config("dbrx-132b"), experts=8, d_model=128, d_ff=256)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, top_k=2))
+    params = m.init_params(moe.moe_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 512, cfg.d_model))
+    f_async = jax.jit(lambda p, v: moe.apply(p, v, cfg)[0])
+    f_sync = jax.jit(lambda p, v: moe.apply_sync_schedule(p, v, cfg)[0])
+    t_async = time_fn(f_async, params, x)
+    t_sync = time_fn(f_sync, params, x)
+    emit("fig04.moe_layer.async", t_async * 1e6,
+         f"speedup_vs_sync={t_sync / t_async:.2f}x")
+    emit("fig04.moe_layer.sync", t_sync * 1e6, "baseline")
+
+    # --- production estimate per arch (train shape)
+    shape = SHAPES["train_4k"]
+    for arch in ARCH_IDS:
+        acfg = get_config(arch)
+        gl = tuner.guideline_plan(acfg, shape)
+        sync = dataclasses.replace(gl, pools=1, intra=16, name="sync")
+        t_gl = autotune.evaluate(acfg, shape, gl).step_s
+        t_sync2 = autotune.evaluate(acfg, shape, sync).step_s
+        emit(f"fig04.prod.{arch}", t_gl * 1e6,
+             f"async_speedup={t_sync2 / t_gl:.2f}x,pools={gl.pools}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Fig. 6: performance heatmap over (inter-op pools x intra-op
+threads).  Mesh analogue: step-time estimate over every (pools, intra)
+factorization of the 16-wide model axis for dbrx-132b (the branch-rich
+Inception analogue), train and prefill."""
+
+from benchmarks.common import emit
+from repro.configs import SHAPES, get_config
+from repro.core import autotune, tuner
+
+
+def main() -> None:
+    cfg = get_config("dbrx-132b")
+    for shape_name in ("train_4k", "prefill_32k"):
+        shape = SHAPES[shape_name]
+        best = None
+        rows = []
+        for pools in (1, 2, 4, 8, 16):
+            plan = tuner.Plan(name=f"p{pools}", pools=pools,
+                              intra=16 // pools, fsdp=True, seq_shard=False)
+            r = autotune.evaluate(cfg, shape, plan)
+            rows.append((pools, r))
+            if r.fits and (best is None or r.step_s < best[1].step_s):
+                best = (pools, r)
+        for pools, r in rows:
+            emit(f"fig06.dbrx.{shape_name}.p{pools}_i{16 // pools}",
+                 r.step_s * 1e6,
+                 f"dominant={r.cost.dominant},fits={r.fits},"
+                 f"best={'*' if best and pools == best[0] else ''}")
+        gl = tuner.guideline_plan(cfg, shape)
+        emit(f"fig06.dbrx.{shape_name}.guideline_choice", 0.0,
+             f"pools={gl.pools},matches_best={best is not None and gl.pools == best[0]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Fig. 9/10: MatMul scaling and the data-preparation overhead.
+
+CPU wall-clock reproduction of §5.1: for square MatMuls of growing size,
+compare the bare library dot against the framework operator that must first
+run data preparation (upcast + scale, materialized separately = MatMul1).
+The prep overhead fraction shrinks as O(n)/O(n^3), matching the paper's
+Amdahl analysis; the derived column reports it.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.fused_matmul.ref import matmul1
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    for n in (256, 512, 1024, 2048):
+        x8 = jax.random.randint(key, (n, n), -127, 127, jnp.int8)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (n, n),
+                              jnp.float32)
+        sc = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (n, 1)))
+
+        bare = jax.jit(lambda a, b: a @ b)
+        xf = x8.astype(jnp.float32) * sc
+        t_bare = time_fn(bare, xf, w)
+
+        op = jax.jit(lambda a, b, s: matmul1(a, b, s, out_dtype=jnp.float32))
+        t_op = time_fn(op, x8, w, sc)
+
+        overhead = max(t_op - t_bare, 0.0)
+        emit(f"fig09.matmul_{n}", t_op * 1e6,
+             f"kernel_us={t_bare * 1e6:.1f},prep_overhead_pct="
+             f"{100 * overhead / t_op:.1f}")
+
+
+if __name__ == "__main__":
+    main()

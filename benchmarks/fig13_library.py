@@ -1,0 +1,41 @@
+"""Paper Fig. 13: math-library GEMM comparison (MKL vs MKL-DNN vs Eigen).
+
+Backend analogue on this box: XLA:CPU dot vs numpy (BLAS) vs a naive
+jnp reference lowered without the dot fast path (explicit broadcast-
+multiply-reduce).  Derived column reports GFLOP/s — the prefetch-quality
+axis of the paper's study collapses into achieved bandwidth here.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    for n in (256, 512, 1024):
+        a = jax.random.normal(key, (n, n), jnp.float32)
+        b = jax.random.normal(jax.random.fold_in(key, 1), (n, n),
+                              jnp.float32)
+        an, bn = np.asarray(a), np.asarray(b)
+        flops = 2 * n ** 3
+
+        t_xla = time_fn(jax.jit(lambda x, y: x @ y), a, b)
+        t_np = time_fn(lambda: np.dot(an, bn))
+        naive = jax.jit(
+            lambda x, y: jnp.sum(x[:, :, None] * y[None, :, :], axis=1))
+        t_naive = time_fn(naive, a, b) if n <= 512 else float("nan")
+
+        emit(f"fig13.xla_{n}", t_xla * 1e6,
+             f"gflops={flops / t_xla / 1e9:.1f}")
+        emit(f"fig13.numpy_{n}", t_np * 1e6,
+             f"gflops={flops / t_np / 1e9:.1f}")
+        if n <= 512:
+            emit(f"fig13.naive_{n}", t_naive * 1e6,
+                 f"gflops={flops / t_naive / 1e9:.1f}")
+
+
+if __name__ == "__main__":
+    main()

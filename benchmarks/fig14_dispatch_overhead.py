@@ -1,0 +1,60 @@
+"""Paper Fig. 14: thread-pool overhead under 10k micro tasks.
+
+Framework-dispatch analogue: the cost of crossing the python->jit boundary
+for a trivial op, measured three ways (mirroring std::thread vs Eigen vs
+Folly): (a) 1000 separate jit dispatches, (b) one jit containing the same
+1000 ops (fully fused schedule), (c) 1000 eager ops.  The derived column
+is per-task overhead — the price the 'scheduler' charges per operator.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+
+N_TASKS = 1000
+
+
+def main() -> None:
+    x = jnp.zeros((8, 8))
+
+    inc = jax.jit(lambda v: v + 1.0)
+    jax.block_until_ready(inc(x))
+    t0 = time.perf_counter()
+    v = x
+    for _ in range(N_TASKS):
+        v = inc(v)
+    jax.block_until_ready(v)
+    t_dispatch = time.perf_counter() - t0
+
+    @jax.jit
+    def fused(v):
+        for _ in range(N_TASKS):
+            v = v + 1.0
+        return v
+
+    jax.block_until_ready(fused(x))
+    t0 = time.perf_counter()
+    jax.block_until_ready(fused(x))
+    t_fused = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    v = x
+    with jax.disable_jit():
+        for _ in range(100):
+            v = v + 1.0
+    jax.block_until_ready(v)
+    t_eager = (time.perf_counter() - t0) * (N_TASKS / 100)
+
+    emit("fig14.per_dispatch_jit", t_dispatch / N_TASKS * 1e6,
+         f"total_ms={t_dispatch * 1e3:.1f}")
+    emit("fig14.per_op_fused", t_fused / N_TASKS * 1e6,
+         f"overhead_ratio={t_dispatch / t_fused:.1f}x")
+    emit("fig14.per_op_eager", t_eager / N_TASKS * 1e6,
+         f"total_ms_est={t_eager * 1e3:.1f}")
+
+
+if __name__ == "__main__":
+    main()

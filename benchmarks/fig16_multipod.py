@@ -1,0 +1,52 @@
+"""Paper Fig. 15-17: beyond one socket — DP vs MP across the slow link.
+
+Reads the dry-run artifacts: for each arch x shape present on both meshes,
+reports the multi-pod collective-byte increase (the UPI-traffic analogue)
+and the cost-model DP-vs-MP comparison across the pod axis (§7.2's
+'MP helps only when similar-size parallel ops sit on the critical path')."""
+
+import dataclasses
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core import autotune, tuner
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def main() -> None:
+    # measured: single vs multi wire bytes per device
+    for f in sorted(RESULTS.glob("*__single__guideline.json")):
+        g = RESULTS / f.name.replace("__single__", "__multi__")
+        if not g.exists():
+            continue
+        a = json.load(open(f))
+        b = json.load(open(g))
+        if a["wire_bytes_per_device"] > 0:
+            ratio = b["wire_bytes_per_device"] / a["wire_bytes_per_device"]
+        else:
+            ratio = float("nan")
+        emit(f"fig16.measured.{a['arch']}.{a['shape']}",
+             b["collective_s"] * 1e6,
+             f"wire_ratio_multi_vs_single={ratio:.2f},"
+             f"pod_mode={b['plan']['pod_mode']}")
+
+    # model: DP vs MP pod axis for each arch (train)
+    shape = SHAPES["train_4k"]
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        base = tuner.guideline_plan(cfg, shape, pods=2)
+        dp = dataclasses.replace(base, pod_mode="dp", name="dp")
+        mp = dataclasses.replace(base, pod_mode="mp", name="mp")
+        t_dp = autotune.evaluate(cfg, shape, dp).step_s
+        t_mp = autotune.evaluate(cfg, shape, mp).step_s
+        pick = "mp" if t_mp < t_dp else "dp"
+        emit(f"fig16.model.{arch}", min(t_dp, t_mp) * 1e6,
+             f"dp_us={t_dp * 1e6:.0f},mp_us={t_mp * 1e6:.0f},best={pick},"
+             f"guideline={base.pod_mode}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""§Roofline report generator: aggregates results/dryrun/*.json into the
+per-(arch x shape x mesh) three-term table (EXPERIMENTS.md §Roofline).
+
+Raw terms use the assignment's formulas verbatim.  The adjusted collective
+term halves f32 collective payloads: XLA:CPU's float normalization upcasts
+every bf16 dot/convert to f32, so collectives that would move bf16 on a
+real TPU move f32 in the CPU-lowered HLO (documented CPU-backend artifact,
+EXPERIMENTS.md §Dry-run).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_rows():
+    rows = []
+    for f in sorted(RESULTS.glob("*.json")):
+        try:
+            rows.append(json.load(open(f)))
+        except Exception:
+            pass
+    return rows
+
+
+def fmt_table(rows, mesh="single"):
+    out = []
+    hdr = (f"| arch | shape | plan | compute_s | memory_s | collective_s | "
+           f"dominant | MODEL_FLOPS | useful | frac |")
+    out.append(hdr)
+    out.append("|" + "---|" * 10)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r["setting"] not in ("guideline",):
+            continue
+        p = r["plan"]
+        plan = f"p{p['pools']}i{p['intra']}" + ("f" if p["fsdp"] else "")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {plan} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['dominant']} "
+            f"| {r['model_flops_global']:.2e} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_frac']:.3f} |")
+    return "\n".join(out)
+
+
+def write_table(rows) -> None:
+    out = Path(__file__).resolve().parents[1] / "results" / "roofline_table.md"
+    lines = ["# §Roofline — per-cell three-term table (single-pod 16x16, "
+             "guideline plan)", "",
+             "terms in seconds/step; frac = ideal-compute / step estimate;",
+             "adj_coll halves f32 collective payloads (CPU float-"
+             "normalization artifact, EXPERIMENTS.md §Dry-run).", ""]
+    hdr = ("| arch | shape | plan | compute_s | memory_s | collective_s | "
+           "adj_coll_s | dominant | useful | frac | mem/dev GiB |")
+    lines += [hdr, "|" + "---|" * 11]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["mesh"] != "single" or r["setting"] != "guideline":
+            continue
+        p_ = r["plan"]
+        plan = f"p{p_['pools']}i{p_['intra']}" + ("f" if p_["fsdp"] else "")
+        adj = r["collective_s"] * 0.55  # ~all f32 on this backend -> bf16
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {plan} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {adj:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} "
+            f"| {r['memory_per_device_bytes'] / 2**30:.0f} |")
+    lines += ["", "## multi-pod (2x16x16) cells", "", hdr, "|" + "---|" * 11]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "multi" or r["setting"] != "guideline":
+            continue
+        p_ = r["plan"]
+        plan = f"p{p_['pools']}i{p_['intra']}" + ("f" if p_["fsdp"] else "")
+        adj = r["collective_s"] * 0.55
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {plan} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {adj:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} "
+            f"| {r['memory_per_device_bytes'] / 2**30:.0f} |")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"# wrote {out}")
+
+
+def main() -> None:
+    rows = load_rows()
+    print(f"# roofline rows: {len(rows)}")
+    for r in sorted(rows, key=lambda r: (r["shape"], r["arch"], r["mesh"])):
+        print(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}."
+              f"{r['setting']},{r['step_s'] * 1e6:.1f},"
+              f"dom={r['dominant']},frac={r['roofline_frac']:.3f},"
+              f"useful={r['useful_ratio']:.2f},"
+              f"mem_gib={r['memory_per_device_bytes'] / 2**30:.1f}")
+    try:
+        write_table(rows)
+    except Exception as e:
+        print(f"# table write failed: {e}")
+    if "--markdown" in sys.argv:
+        print()
+        print(fmt_table(rows, "single"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: train a reduced gemma2 for 100 steps on CPU, watch the loss
+fall, checkpoint, and resume.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+from repro.configs import get_config, reduced
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    cfg = reduced(get_config("gemma2-2b"), layers=2, d_model=64)
+    with tempfile.TemporaryDirectory() as ckpt:
+        tc = TrainerConfig(steps=100, batch=8, seq_len=32, ckpt_dir=ckpt,
+                           ckpt_every=50, log_every=20)
+        trainer = Trainer(cfg, tc)
+        result = trainer.run()
+        print("--- loss curve ---")
+        for row in result["history"]:
+            print(f"step {row['step']:4d}  loss {row['loss']:.4f}")
+        first, last = result["history"][0], result["history"][-1]
+        assert last["loss"] < first["loss"], "loss did not decrease!"
+        print(f"\nloss fell {first['loss']:.3f} -> {last['loss']:.3f}; "
+              f"checkpoints written to {ckpt}")
+
+        # resume from the checkpoint and take a few more steps
+        trainer2 = Trainer(cfg, TrainerConfig(steps=110, batch=8, seq_len=32,
+                                              ckpt_dir=ckpt))
+        start = trainer2.maybe_restore()
+        print(f"restored at step {start}; continuing to 110")
+        trainer2.run()
+        print("resume OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving with continuous batching: 8 requests through 4 cache
+slots of a reduced rwkv6 (O(1)-state decode), plus a prefill/decode
+consistency check.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import forward_prefill, forward_train, model_defs
+from repro.models import module as m
+from repro.serve.engine import Engine, Request
+
+
+def main() -> None:
+    cfg = reduced(get_config("rwkv6-7b"), layers=2, d_model=64)
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    eng = Engine(cfg, params, slots=4, max_len=64)
+    t0 = time.perf_counter()
+    for i in range(8):
+        eng.submit(Request(rid=i, prompt=[(7 * i + j) % cfg.vocab_size
+                                          for j in range(5)],
+                           max_new_tokens=10))
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: {r.out_tokens}")
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"{len(done)} requests / {toks} tokens in {dt:.2f}s "
+          f"({eng.steps} batched decode steps, "
+          f"{toks / max(eng.steps, 1):.1f} tokens per step)")
+    assert len(done) == 8 and all(len(r.out_tokens) == 10 for r in done)
+
+    # consistency: greedy continuation from the engine matches teacher-forced
+    # logits from a fresh prefill of prompt+generated tokens
+    r0 = done[0]
+    full = r0.prompt + r0.out_tokens[:-1]
+    logits, _ = jax.jit(lambda p, b: forward_prefill(p, cfg, b))(
+        params, {"tokens": jnp.asarray([full], jnp.int32)})
+    nxt = int(jnp.argmax(logits[0]))
+    assert nxt == r0.out_tokens[-1], (nxt, r0.out_tokens[-1])
+    print("prefill/decode consistency check passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro: "Exploiting Parallelism Opportunities with Deep Learning
+Frameworks" (Wang et al., 2019) as a production-grade TPU/JAX framework.
+
+Entry points:
+    repro.core          the paper's technique (graph width -> mesh plan)
+    repro.configs       the 10 assigned architectures + shapes
+    repro.launch.dryrun multi-pod lower+compile proof
+    repro.launch.train / repro.launch.serve   drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,121 @@
+"""Parse compiled HLO text for collective traffic.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we scan
+``compiled.as_text()`` for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops, pull operand shapes + replica groups,
+and convert to per-device *wire bytes* with ring formulas:
+
+    all-reduce       2 * S * (n-1)/n
+    all-gather           S * (n-1)/n        (S = gathered output)
+    reduce-scatter       S * (n-1)          (S = scattered output)
+    all-to-all           S * (n-1)/n
+    collective-permute   S
+
+The SPMD module is a per-device program, so totals are per-device —
+consistent with ``cost_analysis()['flops']``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<shape>\([^)]*\)|[\w\[\],{}\s/]+?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+    re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    bytes_payload: float     # sum of operand-shape bytes (per device)
+    group_size: int
+    wire_bytes: float        # ring-model bytes on the wire per device
+    line: str = ""
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    mo = _GROUPS_IOTA_RE.search(line)
+    if mo:
+        return int(mo.group(2))
+    mo = _GROUPS_LIST_RE.search(line)
+    if mo:
+        ids = [x for x in mo.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return 1
+
+
+def _wire_bytes(op: str, payload: float, n: int) -> float:
+    if n <= 1:
+        return payload if op == "collective-permute" else 0.0
+    if op == "all-reduce":
+        return 2.0 * payload * (n - 1) / n
+    if op == "all-gather":
+        return payload * (n - 1) / n
+    if op == "reduce-scatter":
+        return payload * (n - 1)
+    if op == "all-to-all":
+        return payload * (n - 1) / n
+    if op == "collective-permute":
+        return payload
+    return 0.0
+
+
+def parse_collectives(hlo_text: str) -> List[Collective]:
+    out: List[Collective] = []
+    seen_done = set()
+    for mo in _COLL_RE.finditer(hlo_text):
+        line = hlo_text[mo.start():hlo_text.find("\n", mo.start())]
+        if "-done(" in line.split("=", 1)[1][:120]:
+            continue  # bytes counted at the -start op
+        op = mo.group("op")
+        payload = _shape_bytes(mo.group("shape"))
+        n = _group_size(line)
+        out.append(Collective(op, payload, n, _wire_bytes(op, payload, n),
+                              line.strip()[:200]))
+    return out
+
+
+def summarize(colls: List[Collective]) -> Dict:
+    by_op: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "payload_bytes": 0.0, "wire_bytes": 0.0})
+    for c in colls:
+        e = by_op[c.op]
+        e["count"] += 1
+        e["payload_bytes"] += c.bytes_payload
+        e["wire_bytes"] += c.wire_bytes
+    total_wire = sum(e["wire_bytes"] for e in by_op.values())
+    return {"by_op": dict(by_op), "total_wire_bytes": total_wire,
+            "num_collectives": len(colls)}
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return summarize(parse_collectives(hlo_text))["total_wire_bytes"]

@@ -1,0 +1,56 @@
+"""Architecture registry: ``get_config("dbrx-132b")`` etc."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, reduced,
+                                shape_applicable)
+
+_ARCH_MODULES = {
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "grok-1-314b": "repro.configs.grok1_314b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "internlm2-1.8b": "repro.configs.internlm2_1p8b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "whisper-medium": "repro.configs.whisper_medium",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+_cache: Dict[str, ModelConfig] = {}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _cache:
+        if arch not in _ARCH_MODULES:
+            raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+        _cache[arch] = importlib.import_module(_ARCH_MODULES[arch]).config()
+    return _cache[arch]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def live_cells():
+    """All (arch, shape) dry-run cells that apply (DESIGN.md S5)."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = shape_applicable(cfg, shape)
+            if ok:
+                cells.append((arch, shape.name))
+    return cells
+
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "ModelConfig", "ShapeConfig", "get_config",
+    "get_shape", "live_cells", "reduced", "shape_applicable",
+]

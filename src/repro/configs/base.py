@@ -1,0 +1,279 @@
+"""Model + shape configuration system.
+
+Every assigned architecture compiles down to a single ``ModelConfig``
+describing a stack of blocks.  A block is ``(mixer, ffn)`` where the mixer is
+one of {attention, mamba2, rwkv6_time_mix} and the ffn is one of
+{dense, moe, rwkv6_channel_mix}.  Encoder-decoder models (whisper) carry a
+second stack for the encoder.
+
+Shapes (``train_4k`` etc.) are global-batch x sequence points that select
+which step function (train / prefill / decode) the launcher lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Block descriptors
+# ---------------------------------------------------------------------------
+
+ATTN = "attn"            # GQA attention mixer
+MAMBA2 = "mamba2"        # Mamba2 SSD mixer
+RWKV6 = "rwkv6"          # RWKV6 time-mix mixer
+SHARED_ATTN = "shared_attn"  # zamba2-style shared transformer block
+
+FFN_DENSE = "dense"
+FFN_MOE = "moe"
+FFN_RWKV = "rwkv_cmix"
+FFN_NONE = "none"        # mixer-only layer (mamba backbone layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One layer of the stack."""
+
+    mixer: str = ATTN
+    ffn: str = FFN_DENSE
+    # attention variants
+    window: Optional[int] = None       # sliding-window size; None = global
+    # zamba2: index of the shared block parameter group to apply (-1 = own)
+    shared_group: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # number of token groups used for static-shape dispatch (sharded on data)
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64          # N, the SSM state size per head
+    head_dim: int = 64           # P, channels per head
+    conv_width: int = 4
+    chunk: int = 256             # SSD chunk length
+    expand: int = 2              # d_inner = expand * d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64         # rank of the data-dependent decay LoRA
+    mix_lora: int = 32           # rank of the token-shift mix LoRA
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // num_heads
+    blocks: Tuple[BlockSpec, ...] = ()      # len == num_layers (decoder stack)
+    # encoder stack (whisper); empty for decoder-only models
+    enc_layers: int = 0
+    enc_blocks: Tuple[BlockSpec, ...] = ()
+    cross_attention: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    # attention details
+    rope_theta: float = 10_000.0
+    logit_softcap: Optional[float] = None   # gemma2 final-logit softcap
+    attn_softcap: Optional[float] = None    # gemma2 attention softcap
+    sliding_window: Optional[int] = None    # default window for local layers
+    # embeddings
+    tie_embeddings: bool = False
+    embed_scale: bool = False               # gemma multiplies by sqrt(d)
+    # modality frontend stub: extra embedding sequence prepended to tokens
+    frontend: Optional[str] = None          # None | "patches" | "frames"
+    frontend_len: int = 0                   # stub sequence length
+    # zamba2 shared blocks
+    num_shared_groups: int = 0
+    # norm
+    norm_eps: float = 1e-5
+    max_position: int = 1 << 20
+
+    # ---------------------------------------------------------------- helpers
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def attn_free(self) -> bool:
+        return all(b.mixer in (MAMBA2, RWKV6) for b in self.blocks)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True when decoding at >=512k tokens is sub-quadratic / O(1)-state.
+
+        SSM / linear-attention mixers keep O(1) state.  Attention mixers
+        qualify only when every attention layer is sliding-window bounded.
+        """
+        for b in self.blocks:
+            if b.mixer in (ATTN, SHARED_ATTN) and b.window is None:
+                return False
+        return True
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have an autoregressive decoder
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for 6ND model flops)."""
+        from repro.core.cost_model import model_param_count
+
+        return model_param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.core.cost_model import model_active_param_count
+
+        return model_active_param_count(self)
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+TRAIN = "train"
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", TRAIN, 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", PREFILL, 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", DECODE, 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", DECODE, 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a live dry-run cell; see DESIGN.md S5."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "full-attention layers make 512k-token decode quadratic/"
+            "unbounded-KV; skipped per assignment rule (DESIGN.md S5)"
+        )
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Block-pattern helpers used by the per-arch config files
+# ---------------------------------------------------------------------------
+
+def uniform_blocks(n: int, mixer: str = ATTN, ffn: str = FFN_DENSE,
+                   window: Optional[int] = None) -> Tuple[BlockSpec, ...]:
+    return tuple(BlockSpec(mixer=mixer, ffn=ffn, window=window) for _ in range(n))
+
+
+def alternating_windows(n: int, pattern: Sequence[Optional[int]],
+                        ffn: str = FFN_DENSE) -> Tuple[BlockSpec, ...]:
+    """gemma-style local:global alternation. ``pattern`` repeats, e.g.
+    [4096, None] for gemma2 (1:1) or [1024]*5+[None] for gemma3 (5:1)."""
+    return tuple(
+        BlockSpec(mixer=ATTN, ffn=ffn, window=pattern[i % len(pattern)])
+        for i in range(n)
+    )
+
+
+def zamba2_blocks(n: int, shared_every: int, num_shared_groups: int,
+                  window: Optional[int]) -> Tuple[BlockSpec, ...]:
+    """Mamba2 backbone with a shared attention+MLP block applied every
+    ``shared_every`` layers, cycling through ``num_shared_groups`` parameter
+    groups (zamba2 uses 2)."""
+    blocks = []
+    shared_i = 0
+    for i in range(n):
+        if shared_every and (i % shared_every == shared_every - 1):
+            blocks.append(BlockSpec(mixer=SHARED_ATTN, ffn=FFN_DENSE,
+                                    window=window,
+                                    shared_group=shared_i % max(num_shared_groups, 1)))
+            shared_i += 1
+        else:
+            blocks.append(BlockSpec(mixer=MAMBA2, ffn=FFN_NONE))
+    return tuple(blocks)
+
+
+def validate(cfg: ModelConfig) -> ModelConfig:
+    assert len(cfg.blocks) == cfg.num_layers, (cfg.name, len(cfg.blocks), cfg.num_layers)
+    assert cfg.num_heads % cfg.num_kv_heads == 0, cfg.name
+    if cfg.enc_layers:
+        assert len(cfg.enc_blocks) == cfg.enc_layers
+    if any(b.ffn == FFN_MOE for b in cfg.blocks):
+        assert cfg.moe is not None
+    if any(b.mixer == MAMBA2 for b in cfg.blocks):
+        assert cfg.ssm is not None
+    if any(b.mixer == RWKV6 for b in cfg.blocks):
+        assert cfg.rwkv is not None
+    return cfg
+
+
+def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,
+            heads: int = 4, kv_heads: Optional[int] = None, d_ff: int = 128,
+            vocab: int = 256, experts: int = 4, frontend_len: int = 8) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    kv = kv_heads or max(1, heads // max(1, cfg.num_heads // cfg.num_kv_heads))
+    # rebuild the block pattern at the reduced depth, preserving structure
+    if cfg.blocks:
+        stride = max(1, cfg.num_layers // layers)
+        blocks = tuple(cfg.blocks[min(i * stride, cfg.num_layers - 1)]
+                       for i in range(layers))
+        # shrink windows so masks stay meaningful at tiny seq lens
+        blocks = tuple(
+            dataclasses.replace(b, window=(16 if b.window else None))
+            for b in blocks
+        )
+        # zamba2 reduced: keep at least one shared block
+        if cfg.family == "hybrid" and not any(b.mixer == SHARED_ATTN for b in blocks):
+            blocks = blocks[:-1] + (BlockSpec(mixer=SHARED_ATTN, ffn=FFN_DENSE,
+                                              window=16, shared_group=0),)
+    else:
+        blocks = uniform_blocks(layers)
+    moe = None
+    if cfg.moe is not None:
+        top_k = min(cfg.moe.top_k, experts)
+        # dropless at smoke scale so decode == teacher-forcing exactly
+        moe = dataclasses.replace(cfg.moe, num_experts=experts, top_k=top_k,
+                                  capacity_factor=experts / top_k + 0.01)
+    ssm = None
+    if cfg.ssm is not None:
+        ssm = dataclasses.replace(cfg.ssm, state_dim=16, head_dim=16, chunk=8)
+    rwkv = None
+    if cfg.rwkv is not None:
+        rwkv = dataclasses.replace(cfg.rwkv, head_dim=16, decay_lora=8,
+                                   mix_lora=8, chunk=8)
+    enc_blocks = ()
+    enc_layers = 0
+    if cfg.enc_layers:
+        enc_layers = layers
+        enc_blocks = uniform_blocks(layers)
+    return validate(dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=layers, d_model=d_model, num_heads=heads,
+        num_kv_heads=kv, d_ff=d_ff, vocab_size=vocab, head_dim=None,
+        blocks=blocks, enc_layers=enc_layers, enc_blocks=enc_blocks,
+        moe=moe, ssm=ssm, rwkv=rwkv,
+        frontend_len=(frontend_len if cfg.frontend else 0),
+        num_shared_groups=(1 if cfg.family == "hybrid" else 0),
+    ))

@@ -1,0 +1,8 @@
+from repro.core import autotune, cost_model, graph, scheduler, tuner
+from repro.core.graph import OpGraph, build_graph
+from repro.core.tuner import (Plan, guideline_plan, intel_setting,
+                              make_rules, tf_setting)
+
+__all__ = ["autotune", "cost_model", "graph", "scheduler", "tuner",
+           "OpGraph", "build_graph", "Plan", "guideline_plan",
+           "intel_setting", "make_rules", "tf_setting"]

@@ -1,0 +1,77 @@
+"""Exhaustive plan sweep = the paper's "global optimum" baseline (Fig. 18).
+
+The paper sweeps 96^3 thread-count triples; the mesh analogue sweeps every
+(pools, intra, fsdp, seq_shard, pod_mode) factorization and ranks by the
+analytic three-term cost model (validated against compiled HLO in
+EXPERIMENTS.md §Roofline).  ``sweep`` returns every feasible plan with its
+cost so benchmarks can report guideline-vs-optimum gaps, like Fig. 18.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import cost_model, tuner
+
+
+@dataclasses.dataclass
+class RankedPlan:
+    plan: tuner.Plan
+    cost: cost_model.CostBreakdown
+    fits: bool
+
+    @property
+    def step_s(self) -> float:
+        return self.cost.step_s
+
+
+def evaluate(cfg: ModelConfig, shape: ShapeConfig, plan: tuner.Plan,
+             hw: cost_model.Hardware = cost_model.V5E) -> RankedPlan:
+    cost = cost_model.estimate(
+        cfg, shape, data=plan.data, pools=plan.pools, intra=plan.intra,
+        fsdp=plan.fsdp, hw=hw, pod_axis_dp=(plan.pod_mode == "dp"),
+        pods=plan.pods, seq_shard=plan.seq_shard)
+    fits = cost_model.fits_memory(cfg, shape, data=plan.data,
+                                  pools=plan.pools, intra=plan.intra,
+                                  fsdp=plan.fsdp, hw=hw)
+    return RankedPlan(plan, cost, fits)
+
+
+def sweep(cfg: ModelConfig, shape: ShapeConfig, *, model_axis: int = 16,
+          data_axis: int = 16, pods: int = 1,
+          hw: cost_model.Hardware = cost_model.V5E,
+          seq_shard: Optional[bool] = None) -> List[RankedPlan]:
+    plans = tuner.enumerate_plans(cfg, shape, model_axis=model_axis,
+                                  data_axis=data_axis, pods=pods)
+    if seq_shard is not None:
+        plans = [p for p in plans if p.seq_shard == seq_shard]
+    ranked = [evaluate(cfg, shape, p, hw) for p in plans]
+    ranked.sort(key=lambda r: (not r.fits, r.step_s))
+    return ranked
+
+
+def global_optimum(cfg: ModelConfig, shape: ShapeConfig, **kw
+                   ) -> Optional[RankedPlan]:
+    ranked = sweep(cfg, shape, **kw)
+    feasible = [r for r in ranked if r.fits]
+    return feasible[0] if feasible else (ranked[0] if ranked else None)
+
+
+def compare_settings(cfg: ModelConfig, shape: ShapeConfig, *,
+                     model_axis: int = 16, data_axis: int = 16,
+                     pods: int = 1,
+                     hw: cost_model.Hardware = cost_model.V5E):
+    """Fig. 18 row: guideline vs TF vs Intel vs swept optimum."""
+    kw = dict(model_axis=model_axis, data_axis=data_axis, pods=pods)
+    rows = {
+        "guideline": evaluate(cfg, shape, tuner.guideline_plan(cfg, shape, **kw), hw),
+        "tf_setting": evaluate(cfg, shape, tuner.tf_setting(cfg, shape, **kw), hw),
+        "intel_setting": evaluate(cfg, shape, tuner.intel_setting(cfg, shape, **kw), hw),
+        # SP held fixed at the guideline's choice; it is studied as its own
+        # knob in EXPERIMENTS.md §Perf (CPU-backend GSPMD artifact)
+        "global_optimum": global_optimum(cfg, shape, hw=hw,
+                                         seq_shard=False, **kw),
+    }
+    return rows

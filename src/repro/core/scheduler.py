@@ -1,0 +1,95 @@
+"""Synchronous vs asynchronous operator scheduling on an SPMD mesh
+(paper §4, Fig. 3).
+
+On a CPU framework the scheduler picks which *thread pool* runs each ready
+operator.  Under SPMD there is no runtime scheduler to tune — the schedule
+is determined by how independent heavy ops are *sharded*:
+
+  * synchronous  = every heavy op sharded over the whole model axis, ops
+    strictly sequential (one op at a time on all "cores");
+  * asynchronous = independent ops assigned to disjoint device groups along
+    a ``pool`` axis via ``shard_map``, executing simultaneously.
+
+``run_sync`` / ``run_async`` express both schedules for a generic set of
+branches (stacked params + one function), so tests can assert numerical
+equivalence and benchmarks can compare lowered HLO cost.  The MoE layer has
+dedicated variants in ``repro.models.moe``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def run_sync(branch_fn: Callable, stacked_params, x: jax.Array) -> jax.Array:
+    """Sequential (synchronous) schedule: sum_i f(params_i, x).
+
+    Lowered as a static python loop: one heavy op at a time, each free to
+    use every device (the paper's one-big-pool baseline)."""
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    out = None
+    for i in range(n):
+        pi = jax.tree.map(lambda a: a[i], stacked_params)
+        y = branch_fn(pi, x)
+        out = y if out is None else out + y
+    return out
+
+
+def run_async(branch_fn: Callable, stacked_params, x: jax.Array, *,
+              mesh: Mesh, pool_axis: str = "pool") -> jax.Array:
+    """Asynchronous schedule: branch i runs on device group i of the
+    ``pool_axis``; results are summed with a psum.
+
+    Requires the leading (branch) dim of ``stacked_params`` to equal the
+    pool-axis size."""
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    assert n == mesh.shape[pool_axis], (n, dict(mesh.shape))
+    other = tuple(a for a in mesh.axis_names if a != pool_axis)
+
+    pspec = P(pool_axis)
+    xspec = P()
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: pspec, stacked_params), xspec),
+        out_specs=xspec, check_vma=False)
+    def _run(params_loc, x_loc):
+        pi = jax.tree.map(lambda a: a[0], params_loc)   # this pool's branch
+        y = branch_fn(pi, x_loc)
+        return jax.lax.psum(y, pool_axis)
+
+    return _run(stacked_params, x)
+
+
+def hybrid_pools(branch_fn: Callable, stacked_params, x: jax.Array, *,
+                 mesh: Mesh, pool_axis: str = "pool",
+                 inner: Optional[Callable] = None) -> jax.Array:
+    """Paper Fig. 6's middle ground: p pools, each pool tensor-sharding its
+    branch over the remaining (intra) axes.  ``branch_fn`` may contain
+    logical-axis annotations; inside the shard_map the intra axes are still
+    visible to GSPMD through nested sharding constraints."""
+    groups = jax.tree.leaves(stacked_params)[0].shape[0]
+    p = mesh.shape[pool_axis]
+    assert groups % p == 0
+    per = groups // p
+    pspec = P(pool_axis)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: pspec, stacked_params), P()),
+        out_specs=P(), check_vma=False)
+    def _run(params_loc, x_loc):
+        out = None
+        for i in range(per):  # this pool's share of branches, sequentially
+            pi = jax.tree.map(lambda a: a[i], params_loc)
+            y = branch_fn(pi, x_loc)
+            out = y if out is None else out + y
+        return jax.lax.psum(out, pool_axis)
+
+    return _run(stacked_params, x)

@@ -1,0 +1,118 @@
+"""Deterministic synthetic token pipeline with host sharding + prefetch.
+
+Determinism is a fault-tolerance feature: batch(step) is a pure function of
+(seed, step), so a restarted or rescheduled worker replays the exact stream
+(DESIGN.md S7).  The generator is a counter-based hash (splitmix64-style),
+so random access by step costs O(1) — no state to checkpoint beyond the
+step counter itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+    z = x
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Markov-ish synthetic LM data: learnable (next token depends on the
+    current one) so smoke training shows a falling loss."""
+
+    cfg: ModelConfig
+    batch: int
+    seq_len: int
+    seed: int = 0
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        b, s, v = self.batch, self.seq_len, self.cfg.vocab_size
+        idx = (np.uint64(self.seed) * np.uint64(0x1000003)
+               + np.uint64(step) * np.uint64(b * (s + 1) + 7)
+               + np.arange(b * (s + 1), dtype=np.uint64))
+        noise = _splitmix64(idx).reshape(b, s + 1)
+        stream = np.empty((b, s + 1), np.int64)
+        stream[:, 0] = noise[:, 0] % v
+        # next = f(current) with occasional resets: compressible structure
+        for t in range(1, s + 1):
+            det = (stream[:, t - 1] * 31 + 17) % v
+            rnd = noise[:, t] % v
+            take_rnd = (noise[:, t] >> np.uint64(32)) % np.uint64(4) == 0
+            stream[:, t] = np.where(take_rnd, rnd, det)
+        out = {"tokens": stream[:, :-1].astype(np.int32),
+               "labels": stream[:, 1:].astype(np.int32)}
+        if self.cfg.frontend:
+            fl = self.cfg.frontend_len
+            f = _splitmix64(np.uint64(self.seed * 7 + 3)
+                            + np.uint64(step) * np.uint64(b * fl)
+                            + np.arange(b * fl, dtype=np.uint64))
+            frames = (f.astype(np.float64) / 2**64 - 0.5).astype(np.float32)
+            frames = np.broadcast_to(frames.reshape(b, fl, 1),
+                                     (b, fl, self.cfg.d_model)) * 0.2
+            key = "frames" if self.cfg.family == "audio" else "frontend"
+            out[key] = np.ascontiguousarray(frames, np.float32)
+        return out
+
+
+class DevicePrefetcher:
+    """Double-buffered host->device prefetch on a background thread."""
+
+    def __init__(self, source: SyntheticLM, shardings: Optional[Dict] = None,
+                 depth: int = 2, start_step: int = 0):
+        self.source = source
+        self.shardings = shardings or {}
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _put_device(self, batch: Dict[str, np.ndarray]) -> Dict[str, Any]:
+        out = {}
+        for k_, v_ in batch.items():
+            s = self.shardings.get(k_)
+            out[k_] = jax.device_put(v_, s) if s is not None \
+                else jax.device_put(v_)
+        return out
+
+    def _worker(self):
+        while not self._stop.is_set():
+            try:
+                batch = self.source.batch_at(self._step)
+                self._q.put((self._step, self._put_device(batch)), timeout=10)
+                self._step += 1
+            except queue.Full:
+                continue
+            except Exception as e:  # surface errors to the consumer
+                self._q.put(e)
+                return
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

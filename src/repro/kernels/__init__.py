@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper; interpret mode off-TPU), ref.py (pure-jnp oracle).
+"""
+
+from repro.kernels import (flash_attention, fused_matmul, mamba2_scan,
+                           moe_gmm, rwkv6_wkv)
+
+__all__ = ["flash_attention", "fused_matmul", "mamba2_scan", "moe_gmm",
+           "rwkv6_wkv"]

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+__all__ = ["flash_attention", "attention", "flash_attention_ref"]

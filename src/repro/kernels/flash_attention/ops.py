@@ -1,0 +1,38 @@
+"""jit'd flash attention op: Pallas on TPU, interpret elsewhere; ref-based
+backward via custom_vjp (standard for serving; training uses the XLA path)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def attention(q, k, v, causal=True, window=None, softcap=None):
+    return _kernel(q, k, v, causal=causal, window=window, softcap=softcap,
+                   interpret=not _on_tpu())
+
+
+def _fwd(q, k, v, causal, window, softcap):
+    return attention(q, k, v, causal, window, softcap), (q, k, v)
+
+
+def _bwd(causal, window, softcap, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window, softcap=softcap),
+        q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,5 @@
+from repro.kernels.fused_matmul.kernel import fused_matmul
+from repro.kernels.fused_matmul.ops import matmul
+from repro.kernels.fused_matmul.ref import fused_matmul_ref, matmul1, prep
+
+__all__ = ["fused_matmul", "matmul", "fused_matmul_ref", "matmul1", "prep"]

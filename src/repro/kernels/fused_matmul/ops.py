@@ -1,0 +1,47 @@
+"""jit'd public op for fused_matmul with autodiff + CPU interpret fallback."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_matmul import ref as _ref
+from repro.kernels.fused_matmul.kernel import fused_matmul as _kernel_call
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def matmul(x, w, x_scale=None, block_m=256, block_n=256, block_k=512):
+    """Fused-prep matmul; Pallas on TPU, interpret-mode kernel elsewhere."""
+    return _kernel_call(x, w, x_scale, block_m=block_m, block_n=block_n,
+                        block_k=block_k, interpret=not _on_tpu())
+
+
+def _fwd(x, w, x_scale, block_m, block_n, block_k):
+    out = matmul(x, w, x_scale, block_m, block_n, block_k)
+    return out, (x, w, x_scale)
+
+
+def _bwd(block_m, block_n, block_k, res, g):
+    x, w, x_scale = res
+    xf = _ref.prep(x, x_scale)
+    gf = g.astype(jnp.float32)
+    dx_f = gf @ w.astype(jnp.float32).T            # [M, K] in prepared space
+    dw = (xf.T @ gf).astype(w.dtype)
+    if x_scale is not None:
+        dx = (dx_f * x_scale.astype(jnp.float32)).astype(x.dtype)
+        dscale = jnp.sum(dx_f * x.astype(jnp.float32), axis=1,
+                         keepdims=True).astype(x_scale.dtype)
+    else:
+        dx = dx_f.astype(x.dtype)
+        dscale = None
+    return dx, dw, dscale
+
+
+matmul.defvjp(_fwd, _bwd)

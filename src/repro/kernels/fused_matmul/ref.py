@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for fused_matmul — and the paper's ``MatMul1`` baseline.
+
+``matmul1`` materializes the prepared (upcast + scaled) x before the dot —
+the separate data-preparation step whose overhead §5.1 measures.  The
+numerics are identical to the kernel; only the fusion structure differs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def prep(x: jax.Array, x_scale: Optional[jax.Array] = None) -> jax.Array:
+    """The 'data preparation': upcast + per-row dequant scale."""
+    xf = x.astype(jnp.float32)
+    if x_scale is not None:
+        xf = xf * x_scale.astype(jnp.float32)
+    return xf
+
+
+def matmul1(x: jax.Array, w: jax.Array,
+            x_scale: Optional[jax.Array] = None,
+            out_dtype=None) -> jax.Array:
+    """Separate prep (one HBM round-trip), then the library dot."""
+    out_dtype = out_dtype or w.dtype
+    xf = prep(x, x_scale)
+    return jax.lax.dot_general(
+        xf, w.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+fused_matmul_ref = matmul1  # the oracle: same math, unfused structure

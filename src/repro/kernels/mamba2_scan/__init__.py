@@ -1,0 +1,5 @@
+from repro.kernels.mamba2_scan.kernel import mamba2_scan
+from repro.kernels.mamba2_scan.ops import scan, scan_model_layout
+from repro.kernels.mamba2_scan.ref import mamba2_scan_ref
+
+__all__ = ["mamba2_scan", "scan", "scan_model_layout", "mamba2_scan_ref"]

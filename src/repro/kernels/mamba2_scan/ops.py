@@ -1,0 +1,35 @@
+"""jit'd mamba2 scan op with model-layout adapters."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_scan.kernel import mamba2_scan as _kernel
+from repro.kernels.mamba2_scan.ref import mamba2_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def scan(x, dt, b, c, a, *, chunk: int = 256):
+    """Kernel on TPU, interpret-mode kernel elsewhere."""
+    return _kernel(x, dt, b, c, a, chunk=chunk, interpret=not _on_tpu())
+
+
+def scan_model_layout(xh, dt, b_in, c_in, a_log, *, chunk: int = 256):
+    """Adapter for the model's [B,S,H,P] layout (b/c shared across heads).
+
+    Returns (y [B,S,H,P], h_final [B,H,N,P])."""
+    bsz, s, h, p = xh.shape
+    n = b_in.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))                   # [H]
+    x2 = jnp.swapaxes(xh, 1, 2).reshape(bsz * h, s, p)
+    dt2 = jnp.swapaxes(dt, 1, 2).reshape(bsz * h, s)
+    bb = jnp.broadcast_to(b_in[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    cc = jnp.broadcast_to(c_in[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    aa = jnp.broadcast_to(a[None], (bsz, h)).reshape(bsz * h)
+    y, hf = scan(x2, dt2, bb, cc, aa, chunk=chunk)
+    y = jnp.swapaxes(y.reshape(bsz, h, s, p), 1, 2)
+    return y, hf.reshape(bsz, h, n, p)

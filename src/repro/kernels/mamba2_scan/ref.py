@@ -1,0 +1,36 @@
+"""Oracle: naive per-step SSD recurrence (lax.scan over time).
+
+    h_t = exp(dt_t * a) h_{t-1} + dt_t * b_t (x) x_t
+    y_t = c_t . h_t
+
+This is the ground truth for BOTH the Pallas kernel and the chunked XLA
+implementation in ``repro.models.mamba2``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba2_scan_ref(x, dt, b, c, a, h0=None):
+    """x [BH,S,P], dt [BH,S], b/c [BH,S,N], a [BH] ->
+    (y [BH,S,P], h_final [BH,N,P])."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((bh, n, p), f32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                    # [BH,P],[BH],[BH,N],[BH,N]
+        decay = jnp.exp(dtt * a)                 # [BH]
+        upd = jnp.einsum("bn,b,bp->bnp", bt, dtt, xt)
+        h = h * decay[:, None, None] + upd
+        y = jnp.einsum("bn,bnp->bp", ct, h)
+        return h, y
+
+    xs = (jnp.swapaxes(x.astype(f32), 0, 1), jnp.swapaxes(dt.astype(f32), 0, 1),
+          jnp.swapaxes(b.astype(f32), 0, 1), jnp.swapaxes(c.astype(f32), 0, 1))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1).astype(x.dtype), h_final

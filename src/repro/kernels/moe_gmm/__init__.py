@@ -1,0 +1,5 @@
+from repro.kernels.moe_gmm.kernel import moe_gmm
+from repro.kernels.moe_gmm.ops import gmm
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+
+__all__ = ["moe_gmm", "gmm", "moe_gmm_ref"]

@@ -1,0 +1,18 @@
+"""jit'd grouped-matmul op."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.moe_gmm.kernel import moe_gmm as _kernel
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gmm(x, w, row_counts: Optional[jax.Array] = None, **blocks):
+    return _kernel(x, w, row_counts, interpret=not _on_tpu(), **blocks)

@@ -1,0 +1,19 @@
+"""Oracle: batched per-expert einsum (rows beyond row_counts are zeroed)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(x: jax.Array, w: jax.Array,
+                row_counts: Optional[jax.Array] = None) -> jax.Array:
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32)).astype(x.dtype)
+    if row_counts is not None:
+        c = x.shape[1]
+        valid = jnp.arange(c)[None, :] < row_counts[:, None]
+        out = out * valid[..., None].astype(out.dtype)
+    return out

@@ -1,0 +1,5 @@
+from repro.kernels.rwkv6_wkv.kernel import rwkv6_wkv
+from repro.kernels.rwkv6_wkv.ops import wkv, wkv_model_layout
+from repro.kernels.rwkv6_wkv.ref import rwkv6_wkv_ref
+
+__all__ = ["rwkv6_wkv", "wkv", "wkv_model_layout", "rwkv6_wkv_ref"]

@@ -1,0 +1,30 @@
+"""jit'd rwkv6 wkv op with model-layout adapter."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_wkv.kernel import rwkv6_wkv as _kernel
+from repro.kernels.rwkv6_wkv.ref import rwkv6_wkv_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def wkv(r, k, v, lw, u, *, chunk: int = 16):
+    return _kernel(r, k, v, lw, u, chunk=chunk, interpret=not _on_tpu())
+
+
+def wkv_model_layout(rh, kh, vh, lwh, uh, *, chunk: int = 16):
+    """Adapter for the model's [B,S,H,K] layout; uh [H,K].
+
+    Returns (y [B,S,H,K], S_final [B,H,K,K])."""
+    b, s, h, kk = rh.shape
+    def flat(z):
+        return jnp.swapaxes(z, 1, 2).reshape(b * h, s, kk)
+    u2 = jnp.broadcast_to(uh[None], (b, h, kk)).reshape(b * h, kk)
+    y, hf = wkv(flat(rh), flat(kh), flat(vh), flat(lwh), u2, chunk=chunk)
+    y = jnp.swapaxes(y.reshape(b, h, s, kk), 1, 2)
+    return y, hf.reshape(b, h, kk, kk)

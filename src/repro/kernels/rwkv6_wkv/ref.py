@@ -1,0 +1,30 @@
+"""Oracle: naive per-step wkv6 recurrence.
+
+    y_t = r_t . (S_{t-1} + (u * k_t) (x) v_t)
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_wkv_ref(r, k, v, lw, u, h0=None):
+    """r,k,v,lw [BH,S,K]; u [BH,K] -> (y [BH,S,K], S_final [BH,K,K])."""
+    bh, s, kk = r.shape
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((bh, kk, kk), f32)
+
+    def step(hst, inp):
+        rt, kt, vt, lwt = (z.astype(f32) for z in inp)     # each [BH,K]
+        kv = jnp.einsum("bk,bv->bkv", kt, vt)
+        y = jnp.einsum("bk,bkv->bv", rt,
+                       hst + u.astype(f32)[:, :, None] * kv)
+        hst = jnp.exp(lwt)[:, :, None] * hst + kv
+        return hst, y
+
+    xs = tuple(jnp.swapaxes(z, 0, 1) for z in (r, k, v, lw))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1).astype(r.dtype), h_final

@@ -1,0 +1,215 @@
+"""Launcher glue: (arch, shape, setting, mesh) -> jit-able step functions +
+abstract (zero-allocation) inputs for the dry-run, or real initialized state
+for the examples/trainer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import tuner
+from repro.launch import mesh as meshlib
+from repro.models import (cache_structure, forward_decode, forward_prefill,
+                          forward_train, model_defs)
+from repro.models import module as m
+from repro.optim import adamw, schedule
+from repro.parallel import sharding as sh
+
+PARAM_DTYPE = jnp.bfloat16
+SETTINGS = {
+    "guideline": tuner.guideline_plan,
+    "tf": tuner.tf_setting,
+    "intel": tuner.intel_setting,
+}
+
+
+@dataclasses.dataclass
+class Built:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    plan: tuner.Plan
+    mesh: Any
+    rules: sh.Rules
+    step_fn: Callable              # jit-able (state/batch signatures below)
+    abstract_args: Tuple           # ShapeDtypeStructs for .lower()
+    opt_cfg: Optional[adamw.AdamWConfig] = None
+    notes: str = ""
+
+    def lower(self):
+        with self.mesh:
+            with sh.axis_rules(self.rules):
+                return jax.jit(self.step_fn, donate_argnums=(0,)).lower(
+                    *self.abstract_args)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _tok_spec(rules: sh.Rules, b: int, s: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(
+        (b, s), jnp.int32,
+        sharding=rules.sharding_for((sh.BATCH, None), (b, s)))
+
+
+def _embed_spec(rules: sh.Rules, b: int, f: int, d: int):
+    return jax.ShapeDtypeStruct(
+        (b, f, d), PARAM_DTYPE,
+        sharding=rules.sharding_for((sh.BATCH, None, None), (b, f, d)))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: sh.Rules) -> Dict:
+    b = shape.global_batch
+    s = shape.seq_len
+    out: Dict[str, Any] = {"tokens": _tok_spec(rules, b, s)}
+    if shape.kind == "train":
+        out["labels"] = _tok_spec(rules, b, s)
+    if cfg.family == "audio":
+        out["frames"] = _embed_spec(rules, b, cfg.frontend_len, cfg.d_model)
+    elif cfg.frontend:
+        out["frontend"] = _embed_spec(rules, b, cfg.frontend_len, cfg.d_model)
+    return out
+
+
+def abstract_tree(struct: Any, rules: sh.Rules, dtype=PARAM_DTYPE):
+    """cache_structure-style nested {name: (shape, axes)} -> SDS tree."""
+    def is_leaf(x):
+        return (isinstance(x, tuple) and len(x) == 2
+                and isinstance(x[0], tuple))
+
+    def mk(leaf):
+        shp, axes = leaf
+        dt = jnp.int32 if axes and axes == (sh.BATCH,) and len(shp) == 1 else dtype
+        return jax.ShapeDtypeStruct(
+            shp, dt, sharding=rules.sharding_for(axes, shp))
+
+    return jax.tree.map(mk, struct, is_leaf=is_leaf)
+
+
+def abstract_model_params(cfg: ModelConfig, rules: sh.Rules):
+    defs = model_defs(cfg)
+    axes = m.axes_tree(defs)
+    shapes = m.shapes_tree(defs)
+    shardings = sh.param_shardings(axes, shapes, rules)
+    return m.abstract_params(defs, PARAM_DTYPE, shardings), defs
+
+
+def zero1_sharding_fn(cfg: ModelConfig, rules: sh.Rules, defs):
+    """Optimizer-state shardings: param rules with the d_model/param axes
+    forced onto the data axis (ZeRO-1)."""
+    table = dict(rules.table)
+    dp = table.get(sh.BATCH)
+    table[m.EMBED] = dp  # always shard states over data
+    zrules = sh.Rules(table=table, mesh=rules.mesh)
+    axes = m.axes_tree(defs)
+    shapes = m.shapes_tree(defs)
+    flat_axes = jax.tree.leaves(
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    flat_shapes = jax.tree.leaves(
+        shapes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, int) for e in x))
+    by_shape = {}
+    for ax, shp in zip(flat_axes, flat_shapes):
+        by_shape.setdefault(shp, ax)
+
+    def fn(p):
+        ax = by_shape.get(tuple(p.shape))
+        if ax is None:
+            return None
+        return zrules.sharding_for(ax, p.shape)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def build(arch: str, shape_name: str, *, setting: str = "guideline",
+          multi_pod: bool = False, factored: bool = False,
+          remat: bool = False, quantize_v: Optional[bool] = None,
+          q_chunk: Optional[int] = None, plan: Optional[tuner.Plan] = None,
+          ) -> Built:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    pods = 2 if multi_pod else 1
+    if plan is None:
+        plan = SETTINGS[setting](cfg, shape, pods=pods)
+    mesh = meshlib.mesh_for_plan(plan, multi_pod=multi_pod, factored=factored)
+    rules = tuner.make_rules(plan, mesh)
+    if q_chunk is None:
+        q_chunk = 2048 if shape.kind == "train" else 4096
+
+    if shape.kind == "train":
+        return _build_train(cfg, shape, plan, mesh, rules, remat=remat,
+                            quantize_v=quantize_v, q_chunk=q_chunk)
+    if shape.kind == "prefill":
+        return _build_prefill(cfg, shape, plan, mesh, rules, q_chunk=q_chunk)
+    return _build_decode(cfg, shape, plan, mesh, rules)
+
+
+def _build_train(cfg, shape, plan, mesh, rules, *, remat, quantize_v,
+                 q_chunk) -> Built:
+    params, defs = abstract_model_params(cfg, rules)
+    nparams = m.param_count(defs)
+    if quantize_v is None:
+        quantize_v = nparams > 50e9  # big models need the int8 second moment
+    ocfg = adamw.AdamWConfig(quantize_v=quantize_v)
+    zfn = zero1_sharding_fn(cfg, rules, defs)
+    opt = adamw.abstract_state(params, ocfg, m_sharding_fn=zfn)
+    state = {"params": params, "opt": opt,
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    batch = batch_specs(cfg, shape, rules)
+
+    def train_step(st, bt):
+        def loss_fn(p):
+            loss, metrics = forward_train(p, cfg, bt, q_chunk=q_chunk,
+                                          remat=remat)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(st["params"])
+        lr = schedule.linear_warmup_cosine(st["step"], peak_lr=ocfg.lr)
+        new_p, new_opt, om = adamw.update(grads, st["opt"], st["params"],
+                                          ocfg, lr)
+        new_state = {"params": new_p, "opt": new_opt, "step": st["step"] + 1}
+        return new_state, {**metrics, **om, "lr": lr}
+
+    return Built(cfg, shape, plan, mesh, rules, train_step, (state, batch),
+                 opt_cfg=ocfg, notes=plan.notes)
+
+
+def _build_prefill(cfg, shape, plan, mesh, rules, *, q_chunk) -> Built:
+    params, _ = abstract_model_params(cfg, rules)
+    batch = batch_specs(cfg, shape, rules)
+
+    def prefill_step(params_, bt):
+        return forward_prefill(params_, cfg, bt, q_chunk=q_chunk)
+
+    return Built(cfg, shape, plan, mesh, rules, prefill_step, (params, batch),
+                 notes=plan.notes)
+
+
+def _build_decode(cfg, shape, plan, mesh, rules) -> Built:
+    params, _ = abstract_model_params(cfg, rules)
+    b = shape.global_batch
+    struct = cache_structure(cfg, b, shape.seq_len)
+    cache = abstract_tree(struct, rules)
+    cache["len"] = jax.ShapeDtypeStruct(
+        (b,), jnp.int32, sharding=rules.sharding_for((sh.BATCH,), (b,)))
+    tokens = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32,
+        sharding=rules.sharding_for((sh.BATCH, None), (b, 1)))
+
+    def decode_step(cache_, params_, tokens_):
+        logits, new_cache = forward_decode(params_, cfg, tokens_, cache_)
+        return new_cache, logits
+
+    return Built(cfg, shape, plan, mesh, rules, decode_step,
+                 (cache, params, tokens), notes=plan.notes)

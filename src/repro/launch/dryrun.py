@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every live
+(architecture x input-shape) cell on the 16x16 single-pod mesh and the
+2x16x16 multi-pod mesh, print memory/cost analysis, and dump the roofline
+inputs to results/dryrun/.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \
+        --shape train_4k --multi-pod --setting guideline
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis import hlo, roofline
+from repro.configs import get_config, get_shape, live_cells
+from repro.launch import build as buildlib
+from repro.launch import mesh as meshlib
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             setting: str = "guideline", factored: bool = False,
+             plan=None, tag: str = "", save: bool = True,
+             verbose: bool = True) -> dict:
+    t0 = time.time()
+    built = buildlib.build(arch, shape_name, setting=setting,
+                           multi_pod=multi_pod, factored=factored, plan=plan)
+    mesh_name = ("multi" if multi_pod else "single") + \
+        ("-factored" if factored and built.plan.pools > 1 else "")
+    chips = 512 if multi_pod else 256
+
+    lowered = built.lower()
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    text = compiled.as_text()
+    roof = roofline.analyze(
+        built.cfg, built.shape, arch=arch, mesh_name=mesh_name,
+        setting=setting if plan is None else plan.name, chips=chips,
+        cost={k: cost.get(k, 0.0) for k in ("flops", "bytes accessed",
+                                            "transcendentals")},
+        hlo_text=text, memory_stats=roofline.memory_stats_dict(ma),
+        note=built.notes)
+    row = roof.row()
+    row.update({
+        "plan": {"pools": built.plan.pools, "intra": built.plan.intra,
+                 "data": built.plan.data, "fsdp": built.plan.fsdp,
+                 "seq_shard": built.plan.seq_shard,
+                 "pod_mode": built.plan.pod_mode},
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": roofline.memory_stats_dict(ma),
+        "sharding_fallbacks": sorted(set(built.rules.fallbacks)),
+        "ok": True,
+    })
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name} x {row['setting']}] "
+              f"compile={t_compile:.1f}s "
+              f"mem/dev={row['memory_per_device_bytes']/2**30:.2f}GiB "
+              f"flops/dev={row['flops_per_device']:.3e} "
+              f"wire/dev={row['wire_bytes_per_device']/2**20:.1f}MiB "
+              f"dominant={row['dominant']} frac={row['roofline_frac']:.3f}")
+        print(f"  memory_analysis: {ma}")
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}__{shape_name}__{mesh_name}__{row['setting']}{tag}.json"
+        with open(RESULTS / name, "w") as f:
+            json.dump(row, f, indent=1)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--setting", default="guideline",
+                    choices=("guideline", "tf", "intel"))
+    ap.add_argument("--factored", action="store_true",
+                    help="use the tuner's factored (data,pool,intra) mesh")
+    ap.add_argument("--all", action="store_true",
+                    help="every live cell on both meshes")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--continue-on-error", action="store_true", default=True)
+    args = ap.parse_args()
+
+    print(f"devices: {len(jax.devices())} ({jax.devices()[0].platform})")
+    cells = live_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multi_pod]
+
+    # cheap cells first so partial runs cover the most ground
+    order = {"decode_32k": 0, "long_500k": 1, "prefill_32k": 2, "train_4k": 3}
+    cells = sorted(cells, key=lambda c: order.get(c[1], 9))
+    failures = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            out = RESULTS / (f"{arch}__{shape_name}__{mesh_name}__"
+                             f"{args.setting}.json")
+            if args.skip_existing and out.exists():
+                continue
+            try:
+                run_cell(arch, shape_name, multi_pod=mp,
+                         setting=args.setting, factored=args.factored)
+            except Exception as e:  # noqa: BLE001 - report all cell failures
+                failures.append((arch, shape_name, mp, repr(e)))
+                print(f"FAIL [{arch} x {shape_name} x "
+                      f"{'multi' if mp else 'single'}]: {e}")
+                traceback.print_exc(limit=4)
+                if not args.continue_on_error:
+                    raise
+    print(f"\n{len(cells) * len(meshes) - len(failures)} ok, "
+          f"{len(failures)} failed")
+    for f in failures:
+        print("  FAILED:", f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Batched serving driver (smoke scale on CPU; production = dry-run lower).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke \
+        --requests 6 --max-new 12
+"""
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.models import model_defs
+    from repro.models import module as m
+    from repro.serve.engine import Engine, Request
+
+    cfg = reduced(get_config(args.arch))
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    eng = Engine(cfg, params, slots=args.slots, max_len=64)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        eng.submit(Request(rid=i, prompt=[1 + i, 2, 3, 4 + i % 3],
+                           max_new_tokens=args.max_new))
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: {r.out_tokens}")
+    print(f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s, {eng.steps} engine steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end training driver.
+
+Smoke/real mode (runs on this box):
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
+        --steps 50 --batch 8 --seq 64 --ckpt /tmp/ck
+
+Production mode emits the exact jit/sharding configuration for the 256- or
+512-chip mesh and verifies it compiles (the dry-run path), since this box
+has no TPU to execute it:
+    PYTHONPATH=src python -m repro.launch.train --arch dbrx-132b \
+        --shape train_4k --production --multi-pod
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--production", action="store_true")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--setting", default="guideline")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.production:
+        import os
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+        from repro.launch.dryrun import run_cell
+        run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                 setting=args.setting)
+        return
+
+    from repro.configs import get_config, reduced
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    tc = TrainerConfig(steps=args.steps, batch=args.batch, seq_len=args.seq,
+                       ckpt_dir=args.ckpt)
+    tr = Trainer(cfg, tc)
+    if args.resume and args.ckpt:
+        start = tr.maybe_restore()
+        print(f"resumed from step {start}")
+    result = tr.run()
+    for row in result["history"]:
+        print(f"step {row['step']:5d} loss {row['loss']:.4f} "
+              f"({row['step_time_s']*1e3:.0f} ms)")
+    print(f"final loss: {result['final_loss']:.4f}  "
+          f"stragglers flagged: {len(result['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,311 @@
+"""GQA attention: chunked (flash-style) train/prefill path, seq-sharded
+decode path, KV caches, sliding windows, softcaps, cross-attention.
+
+Two XLA-level implementations (the Pallas flash kernel in
+``repro.kernels.flash_attention`` is the TPU hot path; these are the
+lower-&-compile-friendly references that the dry-run uses):
+
+* ``chunked_attention`` — query-chunked online attention.  The chunk loop is
+  a *python* loop (static), so HLO FLOPs are exact and peak memory is one
+  chunk of scores, not the full S x S matrix.  Sliding windows slice the KV
+  statically per chunk.
+* ``decode_attention`` — one-token attention against a KV cache laid out
+  ``[B, Hkv, S, dh]`` with S sharded over the *model* mesh axis.  Softmax
+  and the PV contraction reduce over the sharded S dim; GSPMD turns those
+  into the flash-decode all-reduce pattern automatically.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import module as m
+from repro.models.layers import rope
+from repro.parallel import sharding as sh
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig, d_in: Optional[int] = None) -> Dict:
+    d = d_in or cfg.d_model
+    dh = cfg.resolved_head_dim
+    return {
+        "wq": m.ParamDef((d, cfg.num_heads, dh), (m.EMBED, m.HEADS, m.HEAD_DIM)),
+        "wk": m.ParamDef((d, cfg.num_kv_heads, dh), (m.EMBED, m.KV_HEADS, m.HEAD_DIM)),
+        "wv": m.ParamDef((d, cfg.num_kv_heads, dh), (m.EMBED, m.KV_HEADS, m.HEAD_DIM)),
+        "wo": m.ParamDef((cfg.num_heads, dh, d), (m.HEADS, m.HEAD_DIM, m.EMBED)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _softcap(scores: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return scores
+    return jnp.tanh(scores / cap) * cap
+
+
+def _pick_q_chunk(sq: int, q_chunk: Optional[int]) -> int:
+    if q_chunk is None:
+        q_chunk = 2048
+    q_chunk = min(q_chunk, sq)
+    while sq % q_chunk:
+        q_chunk //= 2
+    return max(q_chunk, 1)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      q_chunk: Optional[int] = None) -> jax.Array:
+    """q [B,Sq,H,dh]; k,v [B,Skv,Hkv,dh] -> [B,Sq,H,dh].
+
+    For causal self-attention we assume query i sits at absolute position i
+    with Skv == Sq (train / prefill).  ``causal=False, window=None`` is the
+    encoder / cross-attention case.
+    """
+    b, sq, h, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = sh.shard(k, sh.BATCH, None, sh.HEADS, None)
+        v = sh.shard(v, sh.BATCH, None, sh.HEADS, None)
+    scale = dh ** -0.5
+    cq = _pick_q_chunk(sq, q_chunk)
+    outs = []
+    for qs in range(0, sq, cq):  # static python loop: exact HLO flops
+        qe = qs + cq
+        qc = q[:, qs:qe]
+        if causal:
+            klo = 0 if window is None else max(0, qs - window + 1)
+            khi = min(qe, skv)
+        else:
+            klo, khi = 0, skv
+        ks, vs = k[:, klo:khi], v[:, klo:khi]
+        # bf16-out dot (f32 MXU accumulation); upcast for the softmax only so
+        # the *cotangent* of qc/ks stays bf16 (f32 cotangents would double
+        # every backward activation and collective, see EXPERIMENTS.md §Perf)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc, ks)
+        scores = scores.astype(jnp.float32) * scale
+        scores = _softcap(scores, softcap)
+        if causal:
+            qpos = jnp.arange(qs, qe)[:, None]
+            kpos = jnp.arange(klo, khi)[None, :]
+            mask = kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        outs.append(jnp.einsum("bhqk,bkhd->bqhd", p, vs))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def cp_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool, window: Optional[int] = None,
+                 softcap: Optional[float] = None) -> jax.Array:
+    """Context-parallel attention: q stays seq-sharded on the model axis
+    (explicit shard_map so XLA cannot replicate it), KV is gathered once.
+    Windowed layers dynamic-slice only ``window + s_loc`` keys, so gemma3's
+    5:1 local layers keep their flops savings under CP."""
+    import functools
+
+    from jax.sharding import PartitionSpec as P
+
+    rules = sh.current_rules()
+    mesh = rules.mesh
+    ax = rules.table[sh.SEQ]
+    b, sq, h, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scale = dh ** -0.5
+    nshards = rules.mesh_size(ax)
+    s_loc = sq // nshards
+    klen = min((window or skv) + s_loc, skv) if causal else skv
+    axname = ax if isinstance(ax, str) else ax[0]
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(None, ax, None, None), P(), P()),
+        out_specs=P(None, ax, None, None), check_vma=False)
+    def f(q_loc, k_full, v_full):
+        idx = jax.lax.axis_index(axname)
+        offset = idx * s_loc
+        if causal and klen < skv:
+            start = jnp.clip(offset + s_loc - klen, 0, skv - klen)
+            k_sl = jax.lax.dynamic_slice_in_dim(k_full, start, klen, 1)
+            v_sl = jax.lax.dynamic_slice_in_dim(v_full, start, klen, 1)
+            kpos0 = start
+        else:
+            k_sl, v_sl, kpos0 = k_full, v_full, 0
+        s_ = jnp.einsum("bqhd,bkhd->bhqk", q_loc, k_sl)
+        s_ = s_.astype(jnp.float32) * scale
+        s_ = _softcap(s_, softcap)
+        if causal:
+            qpos = offset + jnp.arange(s_loc)[:, None]
+            kpos = kpos0 + jnp.arange(k_sl.shape[1])[None, :]
+            mask = kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s_ = jnp.where(mask[None, None], s_, NEG_INF)
+        p = jax.nn.softmax(s_, axis=-1).astype(v_full.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v_sl)
+
+    return f(q, k, v)
+
+
+def decode_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                     cache_len: jax.Array, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None) -> jax.Array:
+    """q [B,1,H,dh]; cache [B,Hkv,S,dh] (S model-sharded); cache_len counts
+    valid entries *including* the current token."""
+    b, _, h, dh = q.shape
+    _, hkv, s, _ = ck.shape
+    g = h // hkv
+    q2 = q[:, 0].reshape(b, hkv, g, dh)
+    scale = dh ** -0.5
+    scores = jnp.einsum("bkgd,bksd->bkgs", q2, ck).astype(jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    pos = jnp.arange(s)
+    valid = pos[None, :] < cache_len[:, None]          # [B, S]
+    if window is not None:
+        valid &= pos[None, :] >= cache_len[:, None] - window
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)  # GSPMD all-reduces
+    out = jnp.einsum("bkgs,bksd->bkgd", p, cv)
+    return out.reshape(b, 1, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def init_cache_shape(cfg: ModelConfig, batch: int, max_len: int
+                     ) -> Tuple[Tuple[int, int, int, int], Tuple]:
+    shape = (batch, cfg.num_kv_heads, max_len, cfg.resolved_head_dim)
+    axes = (sh.BATCH, None, sh.KV_SEQ, None)
+    return shape, axes
+
+
+def apply(params: Dict, x: jax.Array, *, cfg: ModelConfig,
+          window: Optional[int], positions: jax.Array,
+          mode: str, cache: Optional[Dict] = None,
+          cache_len: Optional[jax.Array] = None,
+          causal: bool = True,
+          q_chunk: Optional[int] = None
+          ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x [B,S,d] -> (y [B,S,d], new_cache | None).
+
+    mode: "dense" (train / encoder: no cache), "prefill" (returns cache),
+    "decode" (S==1; reads+updates cache; cache_len includes current token).
+    """
+    dt = x.dtype
+    rules = sh.current_rules()
+    cp = bool(rules and rules.context_parallel)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    kk = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    vv = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cp and mode != "decode":
+        # context parallelism: q stays seq-sharded (chunk slices align with
+        # the shards); the narrow GQA kv is gathered across the model axis
+        q = sh.shard(q, sh.BATCH, sh.SEQ, None, None)
+        kk = sh.shard(kk, sh.BATCH, None, None, None)
+        vv = sh.shard(vv, sh.BATCH, None, None, None)
+    else:
+        q = sh.shard(q, sh.BATCH, None, sh.HEADS, None)
+        if mode != "decode" and cfg.num_kv_heads < cfg.num_heads:
+            # GQA: replicate the narrow kv ONCE here; otherwise GSPMD
+            # reshards the partially-sharded kv on every repeat/constraint
+            # (4 gathers/layer measured on gemma3 — EXPERIMENTS.md §Perf)
+            kk = sh.shard(kk, sh.BATCH, None, None, None)
+            vv = sh.shard(vv, sh.BATCH, None, None, None)
+    q = rope(q, positions, cfg.rope_theta)
+    kk = rope(kk, positions, cfg.rope_theta)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and cache_len is not None
+        k_new = jnp.swapaxes(kk, 1, 2)  # [B,Hkv,1,dh]
+        v_new = jnp.swapaxes(vv, 1, 2)
+        size = cache["k"].shape[2]
+        # windowed layers keep a ring buffer of `window` slots; keys carry
+        # absolute rope positions, so slot order does not matter and ring
+        # occupancy enforces the window mask for free.
+        idx = ((cache_len - 1) % size).astype(jnp.int32)
+        ck = _update_cache(cache["k"], k_new, idx)
+        cv = _update_cache(cache["v"], v_new, idx)
+        ring = window is not None and size <= window
+        out = decode_attention(q, ck, cv, cache_len,
+                               window=None if ring else window,
+                               softcap=cfg.attn_softcap)
+        new_cache = {"k": ck, "v": cv}
+    elif cp and x.shape[1] % max(rules.mesh_size(rules.table.get(sh.SEQ)), 1) == 0 \
+            and rules.mesh_size(rules.table.get(sh.SEQ)) > 1:
+        out = cp_attention(q, kk, vv, causal=causal, window=window,
+                           softcap=cfg.attn_softcap)
+        if mode == "prefill":
+            ck = sh.shard(jnp.swapaxes(kk, 1, 2), sh.BATCH, None, sh.KV_SEQ, None)
+            cv = sh.shard(jnp.swapaxes(vv, 1, 2), sh.BATCH, None, sh.KV_SEQ, None)
+            new_cache = {"k": ck, "v": cv}
+    else:
+        out = chunked_attention(q, kk, vv, causal=causal, window=window,
+                                softcap=cfg.attn_softcap, q_chunk=q_chunk)
+        if mode == "prefill":
+            ck = sh.shard(jnp.swapaxes(kk, 1, 2), sh.BATCH, None, sh.KV_SEQ, None)
+            cv = sh.shard(jnp.swapaxes(vv, 1, 2), sh.BATCH, None, sh.KV_SEQ, None)
+            new_cache = {"k": ck, "v": cv}
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return sh.shard(y, sh.BATCH, sh.SEQ, sh.EMBED), new_cache
+
+
+def _update_cache(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """Write ``new`` [B,Hkv,1,dh] at sequence position ``idx`` [B]."""
+    # one-hot masked update keeps the S dim sharded (no gather/scatter resharding)
+    s = cache.shape[2]
+    onehot = (jnp.arange(s)[None, :] == idx[:, None])  # [B,S]
+    onehot = onehot[:, None, :, None]
+    return jnp.where(onehot, new.astype(cache.dtype), cache)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_defs(cfg: ModelConfig) -> Dict:
+    return attn_defs(cfg)
+
+
+def cross_apply(params: Dict, x: jax.Array, enc_kv: Dict, *,
+                cfg: ModelConfig) -> jax.Array:
+    """x [B,S,d]; enc_kv {"k","v": [B,Henc_kv,Senc,dh]} precomputed."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q = sh.shard(q, sh.BATCH, None, sh.HEADS, None)
+    k = jnp.swapaxes(enc_kv["k"], 1, 2)  # [B,Senc,Hkv,dh]
+    v = jnp.swapaxes(enc_kv["v"], 1, 2)
+    out = chunked_attention(q, k.astype(dt), v.astype(dt), causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return sh.shard(y, sh.BATCH, sh.SEQ, sh.EMBED)
+
+
+def encode_kv(params: Dict, enc_out: jax.Array, *, cfg: ModelConfig) -> Dict:
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dt))
+    return {"k": jnp.swapaxes(k, 1, 2), "v": jnp.swapaxes(v, 1, 2)}

@@ -1,0 +1,153 @@
+"""Basic layers: norms, rotary embeddings, token embeddings, dense MLPs."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import module as m
+from repro.parallel import sharding as sh
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(dim: int):
+    return {"scale": m.ParamDef((dim,), (m.EMBED,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def groupnorm_defs(dim: int):
+    return {"scale": m.ParamDef((dim,), (m.SSM_INNER,), init="ones"),
+            "bias": m.ParamDef((dim,), (m.SSM_INNER,), init="zeros")}
+
+
+def groupnorm(params, x, num_groups: int, eps: float = 1e-5):
+    """GroupNorm over the last dim (RWKV per-head norm)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, num_groups, d // num_groups)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, dh]; positions [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = (1.0 / theta) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def embedding_defs(cfg: ModelConfig):
+    # 1/sqrt(d) keeps tied-embedding logits O(1) at init (gemma's
+    # embed_scale multiplies sqrt(d) back in the forward pass)
+    defs = {"table": m.ParamDef((cfg.vocab_size, cfg.d_model),
+                                (m.VOCAB, m.EMBED), init="embed",
+                                scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        defs["head"] = m.ParamDef((cfg.d_model, cfg.vocab_size),
+                                  (m.EMBED, m.VOCAB), init="fan_in")
+    return defs
+
+
+def embed(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    h = jnp.take(params["table"], tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return sh.shard(h, sh.BATCH, sh.SEQ, sh.EMBED)
+
+
+def grad_fence(x):
+    """Identity whose cotangent is cast back to x.dtype.  Placed where an
+    f32-preferred consumer (LM head) would otherwise push f32 cotangents
+    into the bf16 residual stream."""
+    dtype = x.dtype
+
+    @jax.custom_vjp
+    def f(y):
+        return y
+
+    f.defvjp(lambda y: (y, None), lambda _, ct: (ct.astype(dtype),))
+    return f(x)
+
+
+def logits(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = grad_fence(h)
+    if cfg.tie_embeddings:
+        w = params["table"].T
+    else:
+        w = params["head"]
+    out = jnp.dot(h, w.astype(h.dtype),
+                  preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        out = jnp.tanh(out / c) * c
+    return sh.shard(out, sh.BATCH, sh.SEQ, sh.VOCAB)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    return {
+        "w_gate": m.ParamDef((d, cfg.d_ff), (m.EMBED, m.MLP)),
+        "w_up": m.ParamDef((d, cfg.d_ff), (m.EMBED, m.MLP)),
+        "w_down": m.ParamDef((cfg.d_ff, d), (m.MLP, m.EMBED)),
+    }
+
+
+def mlp(params, x, act: str = "silu"):
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    g = jnp.dot(x, params["w_gate"].astype(x.dtype))
+    u = jnp.dot(x, params["w_up"].astype(x.dtype))
+    g = sh.shard(g, sh.BATCH, None, sh.MLP)
+    u = sh.shard(u, sh.BATCH, None, sh.MLP)
+    h = actf(g) * u
+    out = jnp.dot(h, params["w_down"].astype(x.dtype))
+    return sh.shard(out, sh.BATCH, sh.SEQ, sh.EMBED)
+
+
+def cross_entropy(logits_: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy; logits may be vocab-sharded (GSPMD handles
+    the cross-shard max/sum reductions)."""
+    lf = logits_.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        maskf = mask.astype(jnp.float32)
+        return jnp.sum(nll * maskf) / jnp.maximum(jnp.sum(maskf), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,215 @@
+"""Mamba2 (SSD) mixer for the zamba2 backbone.
+
+Train/prefill use the chunked SSD algorithm (intra-chunk "attention-like"
+matmuls + inter-chunk state recurrence via an associative scan), which is
+both the HLO-friendly XLA path and the blueprint for the Pallas kernel in
+``repro.kernels.mamba2_scan``.  Decode is the O(1) recurrent update.
+
+State layout per layer:
+  conv:  [B, W-1, d_conv]     (last conv_width-1 inputs)
+  ssm:   [B, H, N, P]         (per-head state matrix)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import module as m
+from repro.models.layers import rmsnorm, rmsnorm_defs
+from repro.parallel import sharding as sh
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    nheads = d_inner // ssm.head_dim
+    return d_inner, nheads, ssm.state_dim, ssm.head_dim
+
+
+def mamba2_defs(cfg: ModelConfig) -> Dict:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, n, p = dims(cfg)
+    # Projections are split (z / x / BC / dt) so every output dim shards
+    # cleanly on the model axis without boundary-crossing slices.
+    return {
+        "wz": m.ParamDef((d, d_inner), (m.EMBED, m.SSM_INNER)),
+        "wx": m.ParamDef((d, d_inner), (m.EMBED, m.SSM_INNER)),
+        "wbc": m.ParamDef((d, 2 * n), (m.EMBED, None)),
+        "wdt": m.ParamDef((d, nheads), (m.EMBED, m.HEADS)),
+        "conv_w": m.ParamDef((ssm.conv_width, d_inner), (None, m.SSM_INNER),
+                             init="normal", scale=0.5),
+        "conv_b": m.ParamDef((d_inner,), (m.SSM_INNER,), init="zeros"),
+        "conv_w_bc": m.ParamDef((ssm.conv_width, 2 * n), (None, None),
+                                init="normal", scale=0.5),
+        "conv_b_bc": m.ParamDef((2 * n,), (None,), init="zeros"),
+        "a_log": m.ParamDef((nheads,), (m.HEADS,), init="custom",
+                            custom=lambda k: jnp.log(
+                                jax.random.uniform(k, (nheads,), minval=1.0,
+                                                   maxval=16.0))),
+        "dt_bias": m.ParamDef((nheads,), (m.HEADS,), init="zeros"),
+        "d_skip": m.ParamDef((nheads,), (m.HEADS,), init="ones"),
+        "norm": rmsnorm_defs(d_inner),
+        "out_proj": m.ParamDef((d_inner, d), (m.SSM_INNER, m.EMBED)),
+    }
+
+
+def _conv(w: jax.Array, b: jax.Array, x: jax.Array,
+          conv_state: Optional[jax.Array], width: int
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv, width taps, via static shifted adds.
+
+    x [B,S,C] -> (y [B,S,C], new_state [B,W-1,C])."""
+    bsz, s, c = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((bsz, width - 1, c), x.dtype)
+    full = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = b.astype(x.dtype)[None, None]
+    for i in range(width):  # static taps
+        y = y + full[:, i:i + s] * w[i].astype(x.dtype)
+    new_state = full[:, -(width - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b_in: jax.Array, c_in: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x [B,S,H,P], dt [B,S,H] (pre-softplus'd, >0), a_log [H],
+    b_in/c_in [B,S,N] (n_groups=1, shared across heads).
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    f32 = jnp.float32
+
+    a = -jnp.exp(a_log.astype(f32))                     # [H], negative
+    da = dt.astype(f32) * a                             # [B,S,H] log decays
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h).astype(f32)
+    dac = da.reshape(bsz, nc, q, h)
+    bc = b_in.reshape(bsz, nc, q, n).astype(f32)
+    cc = c_in.reshape(bsz, nc, q, n).astype(f32)
+
+    cum = jnp.cumsum(dac, axis=2)                       # [B,nc,Q,H] inclusive
+    cum_end = cum[:, :, -1]                             # [B,nc,H]
+
+    # dt folded into x up-front: one fewer elementwise pass over the big
+    # [B,nc,Q,Q,H] intra-chunk tensor (EXPERIMENTS.md §Perf, zamba2 climb)
+    xdt = xc.astype(f32) * dtc[..., None]               # [B,nc,Q,H,P]
+
+    # ---- intra-chunk: y[t] += sum_{j<=t} exp(cum_t - cum_j) * (c_t.b_j) dt_j x_j
+    lmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # [B,nc,Q,Q,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # clamp masked (i<j) entries BEFORE exp: exp(+large) would be inf and
+    # the where() cotangent would produce 0 * inf = NaN in the backward
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, lmat, -60.0)), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)           # [B,nc,Q,Q]
+    mt = scores[..., None] * decay                           # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", mt, xdt)
+
+    # ---- chunk states: S_c = sum_j exp(cum_end - cum_j) dt_j b_j x_j^T
+    kdec = jnp.exp(cum_end[:, :, None] - cum)                # [B,nc,Q,H]
+    chunk_kv = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                          bc, kdec, xdt)                     # [B,nc,H,N,P]
+
+    # ---- inter-chunk recurrence via associative scan
+    aa = jnp.exp(cum_end)                                    # [B,nc,H]
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a2 * a1, s1 * a2[..., None, None] + s2
+    a_pref, s_pref = jax.lax.associative_scan(combine, (aa, chunk_kv), axis=1)
+    # state *before* each chunk (shift right; h0 feeds chunk 0):
+    # h_before[c] = s_pref[c-1] + h0 * a_pref[c-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), f32)
+    else:
+        h0 = h0.astype(f32)
+    h_before = jnp.concatenate(
+        [h0[:, None],
+         s_pref[:, :-1] + h0[:, None] * a_pref[:, :-1][..., None, None]],
+        axis=1)
+    h_final = s_pref[:, -1] + h0 * a_pref[:, -1][..., None, None]
+
+    # ---- inter-chunk contribution: y[t] += exp(cum_t) * c_t . h_before
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", cc, h_before) * \
+        jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def apply(params, x: jax.Array, cfg: ModelConfig, *, mode: str = "dense",
+          state: Optional[Dict] = None) -> Tuple[jax.Array, Optional[Dict]]:
+    """x [B,S,d] -> (y [B,S,d], new_state | None)."""
+    ssm = cfg.ssm
+    d_inner, nheads, n, p = dims(cfg)
+    dt_ = x.dtype
+    z = jnp.dot(x, params["wz"].astype(dt_))
+    z = sh.shard(z, sh.BATCH, None, sh.MLP)
+    xs_raw = jnp.dot(x, params["wx"].astype(dt_))
+    xs_raw = sh.shard(xs_raw, sh.BATCH, None, sh.MLP)
+    bc_raw = jnp.dot(x, params["wbc"].astype(dt_))
+    dt_raw = jnp.dot(x, params["wdt"].astype(dt_))
+
+    cs = state["conv"] if state is not None else None
+    cs_x = cs[..., :d_inner] if cs is not None else None
+    cs_bc = cs[..., d_inner:] if cs is not None else None
+    xs, new_conv_x = _conv(params["conv_w"], params["conv_b"], xs_raw,
+                           cs_x, ssm.conv_width)
+    bc, new_conv_bc = _conv(params["conv_w_bc"], params["conv_b_bc"], bc_raw,
+                            cs_bc, ssm.conv_width)
+    new_conv = jnp.concatenate([new_conv_x, new_conv_bc], axis=-1)
+    b_in = bc[..., :n]
+    c_in = bc[..., n:]
+
+    bsz, s, _ = x.shape
+    xh = xs.reshape(bsz, s, nheads, p)
+    xh = sh.shard(xh, sh.BATCH, None, sh.HEADS, None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+
+    new_state = None
+    if mode == "decode":
+        assert state is not None
+        h_prev = state["ssm"]                               # [B,H,N,P]
+        f32 = jnp.float32
+        a = -jnp.exp(params["a_log"].astype(f32))
+        da = jnp.exp(dt[:, 0] * a)                          # [B,H]
+        bx = jnp.einsum("bn,bh,bhp->bhnp", b_in[:, 0].astype(f32),
+                        dt[:, 0], xh[:, 0].astype(f32))
+        h_new = h_prev.astype(f32) * da[..., None, None] + bx
+        y = jnp.einsum("bn,bhnp->bhp", c_in[:, 0].astype(f32), h_new)
+        y = y[:, None]                                      # [B,1,H,P]
+        new_state = {"conv": new_conv, "ssm": h_new}
+    else:
+        h0 = state["ssm"] if state is not None else None
+        y, h_final = ssd_chunked(xh, dt, params["a_log"], b_in, c_in,
+                                 ssm.chunk, h0)
+        if mode == "prefill":
+            new_state = {"conv": new_conv, "ssm": h_final}
+    y = y.astype(dt_) + xh * params["d_skip"].astype(dt_)[None, None, :, None]
+    y2 = y.reshape(bsz, s, d_inner)
+    y2 = rmsnorm(params["norm"], y2, cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.dot(y2, params["out_proj"].astype(dt_))
+    return sh.shard(out, sh.BATCH, sh.SEQ, sh.EMBED), new_state
+
+
+def state_shapes(cfg: ModelConfig, batch: int) -> Dict:
+    ssm = cfg.ssm
+    d_inner, nheads, n, p = dims(cfg)
+    return {
+        "conv": ((batch, ssm.conv_width - 1, d_inner + 2 * n),
+                 (sh.BATCH, None, None)),
+        "ssm": ((batch, nheads, n, p), (sh.BATCH, sh.HEADS, None, None)),
+    }

@@ -1,0 +1,116 @@
+"""Minimal pure-JAX module system.
+
+No flax on this box (and the task wants the substrate built from scratch),
+so parameters are plain pytrees of ``jnp`` arrays described by declarative
+``ParamDef`` tables.  Each layer module exposes
+
+    defs(cfg, ...)  -> nested {name: ParamDef}           (static description)
+    apply(params, x, ...)                                 (pure function)
+
+From a defs tree we derive three parallel pytrees:
+    * real parameters           (``init_params`` — smoke tests / examples)
+    * logical sharding axes     (``axes_tree`` — fed to parallel.sharding)
+    * abstract parameters       (``abstract_params`` — dry-run, 0 bytes)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+# Logical axis names.  parallel/sharding.py maps these to mesh axes.
+EMBED = "embed"        # d_model
+VOCAB = "vocab"        # vocabulary
+HEADS = "heads"        # query heads
+KV_HEADS = "kv_heads"  # kv heads (may be replicated when not divisible)
+HEAD_DIM = "head_dim"  # per-head feature dim
+MLP = "mlp"            # d_ff
+EXPERT = "expert"      # MoE expert dim -> "pool" under the paper's tuner
+SSM_INNER = "ssm_inner"  # mamba d_inner / rwkv channel dim
+STATE = "state"        # ssm state dim
+LAYERS = "layers"      # stacked-layer leading dim (never sharded)
+NONE = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"     # fan_in | zeros | ones | normal | embed | custom
+    dtype: Any = None        # None -> model param dtype
+    scale: float = 1.0       # extra multiplier on the init
+    custom: Optional[Callable[[jax.Array], jax.Array]] = None  # key -> array
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_one(key: jax.Array, d: ParamDef, dtype) -> jax.Array:
+    dt = d.dtype or dtype
+    if d.custom is not None:
+        return d.custom(key).astype(dt)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape) * d.scale).astype(dt)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape) * d.scale).astype(dt)
+    if d.init == "fan_in":
+        fan_in = d.shape[0] if len(d.shape) == 1 else int(np.prod(d.shape[:-1]))
+        # stacked defs put layers first; treat a leading "layers" axis as batch
+        if d.axes and d.axes[0] == LAYERS and len(d.shape) > 2:
+            fan_in = int(np.prod(d.shape[1:-1]))
+        std = d.scale / max(fan_in, 1) ** 0.5
+        return (jax.random.normal(key, d.shape) * std).astype(dt)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_params(defs: Pytree, key: jax.Array, dtype=jnp.float32) -> Pytree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_one(k, d, dtype) for k, d in zip(keys, leaves)])
+
+
+def axes_tree(defs: Pytree) -> Pytree:
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+def shapes_tree(defs: Pytree) -> Pytree:
+    return jax.tree.map(lambda d: d.shape, defs, is_leaf=is_def)
+
+
+def abstract_params(defs: Pytree, dtype=jnp.bfloat16,
+                    shardings: Optional[Pytree] = None) -> Pytree:
+    """ShapeDtypeStruct stand-ins (dry-run: zero allocation)."""
+    def mk(d: ParamDef, s=None):
+        return jax.ShapeDtypeStruct(d.shape, d.dtype or dtype, sharding=s)
+    if shardings is None:
+        return jax.tree.map(mk, defs, is_leaf=is_def)
+    return jax.tree.map(mk, defs, shardings, is_leaf=is_def)
+
+
+def param_count(defs: Pytree) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def stack_defs(d: ParamDef, n: int) -> ParamDef:
+    """Prepend a stacked-layers axis to a ParamDef."""
+    return dataclasses.replace(d, shape=(n,) + d.shape, axes=(LAYERS,) + d.axes)
+
+
+def tree_stack_defs(defs: Pytree, n: int) -> Pytree:
+    return jax.tree.map(lambda d: stack_defs(d, n), defs, is_leaf=is_def)

@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based scatter dispatch +
+batched expert matmuls.
+
+This is the canonical *inter-operator parallelism* case of the paper on TPU:
+the E expert FFNs of one layer are independent heavy operators.  The
+tuner's "pools" decide whether the expert dim of the batched matmul is
+sharded across device groups (async scheduling / expert parallelism), the
+``d_ff`` dim is sharded (sync scheduling / pure intra-op), or a factored
+mix.  The same model code supports all of them through the logical-axis
+rules (``act_expert`` / ``act_mlp``).
+
+Dispatch is scatter-based (sort-free positions via a cumsum rank trick), not
+the GShard one-hot-einsum, so dispatch costs ~0 FLOPs and O(tokens) bytes.
+Tokens are processed in G groups of g tokens (G sharded on ``data``) so all
+shapes are static.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import module as m
+from repro.parallel import sharding as sh
+
+GROUP_TOKENS = 4096  # target tokens per dispatch group
+
+
+def moe_defs(cfg: ModelConfig) -> Dict:
+    e = cfg.moe.num_experts
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "router": m.ParamDef((d, e), (m.EMBED, m.EXPERT), dtype=jnp.float32),
+        "w_gate": m.ParamDef((e, d, ff), (m.EXPERT, m.EMBED, m.MLP)),
+        "w_up": m.ParamDef((e, d, ff), (m.EXPERT, m.EMBED, m.MLP)),
+        "w_down": m.ParamDef((e, ff, d), (m.EXPERT, m.MLP, m.EMBED)),
+    }
+
+
+def _num_groups(total_tokens: int) -> int:
+    g = max(1, total_tokens // GROUP_TOKENS)
+    while total_tokens % g:
+        g -= 1
+    return g
+
+
+def _capacity(g: int, moe: MoEConfig) -> int:
+    cap = int(g * moe.top_k / moe.num_experts * moe.capacity_factor)
+    return max(1, min(g, cap))
+
+
+def route(params, x2d: jax.Array, moe: MoEConfig
+          ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """x2d [T,d] -> (top-k probs [T,k], expert ids [T,k], aux)."""
+    logits = jnp.dot(x2d.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, moe.top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], moe.num_experts, dtype=jnp.float32), axis=0)
+    aux = {"load_balance_loss": moe.num_experts * jnp.sum(me * ce),
+           "router_entropy": -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), -1))}
+    return top_p, top_e, aux
+
+
+def _dispatch_indices(top_e: jax.Array, e: int, cap: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Per group: top_e [g,k] -> (slot [g,k] in [0, e*cap), keep [g,k]).
+
+    Position of each assignment inside its expert's queue via the
+    cumsum-of-one-hot rank trick; overflow beyond ``cap`` is dropped.
+    """
+    g, k = top_e.shape
+    flat = top_e.reshape(g * k)
+    oh = jax.nn.one_hot(flat, e, dtype=jnp.int32)          # [g*k, e]
+    ranks = jnp.cumsum(oh, axis=0) - oh                     # rank within expert
+    pos = jnp.take_along_axis(ranks, flat[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    slot = flat * cap + jnp.minimum(pos, cap - 1)
+    return slot.reshape(g, k), keep.reshape(g, k)
+
+
+def apply(params, x: jax.Array, cfg: ModelConfig, act: str = "silu",
+          ) -> Tuple[jax.Array, Dict]:
+    """x [B,S,d] -> (y [B,S,d], aux)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.top_k
+    ngroups = _num_groups(t)
+    g = t // ngroups
+    cap = _capacity(g, moe)
+
+    x2d = x.reshape(t, d)
+    top_p, top_e, aux = route(params, x2d, moe)
+
+    xg = x2d.reshape(ngroups, g, d)
+    pg = top_p.reshape(ngroups, g, k).astype(x.dtype)
+    eg = top_e.reshape(ngroups, g, k)
+
+    slot, keep = jax.vmap(lambda te: _dispatch_indices(te, e, cap))(eg)
+
+    def scatter_group(xk, slots, keeps):
+        # xk [g,d]; slots/keeps [g,k] -> buffer [e*cap, d]
+        vals = jnp.repeat(xk, k, axis=0)                    # [g*k, d]
+        vals = vals * keeps.reshape(-1, 1).astype(xk.dtype)
+        buf = jnp.zeros((e * cap, d), xk.dtype)
+        return buf.at[slots.reshape(-1)].add(vals)
+
+    buf = jax.vmap(scatter_group)(xg, slot, keep)           # [G, e*cap, d]
+    buf = buf.reshape(ngroups, e, cap, d)
+    buf = sh.shard(buf, sh.GROUPS, sh.EXPERT, None, None)
+
+    # batched expert SwiGLU
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    dt = x.dtype
+    hg = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(dt))
+    hu = jnp.einsum("gecd,edf->gecf", buf, params["w_up"].astype(dt))
+    hg = sh.shard(hg, sh.GROUPS, sh.EXPERT, None, sh.MLP)
+    hu = sh.shard(hu, sh.GROUPS, sh.EXPERT, None, sh.MLP)
+    hidden = actf(hg) * hu
+    out_buf = jnp.einsum("gecf,efd->gecd", hidden, params["w_down"].astype(dt))
+    out_buf = sh.shard(out_buf, sh.GROUPS, sh.EXPERT, None, None)
+    out_buf = out_buf.reshape(ngroups, e * cap, d)
+
+    def gather_group(ob, slots, keeps, pk):
+        # ob [e*cap, d] -> y [g, d]
+        rows = ob[slots.reshape(-1)]                        # [g*k, d]
+        wts = (pk * keeps.astype(pk.dtype)).reshape(-1, 1)
+        return jnp.sum((rows * wts).reshape(g, k, d), axis=1)
+
+    y = jax.vmap(gather_group)(out_buf, slot, keep, pg)     # [G, g, d]
+    y = y.reshape(b, s, d)
+    aux["dropped_fraction"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return sh.shard(y, sh.BATCH, sh.SEQ, sh.EMBED), aux
+
+
+# ---------------------------------------------------------------------------
+# Scheduling-mechanism study (paper §4): the same expert computation under
+# explicitly *synchronous* scheduling — experts executed one at a time, each
+# sharded over the full model axis.  Used by core/scheduler.py + fig04.
+# ---------------------------------------------------------------------------
+
+def apply_sync_schedule(params, x: jax.Array, cfg: ModelConfig,
+                        act: str = "silu") -> Tuple[jax.Array, Dict]:
+    """Numerically equivalent to ``apply`` (same dispatch, same FLOPs), but
+    lowered as a sequential python loop over experts — one heavy op at a
+    time, each sharded over the *full* model axis.  The paper's synchronous
+    scheduling baseline."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.top_k
+    ngroups = _num_groups(t)
+    g = t // ngroups
+    cap = _capacity(g, moe)
+
+    x2d = x.reshape(t, d)
+    top_p, top_e, aux = route(params, x2d, moe)
+    xg = x2d.reshape(ngroups, g, d)
+    pg = top_p.reshape(ngroups, g, k).astype(x.dtype)
+    eg = top_e.reshape(ngroups, g, k)
+    slot, keep = jax.vmap(lambda te: _dispatch_indices(te, e, cap))(eg)
+
+    def scatter_group(xk, slots, keeps):
+        vals = jnp.repeat(xk, k, axis=0) * keeps.reshape(-1, 1).astype(xk.dtype)
+        return jnp.zeros((e * cap, d), xk.dtype).at[slots.reshape(-1)].add(vals)
+
+    buf = jax.vmap(scatter_group)(xg, slot, keep).reshape(ngroups, e, cap, d)
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    dt = x.dtype
+    outs = []
+    for ei in range(e):                          # static loop: sync schedule
+        be = sh.shard(buf[:, ei], sh.GROUPS, None, None)
+        h = actf(jnp.dot(be, params["w_gate"][ei].astype(dt))) * \
+            jnp.dot(be, params["w_up"][ei].astype(dt))
+        h = sh.shard(h, sh.GROUPS, None, sh.MLP)
+        outs.append(jnp.dot(h, params["w_down"][ei].astype(dt)))
+    out_buf = jnp.stack(outs, axis=1).reshape(ngroups, e * cap, d)
+
+    def gather_group(ob, slots, keeps, pk):
+        rows = ob[slots.reshape(-1)]
+        wts = (pk * keeps.astype(pk.dtype)).reshape(-1, 1)
+        return jnp.sum((rows * wts).reshape(g, k, d), axis=1)
+
+    y = jax.vmap(gather_group)(out_buf, slot, keep, pg).reshape(b, s, d)
+    return y, aux

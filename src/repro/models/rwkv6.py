@@ -1,0 +1,243 @@
+"""RWKV6 (Finch) blocks: time-mix with data-dependent decay + channel-mix.
+
+The wkv6 recurrence per head (K = V = head_dim):
+
+    y_t = r_t . (S_{t-1} + (u * k_t) (x) v_t)
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t          (w_t in (0,1), per channel)
+
+Train/prefill use a chunked formulation (chunk ``CHUNK_Q``): intra-chunk
+contributions via a factored decay matmul (all exponents <= 0 after the
+chunk-start normalization thanks to the fla-style log-decay clamp of
+``LOG_W_MIN``), inter-chunk state carried by an associative scan.  Decode is
+the O(1) recurrence.  The naive step recurrence lives in
+``repro.kernels.rwkv6_wkv.ref`` and is the oracle for both.
+
+State per layer: {"tshift": [B,1,d], "wkv": [B,H,K,V], "cshift": [B,1,d]}.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import module as m
+from repro.models.layers import groupnorm, groupnorm_defs
+from repro.parallel import sharding as sh
+
+LOG_W_MIN = -5.0   # fla-style clamp on per-step log decay
+CHUNK_Q = 16       # keeps every factored exponent <= |LOG_W_MIN| * CHUNK_Q < 88
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def hdims(cfg: ModelConfig) -> Tuple[int, int]:
+    hd = cfg.rwkv.head_dim
+    return cfg.d_model // hd, hd
+
+
+def time_mix_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    r = cfg.rwkv
+    nm = len(MIX_NAMES)
+    return {
+        "mu_inner": m.ParamDef((d,), (m.EMBED,), init="zeros"),
+        "mu": m.ParamDef((nm, d), (None, m.EMBED), init="zeros"),
+        "mix_a": m.ParamDef((nm, d, r.mix_lora), (None, m.EMBED, None)),
+        "mix_b": m.ParamDef((nm, r.mix_lora, d), (None, None, m.EMBED),
+                            init="zeros"),
+        "wr": m.ParamDef((d, d), (m.EMBED, m.SSM_INNER)),
+        "wk": m.ParamDef((d, d), (m.EMBED, m.SSM_INNER)),
+        "wv": m.ParamDef((d, d), (m.EMBED, m.SSM_INNER)),
+        "wg": m.ParamDef((d, d), (m.EMBED, m.SSM_INNER)),
+        "wo": m.ParamDef((d, d), (m.SSM_INNER, m.EMBED)),
+        "w0": m.ParamDef((d,), (m.SSM_INNER,), init="custom",
+                         custom=lambda key: jnp.log(jnp.exp(
+                             jax.random.uniform(key, (d,), minval=0.5,
+                                                maxval=3.0)))),
+        "decay_a": m.ParamDef((d, r.decay_lora), (m.EMBED, None)),
+        "decay_b": m.ParamDef((r.decay_lora, d), (None, m.SSM_INNER),
+                              init="zeros"),
+        "bonus_u": m.ParamDef((d,), (m.SSM_INNER,), init="normal", scale=0.3),
+        "ln_x": groupnorm_defs(d),
+    }
+
+
+def channel_mix_defs(cfg: ModelConfig) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": m.ParamDef((d,), (m.EMBED,), init="zeros"),
+        "mu_r": m.ParamDef((d,), (m.EMBED,), init="zeros"),
+        "wk": m.ParamDef((d, ff), (m.EMBED, m.MLP)),
+        "wv": m.ParamDef((ff, d), (m.MLP, m.EMBED)),
+        "wr": m.ParamDef((d, d), (m.EMBED, m.EMBED)),
+    }
+
+
+def _token_shift(x: jax.Array, shift_state: Optional[jax.Array]) -> jax.Array:
+    """Previous token's x (zeros / carried state at position 0)."""
+    b, s, d = x.shape
+    if s == 1:
+        return shift_state if shift_state is not None else jnp.zeros_like(x)
+    prev = x[:, :-1]
+    first = shift_state if shift_state is not None else jnp.zeros((b, 1, d), x.dtype)
+    return jnp.concatenate([first.astype(x.dtype), prev], axis=1)
+
+
+def _ddlerp(params, x, xx, name_idx):
+    """Finch data-dependent lerp for stream ``name_idx``."""
+    inner = x + xx * params["mu_inner"].astype(x.dtype)
+    lora = jnp.einsum("bsd,dr->bsr", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", inner, params["mix_a"][name_idx].astype(x.dtype))),
+        params["mix_b"][name_idx].astype(x.dtype))
+    return x + xx * (params["mu"][name_idx].astype(x.dtype) + lora)
+
+
+def wkv_chunked(r, k, v, lw, u, h0=None):
+    """Chunked wkv6.
+
+    r,k,v [B,S,H,K]; lw [B,S,H,K] log decays (<=0, clamped); u [H,K].
+    Returns (y [B,S,H,K], final_state [B,H,K,V]).
+    """
+    b, s, h, kk = r.shape
+    f32 = jnp.float32
+    q = min(CHUNK_Q, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    rc = r.astype(f32).reshape(b, nc, q, h, kk)
+    kc = k.astype(f32).reshape(b, nc, q, h, kk)
+    vc = v.astype(f32).reshape(b, nc, q, h, kk)
+    lwc = lw.astype(f32).reshape(b, nc, q, h, kk)
+
+    cw = jnp.cumsum(lwc, axis=2)                       # inclusive
+    cwx = cw - lwc                                     # exclusive
+    cw_end = cw[:, :, -1]                              # [B,nc,H,K]
+
+    # intra-chunk: A[t,j] = sum_K r_t exp(cwx_t - cw_j) k_j   (j <= t-1)
+    r_tilde = rc * jnp.exp(cwx)                        # exponents <= 0
+    k_tilde = kc * jnp.exp(-cw)                        # <= exp(|LOG_W_MIN|*Q)
+    amat = jnp.einsum("bcihk,bcjhk->bchij", r_tilde, k_tilde)
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)      # strictly lower
+    amat = jnp.where(mask[None, None, None], amat, 0.0)
+    y_intra = jnp.einsum("bchij,bcjhv->bcihv", amat, vc)
+    # diagonal bonus term: (r_t . (u * k_t)) v_t
+    diag = jnp.einsum("bcihk,bcihk->bcih", rc, kc * u.astype(f32)[None, None, None])
+    y_intra = y_intra + diag[..., None] * vc
+
+    # chunk kv: sum_j exp(cw_end - cw_j) k_j (x) v_j
+    kdec = kc * jnp.exp(cw_end[:, :, None] - cw)
+    chunk_kv = jnp.einsum("bcjhk,bcjhv->bchkv", kdec, vc)
+
+    aa = jnp.exp(cw_end)                               # [B,nc,H,K]
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a2 * a1, s1 * a2[..., None] + s2
+    a_pref, s_pref = jax.lax.associative_scan(combine, (aa, chunk_kv), axis=1)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, kk, vc.shape[-1]), f32)
+    else:
+        h0 = h0.astype(f32)
+    h_before = jnp.concatenate(
+        [h0[:, None], s_pref[:, :-1] + h0[:, None] * a_pref[:, :-1][..., None]],
+        axis=1)
+    h_final = s_pref[:, -1] + h0 * a_pref[:, -1][..., None]
+
+    y_inter = jnp.einsum("bcihk,bchkv->bcihv", r_tilde, h_before)
+    y = (y_intra + y_inter).reshape(b, s, h, kk)
+    return y.astype(r.dtype), h_final
+
+
+def time_mix(params, x: jax.Array, cfg: ModelConfig, *, mode: str,
+             state: Optional[Dict] = None
+             ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x [B,S,d] -> (y, new partial state {"tshift","wkv"})."""
+    nh, hd = hdims(cfg)
+    b, s, d = x.shape
+    dt = x.dtype
+    prev = _token_shift(x, state["tshift"] if state else None)
+    xx = prev - x
+    xw = _ddlerp(params, x, xx, 0)
+    xk = _ddlerp(params, x, xx, 1)
+    xv = _ddlerp(params, x, xx, 2)
+    xr = _ddlerp(params, x, xx, 3)
+    xg = _ddlerp(params, x, xx, 4)
+
+    r = jnp.dot(xr, params["wr"].astype(dt))
+    k = jnp.dot(xk, params["wk"].astype(dt))
+    v = jnp.dot(xv, params["wv"].astype(dt))
+    g = jnp.dot(xg, params["wg"].astype(dt))
+    r = sh.shard(r, sh.BATCH, None, sh.MLP)
+    k = sh.shard(k, sh.BATCH, None, sh.MLP)
+    v = sh.shard(v, sh.BATCH, None, sh.MLP)
+    g = sh.shard(g, sh.BATCH, None, sh.MLP)
+
+    # data-dependent decay (log space, clamped)
+    dlora = jnp.einsum("bsr,rd->bsd",
+                       jnp.tanh(jnp.einsum("bsd,dr->bsr", xw,
+                                           params["decay_a"].astype(dt))),
+                       params["decay_b"].astype(dt))
+    lw = -jnp.exp(jnp.clip(params["w0"].astype(jnp.float32) +
+                           dlora.astype(jnp.float32), -8.0, 2.0))
+    lw = jnp.clip(lw, LOG_W_MIN, 0.0)                  # [B,S,d]
+
+    rh = r.reshape(b, s, nh, hd)
+    kh = k.reshape(b, s, nh, hd)
+    vh = v.reshape(b, s, nh, hd)
+    lwh = lw.reshape(b, s, nh, hd)
+    uh = params["bonus_u"].astype(jnp.float32).reshape(nh, hd)
+
+    new_state = None
+    if mode == "decode":
+        assert state is not None
+        h_prev = state["wkv"].astype(jnp.float32)       # [B,H,K,V]
+        r1 = rh[:, 0].astype(jnp.float32)
+        k1 = kh[:, 0].astype(jnp.float32)
+        v1 = vh[:, 0].astype(jnp.float32)
+        w1 = jnp.exp(lwh[:, 0])
+        kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+        y = jnp.einsum("bhk,bhkv->bhv", r1, h_prev + uh[None][..., None] * kv)
+        h_new = w1[..., None] * h_prev + kv
+        y = y[:, None].astype(dt).reshape(b, 1, d)
+        new_state = {"tshift": x[:, -1:], "wkv": h_new}
+    else:
+        h0 = state["wkv"] if state else None
+        yh, h_final = wkv_chunked(rh, kh, vh, lwh, uh, h0)
+        y = yh.reshape(b, s, d)
+        if mode == "prefill":
+            new_state = {"tshift": x[:, -1:], "wkv": h_final}
+
+    y = groupnorm(params["ln_x"], y, nh, eps=64e-5)
+    y = y * jax.nn.silu(g)
+    out = jnp.dot(y, params["wo"].astype(dt))
+    return sh.shard(out, sh.BATCH, sh.SEQ, sh.EMBED), new_state
+
+
+def channel_mix(params, x: jax.Array, cfg: ModelConfig, *, mode: str,
+                state: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    dt = x.dtype
+    prev = _token_shift(x, state["cshift"] if state else None)
+    xx = prev - x
+    xk = x + xx * params["mu_k"].astype(dt)
+    xr = x + xx * params["mu_r"].astype(dt)
+    k = jnp.dot(xk, params["wk"].astype(dt))
+    k = sh.shard(k, sh.BATCH, None, sh.MLP)
+    kk = jnp.square(jax.nn.relu(k))
+    v = jnp.dot(kk, params["wv"].astype(dt))
+    out = jax.nn.sigmoid(jnp.dot(xr, params["wr"].astype(dt))) * v
+    new_state = {"cshift": x[:, -1:]} if mode in ("prefill", "decode") else None
+    return sh.shard(out, sh.BATCH, sh.SEQ, sh.EMBED), new_state
+
+
+def state_shapes(cfg: ModelConfig, batch: int) -> Dict:
+    nh, hd = hdims(cfg)
+    d = cfg.d_model
+    return {
+        "tshift": ((batch, 1, d), (sh.BATCH, None, None)),
+        "wkv": ((batch, nh, hd, hd), (sh.BATCH, sh.HEADS, None, None)),
+        "cshift": ((batch, 1, d), (sh.BATCH, None, None)),
+    }

@@ -1,0 +1,393 @@
+"""Model assembly: every assigned architecture from one block vocabulary.
+
+The per-layer python loop is deliberately *unrolled* (see DESIGN.md S6):
+HLO flops are exact for the roofline and heterogeneous stacks (zamba2's
+shared blocks, gemma's window alternation) need no scan gymnastics.
+
+Public entry points (all pure functions of (params, batch)):
+    forward_train(params, cfg, batch)            -> (loss, metrics)
+    forward_prefill(params, cfg, batch)          -> (logits_last, caches)
+    forward_decode(params, cfg, tokens, caches, cache_len) -> (logits, caches)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, FFN_DENSE, FFN_MOE, FFN_NONE, FFN_RWKV,
+                                MAMBA2, RWKV6, SHARED_ATTN, BlockSpec,
+                                ModelConfig)
+from repro.models import attention, layers, mamba2, moe, module as m, rwkv6
+from repro.parallel import sharding as sh
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+def _block_defs(cfg: ModelConfig, block: BlockSpec) -> Dict:
+    defs: Dict[str, Any] = {"ln1": layers.rmsnorm_defs(cfg.d_model)}
+    if block.mixer == ATTN:
+        defs["mixer"] = attention.attn_defs(cfg)
+    elif block.mixer == MAMBA2:
+        defs["mixer"] = mamba2.mamba2_defs(cfg)
+    elif block.mixer == RWKV6:
+        defs["mixer"] = rwkv6.time_mix_defs(cfg)
+    elif block.mixer == SHARED_ATTN:
+        pass  # parameters live in the shared groups
+    else:
+        raise ValueError(block.mixer)
+    if block.ffn != FFN_NONE and block.mixer != SHARED_ATTN:
+        defs["ln2"] = layers.rmsnorm_defs(cfg.d_model)
+        if block.ffn == FFN_DENSE:
+            defs["ffn"] = layers.mlp_defs(cfg)
+        elif block.ffn == FFN_MOE:
+            defs["ffn"] = moe.moe_defs(cfg)
+        elif block.ffn == FFN_RWKV:
+            defs["ffn"] = rwkv6.channel_mix_defs(cfg)
+        else:
+            raise ValueError(block.ffn)
+    return defs
+
+
+def _shared_group_defs(cfg: ModelConfig) -> Dict:
+    """zamba2 shared transformer block: operates on concat(h, h0) -> d."""
+    d = cfg.d_model
+    return {
+        "proj_in": m.ParamDef((2 * d, d), (m.EMBED, None)),
+        "ln_attn": layers.rmsnorm_defs(d),
+        "attn": attention.attn_defs(cfg),
+        "ln_mlp": layers.rmsnorm_defs(d),
+        "mlp": layers.mlp_defs(cfg),
+    }
+
+
+def _encoder_block_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": layers.rmsnorm_defs(cfg.d_model),
+        "attn": attention.attn_defs(cfg),
+        "ln2": layers.rmsnorm_defs(cfg.d_model),
+        "ffn": layers.mlp_defs(cfg),
+    }
+
+
+def _decoder_cross_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln_cross": layers.rmsnorm_defs(cfg.d_model),
+        "cross": attention.cross_attn_defs(cfg),
+    }
+
+
+def model_defs(cfg: ModelConfig) -> Dict:
+    defs: Dict[str, Any] = {
+        "embed": layers.embedding_defs(cfg),
+        "final_ln": layers.rmsnorm_defs(cfg.d_model),
+        "layers": [_block_defs(cfg, b) for b in cfg.blocks],
+    }
+    if cfg.num_shared_groups:
+        defs["shared"] = [_shared_group_defs(cfg)
+                          for _ in range(cfg.num_shared_groups)]
+    if cfg.cross_attention:
+        for i in range(cfg.num_layers):
+            defs["layers"][i].update(_decoder_cross_defs(cfg))
+    if cfg.enc_layers:
+        defs["encoder"] = {
+            "pos": m.ParamDef((cfg.frontend_len, cfg.d_model),
+                              (None, m.EMBED), init="normal", scale=0.02),
+            "layers": [_encoder_block_defs(cfg) for _ in range(cfg.enc_layers)],
+            "final_ln": layers.rmsnorm_defs(cfg.d_model),
+        }
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _apply_block(lp: Dict, shared_params: Optional[List[Dict]], h: jax.Array,
+                 h0: jax.Array, cfg: ModelConfig, block: BlockSpec, *,
+                 mode: str, positions: jax.Array,
+                 cache: Optional[Dict], cache_len: Optional[jax.Array],
+                 enc_kv: Optional[Dict], q_chunk: Optional[int]
+                 ) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    """One decoder layer. Returns (h, new_cache, aux)."""
+    aux: Dict[str, jax.Array] = {}
+    new_cache: Optional[Dict] = None
+
+    if block.mixer == SHARED_ATTN:
+        sp = shared_params[block.shared_group]
+        xin = jnp.concatenate([h, h0], axis=-1)
+        x = jnp.dot(xin, sp["proj_in"].astype(h.dtype))
+        x = sh.shard(x, sh.BATCH, sh.SEQ, sh.EMBED)
+        y, new_cache = attention.apply(
+            sp["attn"], layers.rmsnorm(sp["ln_attn"], sh.sp_boundary(x),
+                                       cfg.norm_eps),
+            cfg=cfg, window=block.window, positions=positions, mode=mode,
+            cache=cache, cache_len=cache_len, q_chunk=q_chunk)
+        x = x + y
+        x = x + layers.mlp(sp["mlp"],
+                           layers.rmsnorm(sp["ln_mlp"], sh.sp_boundary(x),
+                                          cfg.norm_eps))
+        return h + x, new_cache, aux
+
+    xn = layers.rmsnorm(lp["ln1"], sh.sp_boundary(h), cfg.norm_eps)
+    if block.mixer == ATTN:
+        y, new_cache = attention.apply(
+            lp["mixer"], xn, cfg=cfg, window=block.window,
+            positions=positions, mode=mode, cache=cache, cache_len=cache_len,
+            q_chunk=q_chunk)
+    elif block.mixer == MAMBA2:
+        y, new_cache = mamba2.apply(lp["mixer"], xn, cfg, mode=mode,
+                                    state=cache)
+    elif block.mixer == RWKV6:
+        y, tm_state = rwkv6.time_mix(lp["mixer"], xn, cfg, mode=mode,
+                                     state=cache)
+        new_cache = tm_state
+    else:
+        raise ValueError(block.mixer)
+    h = h + y
+
+    if cfg.cross_attention and enc_kv is not None:
+        y = attention.cross_apply(
+            lp["cross"], layers.rmsnorm(lp["ln_cross"], sh.sp_boundary(h),
+                                        cfg.norm_eps),
+            enc_kv, cfg=cfg)
+        h = h + y
+
+    if block.ffn != FFN_NONE:
+        xn = layers.rmsnorm(lp["ln2"], sh.sp_boundary(h), cfg.norm_eps)
+        if block.ffn == FFN_DENSE:
+            y = layers.mlp(lp["ffn"], xn)
+        elif block.ffn == FFN_MOE:
+            y, moe_aux = moe.apply(lp["ffn"], xn, cfg)
+            aux.update(moe_aux)
+        elif block.ffn == FFN_RWKV:
+            y, cm_state = rwkv6.channel_mix(lp["ffn"], xn, cfg, mode=mode,
+                                            state=cache)
+            if cm_state is not None:
+                new_cache = {**(new_cache or {}), **cm_state}
+        else:
+            raise ValueError(block.ffn)
+        h = h + y
+    return h, new_cache, aux
+
+
+def _decoder(params, cfg: ModelConfig, h: jax.Array, *, mode: str,
+             positions: jax.Array, caches: Optional[List],
+             cache_len: Optional[jax.Array], enc_kv_list: Optional[List],
+             q_chunk: Optional[int], remat: bool = False
+             ) -> Tuple[jax.Array, Optional[List], Dict]:
+    h0 = h
+    shared = params.get("shared")
+    new_caches: List = []
+    aux_all: Dict[str, jax.Array] = {}
+    for i, block in enumerate(cfg.blocks):
+        cache_i = caches[i] if caches is not None else None
+        enc_kv = enc_kv_list[i] if enc_kv_list is not None else None
+        if remat and mode == "dense":
+            def blockfn(lp_, shared_, h_, h0_, enc_kv_, pos_, _block=block):
+                return _apply_block(lp_, shared_, h_, h0_, cfg, _block,
+                                    mode=mode, positions=pos_, cache=None,
+                                    cache_len=None, enc_kv=enc_kv_,
+                                    q_chunk=q_chunk)
+            h, nc, aux = jax.checkpoint(blockfn)(
+                params["layers"][i], shared, h, h0, enc_kv, positions)
+        else:
+            h, nc, aux = _apply_block(
+                params["layers"][i], shared, h, h0, cfg, block, mode=mode,
+                positions=positions, cache=cache_i, cache_len=cache_len,
+                enc_kv=enc_kv, q_chunk=q_chunk)
+        new_caches.append(nc)
+        for k_, v_ in aux.items():
+            aux_all[k_] = aux_all.get(k_, 0.0) + v_ / cfg.num_layers
+    h = layers.rmsnorm(params["final_ln"], h, cfg.norm_eps)
+    return h, (new_caches if mode in ("prefill", "decode") else None), aux_all
+
+
+def _encoder(params, cfg: ModelConfig, frames: jax.Array,
+             q_chunk: Optional[int]) -> jax.Array:
+    """Whisper encoder over stub frame embeddings [B,F,d]."""
+    enc = params["encoder"]
+    h = frames + enc["pos"].astype(frames.dtype)[None, :frames.shape[1]]
+    h = sh.shard(h, sh.BATCH, sh.SEQ, sh.EMBED)
+    positions = jnp.arange(frames.shape[1])
+    for i in range(cfg.enc_layers):
+        lp = enc["layers"][i]
+        xn = layers.rmsnorm(lp["ln1"], sh.sp_boundary(h), cfg.norm_eps)
+        y, _ = attention.apply(lp["attn"], xn, cfg=cfg, window=None,
+                               positions=positions, mode="dense",
+                               causal=False, q_chunk=q_chunk)
+        h = h + y
+        xn2 = layers.rmsnorm(lp["ln2"], sh.sp_boundary(h), cfg.norm_eps)
+        h = h + layers.mlp(lp["ffn"], xn2)
+    return layers.rmsnorm(enc["final_ln"], h, cfg.norm_eps)
+
+
+def _embed_with_frontend(params, cfg: ModelConfig, tokens: jax.Array,
+                         frontend: Optional[jax.Array]) -> jax.Array:
+    h = layers.embed(params["embed"], cfg, tokens)
+    if frontend is not None and cfg.frontend and cfg.family != "audio":
+        f = frontend.shape[1]
+        prefix = frontend.astype(h.dtype)
+        h = jnp.concatenate([prefix, h[:, f:]], axis=1)
+        h = sh.shard(h, sh.BATCH, sh.SEQ, sh.EMBED)
+    return h
+
+
+def _cross_kv_list(params, cfg: ModelConfig, enc_out: jax.Array) -> List[Dict]:
+    return [attention.encode_kv(params["layers"][i]["cross"], enc_out, cfg=cfg)
+            for i in range(cfg.num_layers)]
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, batch: Dict, *,
+                  q_chunk: Optional[int] = None, remat: bool = False
+                  ) -> Tuple[jax.Array, Dict]:
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    positions = jnp.arange(tokens.shape[1])
+    enc_kv_list = None
+    if cfg.family == "audio":
+        enc_out = _encoder(params, cfg, batch["frames"], q_chunk)
+        enc_kv_list = _cross_kv_list(params, cfg, enc_out)
+    h = _embed_with_frontend(params, cfg, tokens, batch.get("frontend"))
+    h, _, aux = _decoder(params, cfg, h, mode="dense", positions=positions,
+                         caches=None, cache_len=None,
+                         enc_kv_list=enc_kv_list, q_chunk=q_chunk,
+                         remat=remat)
+    lg = layers.logits(params["embed"], cfg, h)
+    mask = batch.get("loss_mask")
+    if mask is None and cfg.frontend and cfg.family != "audio":
+        mask = (jnp.arange(tokens.shape[1]) >= cfg.frontend_len)[None, :]
+        mask = jnp.broadcast_to(mask, labels.shape)
+    loss = layers.cross_entropy(lg, labels, mask)
+    if "load_balance_loss" in aux:
+        loss = loss + 0.01 * aux["load_balance_loss"]
+    metrics = {"loss": loss, **aux}
+    return loss, metrics
+
+
+def forward_dense_logits(params, cfg: ModelConfig, batch: Dict, *,
+                         q_chunk: Optional[int] = None) -> jax.Array:
+    """Full-sequence logits (teacher-forced), for tests/evaluation."""
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1])
+    enc_kv_list = None
+    if cfg.family == "audio":
+        enc_out = _encoder(params, cfg, batch["frames"], q_chunk)
+        enc_kv_list = _cross_kv_list(params, cfg, enc_out)
+    h = _embed_with_frontend(params, cfg, tokens, batch.get("frontend"))
+    h, _, _ = _decoder(params, cfg, h, mode="dense", positions=positions,
+                       caches=None, cache_len=None, enc_kv_list=enc_kv_list,
+                       q_chunk=q_chunk)
+    return layers.logits(params["embed"], cfg, h)
+
+
+def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
+                    q_chunk: Optional[int] = None
+                    ) -> Tuple[jax.Array, Dict]:
+    """Returns (last-token logits [B,vocab], cache pytree)."""
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1])
+    enc_kv_list = None
+    if cfg.family == "audio":
+        enc_out = _encoder(params, cfg, batch["frames"], q_chunk)
+        enc_kv_list = _cross_kv_list(params, cfg, enc_out)
+    h = _embed_with_frontend(params, cfg, tokens, batch.get("frontend"))
+    h, caches, _ = _decoder(params, cfg, h, mode="prefill",
+                            positions=positions, caches=None, cache_len=None,
+                            enc_kv_list=enc_kv_list, q_chunk=q_chunk)
+    lg = layers.logits(params["embed"], cfg, h[:, -1:])
+    cache = {"layers": caches, "enc_kv": enc_kv_list,
+             "len": jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)}
+    return lg[:, 0], cache
+
+
+def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
+                   cache: Dict) -> Tuple[jax.Array, Dict]:
+    """tokens [B,1]; cache from prefill (or abstract).  cache["len"] is the
+    number of tokens already in the cache (excluding this one)."""
+    b = tokens.shape[0]
+    cache_len = cache["len"] + 1         # including current token
+    positions = cache["len"][:, None]    # 0-based position of current token
+    h = layers.embed(params["embed"], cfg, tokens)
+    h, new_caches, _ = _decoder(params, cfg, h, mode="decode",
+                                positions=positions, caches=cache["layers"],
+                                cache_len=cache_len,
+                                enc_kv_list=cache.get("enc_kv"), q_chunk=None)
+    lg = layers.logits(params["embed"], cfg, h)
+    new_cache = {"layers": new_caches, "enc_kv": cache.get("enc_kv"),
+                 "len": cache_len}
+    return lg[:, 0], new_cache
+
+
+def prepare_decode_cache(cfg: ModelConfig, cache: Dict, max_len: int) -> Dict:
+    """Grow a prefill cache (seq dims sized to the prompt) into a decode
+    cache sized for ``max_len`` steps.  Windowed layers keep their ring
+    size; if the prompt exceeded the ring, keep the last ``window`` tokens
+    rolled so token t sits at slot ``t % size`` (the decode write rule)."""
+    plen = int(cache["len"][0]) if cache["len"].shape else int(cache["len"])
+
+    def grow(x, target):
+        if x is None:
+            return None
+        size = x.shape[2]
+        if size >= target:
+            return x
+        pad = [(0, 0)] * x.ndim
+        pad[2] = (0, target - size)
+        return jnp.pad(x, pad)
+
+    new_layers = []
+    for block, entry in zip(cfg.blocks, cache["layers"]):
+        if entry is not None and "k" in entry:
+            ring = min(max_len, block.window or max_len)
+            e = dict(entry)
+            for key in ("k", "v"):
+                x = e[key]
+                if x.shape[2] > ring:  # prompt longer than the window ring
+                    x = x[:, :, -ring:]
+                    x = jnp.roll(x, plen % ring, axis=2)
+                e[key] = grow(x, ring)
+            new_layers.append(e)
+        else:
+            new_layers.append(entry)
+    out = dict(cache)
+    out["layers"] = new_layers
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache / state structure (shapes + logical axes) for input_specs
+# ---------------------------------------------------------------------------
+
+def cache_structure(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Nested {name: (shape, logical_axes)} mirroring the runtime cache."""
+    per_layer: List[Optional[Dict]] = []
+    for block in cfg.blocks:
+        if block.mixer in (ATTN, SHARED_ATTN):
+            shape, axes = attention.init_cache_shape(
+                cfg, batch, min(max_len, block.window or max_len))
+            entry = {"k": (shape, axes), "v": (shape, axes)}
+        elif block.mixer == MAMBA2:
+            entry = {k: v for k, v in mamba2.state_shapes(cfg, batch).items()}
+        elif block.mixer == RWKV6:
+            entry = {k: v for k, v in rwkv6.state_shapes(cfg, batch).items()}
+        else:
+            entry = None
+        per_layer.append(entry)
+    out: Dict[str, Any] = {"layers": per_layer,
+                           "len": ((batch,), (sh.BATCH,))}
+    if cfg.cross_attention:
+        kv_shape = (batch, cfg.num_kv_heads, cfg.frontend_len,
+                    cfg.resolved_head_dim)
+        kv_axes = (sh.BATCH, None, None, None)
+        out["enc_kv"] = [{"k": (kv_shape, kv_axes), "v": (kv_shape, kv_axes)}
+                         for _ in range(cfg.num_layers)]
+    return out

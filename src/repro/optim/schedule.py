@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, *, peak_lr: float, warmup: int = 100,
+                         total: int = 10_000, floor: float = 0.1):
+    stepf = jnp.asarray(step, jnp.float32)
+    warm = stepf / jnp.maximum(warmup, 1)
+    frac = jnp.clip((stepf - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return peak_lr * jnp.where(stepf < warmup, warm, cos)
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full((), peak_lr, jnp.float32)

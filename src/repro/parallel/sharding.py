@@ -1,0 +1,172 @@
+"""Logical-axis sharding: the bridge between model code and meshes.
+
+Model code annotates activations with *logical* axes (``shard(h, BATCH,
+SEQ, EMBED)``) and parameters carry logical axes in their ``ParamDef``.
+A ``Rules`` table — produced by the paper-technique tuner
+(``repro.core.tuner``) — maps logical axes to physical mesh axes.  Outside
+an ``axis_rules`` context every annotation is a no-op, so the same model
+code runs unsharded on one CPU device (smoke tests) and fully sharded on
+the 512-chip production mesh (dry-run).
+
+Divisibility fallback: a rule that does not divide the dimension is dropped
+(recorded in ``Rules.fallbacks``) instead of crashing — e.g. gemma2's 8 query
+heads on a 16-way model axis.  The roofline then *shows* the waste, which is
+exactly the paper's "naive setting" story, and the tuned/factored mesh
+removes it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# logical activation axes
+BATCH = "batch"
+SEQ = "seq"          # sequence (activations)
+KV_SEQ = "kv_seq"    # kv-cache sequence dim (decode: sharded on model)
+EMBED = "act_embed"  # activation d_model dim
+HEADS = "act_heads"
+MLP = "act_mlp"
+EXPERT = "act_expert"
+GROUPS = "act_groups"  # MoE dispatch groups
+VOCAB = "act_vocab"
+
+MeshAxis = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass
+class Rules:
+    """logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+
+    table: Dict[str, MeshAxis]
+    mesh: Optional[Mesh] = None
+    fallbacks: List[str] = dataclasses.field(default_factory=list)
+    # context parallelism: activations stay seq-sharded through the blocks
+    # (no SP gather); attention gathers KV instead of sharding heads
+    context_parallel: bool = False
+
+    def mesh_size(self, axis: MeshAxis) -> int:
+        if axis is None or self.mesh is None:
+            return 1
+        if isinstance(axis, tuple):
+            return int(np.prod([self.mesh.shape[a] for a in axis]))
+        return int(self.mesh.shape[axis])
+
+    def spec_for(self, logical_axes: Sequence[Optional[str]],
+                 dims: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for a tensor with the given logical axes.
+
+        ``dims`` (if given) enables the divisibility fallback.
+        """
+        entries: List[MeshAxis] = []
+        used: set = set()
+        for i, ax in enumerate(logical_axes):
+            phys = self.table.get(ax) if ax is not None else None
+            if phys is not None:
+                # a mesh axis may appear only once per spec: keep the unused
+                # subtuple (e.g. expert dim takes "pool", ff dim keeps "intra")
+                flat = phys if isinstance(phys, tuple) else (phys,)
+                flat = tuple(f for f in flat if f not in used)
+                phys = None if not flat else (flat if len(flat) > 1 else flat[0])
+                if phys is not None and dims is not None and \
+                        dims[i] % self.mesh_size(phys) != 0:
+                    # try progressively smaller prefixes before giving up
+                    while flat and dims[i] % self.mesh_size(
+                            flat if len(flat) > 1 else flat[0]) != 0:
+                        flat = flat[:-1]
+                    if flat:
+                        phys = flat if len(flat) > 1 else flat[0]
+                    else:
+                        self.fallbacks.append(
+                            f"{ax}: dim {dims[i]} not divisible")
+                        phys = None
+            if phys is not None:
+                used.update(phys if isinstance(phys, tuple) else (phys,))
+            entries.append(phys)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding_for(self, logical_axes, dims=None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, dims))
+
+
+_ctx = threading.local()
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[Rules]):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op outside a context)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{logical_axes} vs shape {x.shape}")
+    s = rules.sharding_for(logical_axes, x.shape)
+    if s is None or all(e is None for e in s.spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def sp_boundary(x: jax.Array) -> jax.Array:
+    """Megatron-SP boundary: forward all-gathers the sequence dim (forces
+    the gather on the *bf16* residual stream, before any f32 norm internals);
+    backward constrains the cotangent to seq-sharded, so XLA emits a
+    reduce-scatter instead of an all-reduce for the accumulated dx.
+
+    x is [B, S, D].  No-op outside an axis_rules context.
+    """
+    rules = current_rules()
+    if rules is None or rules.mesh is None or \
+            rules.table.get(SEQ) is None or rules.context_parallel:
+        return x
+
+    @jax.custom_vjp
+    def f(y):
+        return shard(y, BATCH, None, None)
+
+    def fwd(y):
+        return f(y), None
+
+    def bwd(_, ct):
+        return (shard(ct, BATCH, SEQ, None),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
+
+
+def param_shardings(axes_pytree: Any, shapes_pytree: Any,
+                    rules: Rules) -> Any:
+    """NamedShardings for a parameter tree (axes from ParamDef tables)."""
+    return jax.tree.map(
+        lambda ax, shp: rules.sharding_for(ax, shp),
+        axes_pytree, shapes_pytree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x),
+    )
+
+
+def unsharded_like(tree: Any) -> Any:
+    return jax.tree.map(lambda _: None, tree)

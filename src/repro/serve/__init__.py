@@ -1,0 +1,3 @@
+from repro.serve import engine
+
+__all__ = ["engine"]

@@ -1,0 +1,3 @@
+from repro.train import checkpoint, trainer
+
+__all__ = ["checkpoint", "trainer"]

@@ -1,0 +1,151 @@
+"""Preemption-safe sharded checkpointing (no orbax on this box — built from
+scratch per the assignment).
+
+Layout:
+    <dir>/step_000123.tmp/            (written)
+        manifest.json                 (treedef, shapes, dtypes, step)
+        shard_000.npz ...             (leaves, chunked ~512 MB per file)
+    <dir>/step_000123/                (atomic rename commit)
+
+Fault-tolerance properties:
+  * atomic commit via rename — a killed writer never corrupts the latest
+    complete checkpoint;
+  * ``restore`` takes an *abstract* state (shapes + shardings) and re-shards
+    on load, so a checkpoint written on one mesh restores onto another
+    (elastic scaling / failed-node recovery);
+  * async mode writes on a background thread with a bounded queue; the
+    training loop never blocks more than one pending write.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.optim.adamw import QTensor
+
+SHARD_BYTES = 512 << 20
+
+
+def _flatten(state) -> Tuple[List[Any], Any]:
+    return jax.tree.flatten(state)
+
+
+def save(ckpt_dir: str, state, step: int) -> Path:
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    tmp = d / f"step_{step:08d}.tmp"
+    final = d / f"step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten(state)
+    arrays = [np.asarray(x) for x in leaves]
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "num_leaves": len(arrays),
+        "leaves": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for a in arrays],
+        "shards": [],
+    }
+    shard, shard_bytes, shard_id = {}, 0, 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_id
+        if not shard:
+            return
+        np.savez(tmp / f"shard_{shard_id:03d}.npz", **shard)
+        manifest["shards"].append(
+            {"file": f"shard_{shard_id:03d}.npz", "keys": list(shard)})
+        shard, shard_bytes = {}, 0
+        shard_id += 1
+
+    for i, a in enumerate(arrays):
+        shard[f"leaf_{i}"] = a
+        shard_bytes += a.nbytes
+        if shard_bytes >= SHARD_BYTES:
+            flush()
+    flush()
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.iterdir()
+             if p.is_dir() and p.name.startswith("step_")
+             and not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, abstract_state, step: Optional[int] = None):
+    """Load a checkpoint onto the shardings of ``abstract_state`` (a pytree
+    of ShapeDtypeStruct or arrays).  Mesh-independent: re-shards on load."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+    flat: Dict[str, np.ndarray] = {}
+    for sh in manifest["shards"]:
+        with np.load(d / sh["file"]) as z:
+            for k in sh["keys"]:
+                flat[k] = z[k]
+    arrays = [flat[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
+    ab_leaves, treedef = _flatten(abstract_state)
+    assert len(ab_leaves) == len(arrays), (len(ab_leaves), len(arrays))
+    out = []
+    for ab, a in zip(ab_leaves, arrays):
+        sharding = getattr(ab, "sharding", None)
+        dtype = getattr(ab, "dtype", a.dtype)
+        arr = a.astype(dtype) if str(a.dtype) != str(dtype) else a
+        out.append(jax.device_put(arr, sharding) if sharding is not None
+                   else jax.device_put(arr))
+    return jax.tree.unflatten(treedef, out), step
+
+
+class AsyncCheckpointer:
+    """One background writer; at most one pending save (back-pressure)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._pending: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, state, step: int) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+
+        def work():
+            try:
+                save(self.ckpt_dir, host_state, step)
+            except BaseException as e:  # noqa: BLE001
+                self.last_error = e
+
+        self._pending = threading.Thread(target=work, daemon=True)
+        self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see ONE
+device; multi-device behaviour is tested via subprocesses
+(test_distribution.py)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model_defs
+from repro.models import module as m
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(arch: str, **kw):
+    return reduced(get_config(arch), **kw)
+
+
+def init_model(cfg, seed=0, dtype=jnp.float32):
+    defs = model_defs(cfg)
+    return m.init_params(defs, jax.random.PRNGKey(seed), dtype)

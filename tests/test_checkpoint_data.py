@@ -1,0 +1,95 @@
+"""Checkpoint roundtrip/atomicity/resume + deterministic data pipeline."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import SyntheticLM
+from repro.optim import adamw
+from repro.train import checkpoint as ck
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _state():
+    k = jax.random.PRNGKey(3)
+    params = {"a": jax.random.normal(k, (16, 130)),
+              "nested": {"b": jnp.arange(12).reshape(3, 4)}}
+    cfg = adamw.AdamWConfig(quantize_v=True)
+    return {"params": params, "opt": adamw.init(params, cfg),
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_roundtrip_with_qtensor(tmp_path):
+    state = _state()
+    ck.save(str(tmp_path), state, 7)
+    restored, step = ck.restore(str(tmp_path), state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_atomicity(tmp_path):
+    state = _state()
+    ck.save(str(tmp_path), state, 5)
+    ck.save(str(tmp_path), state, 9)
+    # a stale .tmp dir (simulated crash) must be ignored
+    os.makedirs(tmp_path / "step_00000011.tmp")
+    assert ck.latest_step(str(tmp_path)) == 9
+
+
+def test_restore_respects_target_dtype(tmp_path):
+    state = {"w": jnp.ones((4, 4), jnp.float32)}
+    ck.save(str(tmp_path), state, 1)
+    target = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+    restored, _ = ck.restore(str(tmp_path), target)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_trainer_resume_replays_deterministically(tmp_path):
+    cfg = reduced(get_config("internlm2-1.8b"), layers=1, d_model=32,
+                  d_ff=64, vocab=64)
+    tc = TrainerConfig(steps=6, batch=2, seq_len=16,
+                       ckpt_dir=str(tmp_path), ckpt_every=3, log_every=1)
+    t1 = Trainer(cfg, tc)
+    t1.run()
+    loss_full = t1.metrics_history[-1]["loss"]
+
+    # restart from step 3 and replay 3..5: identical final loss
+    t2 = Trainer(cfg, tc)
+    start = t2.maybe_restore()
+    assert start == 6  # final checkpoint; restore the mid one instead
+    t3 = Trainer(cfg, tc)
+    t3.state, _ = ck.restore(str(tmp_path), t3.state, step=3)
+    t3.run()
+    np.testing.assert_allclose(t3.metrics_history[-1]["loss"], loss_full,
+                               rtol=1e-5)
+
+
+def test_data_determinism_and_structure():
+    cfg = reduced(get_config("internlm2-1.8b"))
+    src = SyntheticLM(cfg, batch=4, seq_len=32, seed=11)
+    b1 = src.batch_at(5)
+    b2 = src.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], src.batch_at(6)["tokens"])
+    # labels are next-token shifted stream
+    assert b1["tokens"].shape == (4, 32) and b1["labels"].shape == (4, 32)
+    assert (b1["tokens"] < cfg.vocab_size).all()
+    # learnable: majority of transitions follow next = (31x+17) % v
+    det = (b1["tokens"] * 31 + 17) % cfg.vocab_size
+    frac = (det == b1["labels"]).mean()
+    assert frac > 0.5, frac
+
+
+def test_prefetcher(tmp_path):
+    from repro.data.pipeline import DevicePrefetcher
+    cfg = reduced(get_config("internlm2-1.8b"))
+    src = SyntheticLM(cfg, batch=2, seq_len=16, seed=0)
+    pf = DevicePrefetcher(src, depth=2)
+    steps = [next(pf)[0] for _ in range(4)]
+    pf.close()
+    assert steps == [0, 1, 2, 3]

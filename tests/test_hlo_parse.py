@@ -1,0 +1,56 @@
+"""HLO collective-parser unit tests on synthetic HLO text."""
+
+import pytest
+
+from repro.analysis import hlo
+
+SAMPLE = """
+HloModule jit_train_step
+%x = f32[16,4096,2048]{2,1,0} all-reduce(%y), channel_id=3, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%add
+%g = bf16[2048,92544]{0,1} all-gather(%w), channel_id=4, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+%rs = bf16[16,256,2048]{2,1,0} reduce-scatter(%z), channel_id=5, replica_groups=[16,16]<=[256], dimensions={1}, to_apply=%add
+%a2a = (f32[16,256,128]{2,1,0}, f32[16,256,128]{2,1,0}) all-to-all(%p, %q), channel_id=6, replica_groups={{0,1,2,3},{4,5,6,7}}
+%cp = bf16[8,128]{1,0} collective-permute(%r), channel_id=7, source_target_pairs={{0,1},{1,0}}
+%ard = f32[4]{0} all-reduce-done(%ars)
+"""
+
+
+def test_parse_counts_and_groups():
+    colls = hlo.parse_collectives(SAMPLE)
+    ops = sorted(c.op for c in colls)
+    assert ops == ["all-gather", "all-reduce", "all-to-all",
+                   "collective-permute", "reduce-scatter"]
+    by = {c.op: c for c in colls}
+    assert by["all-reduce"].group_size == 16
+    assert by["all-gather"].group_size == 16
+    assert by["all-to-all"].group_size == 4
+
+
+def test_wire_byte_formulas():
+    colls = {c.op: c for c in hlo.parse_collectives(SAMPLE)}
+    ar = colls["all-reduce"]
+    assert ar.bytes_payload == 16 * 4096 * 2048 * 4
+    assert ar.wire_bytes == pytest.approx(2 * ar.bytes_payload * 15 / 16)
+    ag = colls["all-gather"]
+    assert ag.wire_bytes == pytest.approx(ag.bytes_payload * 15 / 16)
+    rs = colls["reduce-scatter"]
+    assert rs.wire_bytes == pytest.approx(rs.bytes_payload * 15)
+    a2a = colls["all-to-all"]
+    assert a2a.bytes_payload == 2 * 16 * 256 * 128 * 4
+    assert a2a.wire_bytes == pytest.approx(a2a.bytes_payload * 3 / 4)
+    cp = colls["collective-permute"]
+    assert cp.wire_bytes == cp.bytes_payload == 8 * 128 * 2
+
+
+def test_summary_totals():
+    s = hlo.summarize(hlo.parse_collectives(SAMPLE))
+    assert s["num_collectives"] == 5
+    assert s["total_wire_bytes"] == pytest.approx(
+        sum(c.wire_bytes for c in hlo.parse_collectives(SAMPLE)))
+
+
+def test_done_ops_not_double_counted():
+    txt = ("%s = f32[8]{0} all-reduce-start(%x), replica_groups=[2,4]<=[8]\n"
+           "%d = f32[8]{0} all-reduce-done(%s)\n")
+    colls = hlo.parse_collectives(txt)
+    assert len(colls) == 1

@@ -1,0 +1,81 @@
+"""Pure (device-free) tests of the logical-axis sharding rules."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding as sh
+
+
+class FakeMesh:
+    """Just enough mesh for Rules (axis sizes + names)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def rules(table, mesh_shape):
+    r = sh.Rules(table=dict(table), mesh=None)
+    r.mesh = FakeMesh(mesh_shape)
+    return r
+
+
+BASE = {"batch": "data", "heads": "model", "mlp": "model",
+        "seq": "model", "expert": ("pool",), "wide": ("pool", "intra")}
+MESH = {"data": 16, "model": 16, "pool": 4, "intra": 4}
+
+
+def test_basic_spec():
+    r = rules(BASE, MESH)
+    assert r.spec_for(("batch", None, "mlp"), (256, 128, 4096)) == \
+        P("data", None, "model")
+
+
+def test_axis_used_once_first_dim_wins():
+    r = rules(BASE, MESH)
+    # seq and heads both want "model": first dim keeps it
+    spec = r.spec_for(("batch", "seq", "heads", None), (256, 4096, 32, 128))
+    assert spec == P("data", "model")
+
+
+def test_partial_tuple_reduction():
+    r = rules(BASE, MESH)
+    # expert takes "pool"; the wide axis keeps the leftover "intra"
+    spec = r.spec_for(("expert", None, "wide"), (8, 64, 4096))
+    assert spec == P("pool", None, "intra")
+
+
+def test_divisibility_fallback():
+    r = rules(BASE, MESH)
+    spec = r.spec_for(("batch", "heads"), (256, 8))  # 8 % 16 != 0
+    assert spec == P("data")
+    assert any("heads" in f for f in r.fallbacks)
+
+
+def test_tuple_prefix_shrinks_on_divisibility():
+    r = rules({"wide": ("pool", "intra")}, MESH)
+    # 8 % 16 != 0 but 8 % 4 == 0 -> keep the ("pool",) prefix
+    spec = r.spec_for(("wide",), (8,))
+    assert spec == P("pool")
+
+
+@given(st.lists(st.sampled_from([None, "batch", "heads", "mlp", "seq",
+                                 "expert", "wide"]),
+                min_size=1, max_size=5),
+       st.lists(st.integers(1, 512), min_size=1, max_size=5))
+@settings(max_examples=200, deadline=None)
+def test_spec_never_reuses_axis(axes, dims):
+    dims = (dims * 5)[: len(axes)]
+    r = rules(BASE, MESH)
+    spec = r.spec_for(tuple(axes), tuple(dims))
+    used = []
+    for e in spec:
+        if e is None:
+            continue
+        used.extend(e if isinstance(e, tuple) else (e,))
+    assert len(used) == len(set(used)), (axes, dims, spec)
+    # every sharded dim must be divisible by its axis product
+    for dim, e in zip(dims, tuple(spec) + (None,) * len(dims)):
+        if e is not None:
+            assert dim % r.mesh_size(e) == 0
