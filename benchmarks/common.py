@@ -1,11 +1,15 @@
-"""Shared benchmark helpers: timing, CSV output."""
+"""Shared benchmark helpers: timing, CSV output, JSON trajectories."""
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List
 
 import jax
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -23,3 +27,26 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_bench_json(filename: str, record: Dict) -> pathlib.Path:
+    """Append ``record`` (stamped with wall time) to a repo-root trajectory
+    file ``{"runs": [...]}`` so successive PRs accumulate a perf history."""
+    path = REPO_ROOT / filename
+    data = {"runs": []}
+    if path.exists():
+        loaded = None
+        try:
+            loaded = json.loads(path.read_text())
+        except (ValueError, OSError):
+            pass
+        if isinstance(loaded, dict) and \
+                isinstance(loaded.get("runs", []), list):
+            data = loaded
+        else:   # preserve the trajectory history, never clobber it
+            bak = path.with_suffix(".corrupt")
+            path.rename(bak)
+            print(f"# {path.name} unreadable; preserved as {bak.name}")
+    data.setdefault("runs", []).append({"ts": time.time(), **record})
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    return path

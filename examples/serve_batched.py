@@ -1,6 +1,6 @@
-"""Batched serving with continuous batching: 8 requests through 4 cache
-slots of a reduced rwkv6 (O(1)-state decode), plus a prefill/decode
-consistency check.
+"""Batched serving on the sync-free fast path: 8 ragged requests through
+4 cache slots of a reduced rwkv6 (O(1)-state decode), plus a
+prefill/decode consistency check and a temperature/top-k sampling demo.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -9,10 +9,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.models import forward_prefill, forward_train, model_defs
+from repro.models import forward_prefill, model_defs
 from repro.models import module as m
 from repro.serve.engine import Engine, Request
 
@@ -22,10 +21,12 @@ def main() -> None:
     params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
     eng = Engine(cfg, params, slots=4, max_len=64)
+    eng.warmup()   # pre-compile prefill buckets + fused decode chunk
     t0 = time.perf_counter()
     for i in range(8):
+        # ragged prompt lengths exercise the power-of-two prefill buckets
         eng.submit(Request(rid=i, prompt=[(7 * i + j) % cfg.vocab_size
-                                          for j in range(5)],
+                                          for j in range(3 + i)],
                            max_new_tokens=10))
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -33,12 +34,13 @@ def main() -> None:
         print(f"req {r.rid}: {r.out_tokens}")
     toks = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests / {toks} tokens in {dt:.2f}s "
-          f"({eng.steps} batched decode steps, "
-          f"{toks / max(eng.steps, 1):.1f} tokens per step)")
+          f"({eng.steps} batched decode steps, {eng.host_syncs} host "
+          f"syncs, {eng.prefill_compiles} prefill compiles for "
+          f"{len(set(len(r.prompt) for r in done))} prompt lengths)")
     assert len(done) == 8 and all(len(r.out_tokens) == 10 for r in done)
 
     # consistency: greedy continuation from the engine matches teacher-forced
-    # logits from a fresh prefill of prompt+generated tokens
+    # logits from a fresh unpadded prefill of prompt+generated tokens
     r0 = done[0]
     full = r0.prompt + r0.out_tokens[:-1]
     logits, _ = jax.jit(lambda p, b: forward_prefill(p, cfg, b))(
@@ -46,6 +48,17 @@ def main() -> None:
     nxt = int(jnp.argmax(logits[0]))
     assert nxt == r0.out_tokens[-1], (nxt, r0.out_tokens[-1])
     print("prefill/decode consistency check passed")
+
+    # non-greedy: on-device temperature + top-k sampling, seeded PRNG
+    eng2 = Engine(cfg, params, slots=2, max_len=64, greedy=False,
+                  temperature=1.0, top_k=8, seed=7)
+    for i in range(4):
+        eng2.submit(Request(rid=i, prompt=[5, 6, 7], max_new_tokens=8))
+    sampled = eng2.run()
+    assert len(sampled) == 4 and all(len(r.out_tokens) == 8 for r in sampled)
+    outs = {tuple(r.out_tokens) for r in sampled}
+    print(f"sampled {len(outs)} distinct continuations from 4 identical "
+          f"prompts (temperature=1.0, top_k=8)")
 
 
 if __name__ == "__main__":

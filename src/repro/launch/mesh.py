@@ -16,17 +16,31 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType / axis_types= landed after jax 0.4.37; run without it there
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
 
 
 def _auto(n: int):
-    return (AxisType.Auto,) * n
+    return (AxisType.Auto,) * n if AxisType is not None else None
+
+
+def _make_mesh(shape, axes):
+    at = _auto(len(axes))
+    if at is None:
+        return jax.make_mesh(shape, axes)
+    try:
+        return jax.make_mesh(shape, axes, axis_types=at)
+    except TypeError:  # pragma: no cover - older make_mesh signature
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_tuned_mesh(pools: int, *, multi_pod: bool = False,
@@ -36,11 +50,9 @@ def make_tuned_mesh(pools: int, *, multi_pod: bool = False,
     assert model_axis % pools == 0, (model_axis, pools)
     intra = model_axis // pools
     if multi_pod:
-        return jax.make_mesh((2, data_axis, pools, intra),
-                             ("pod", "data", "pool", "intra"),
-                             axis_types=_auto(4))
-    return jax.make_mesh((data_axis, pools, intra),
-                         ("data", "pool", "intra"), axis_types=_auto(3))
+        return _make_mesh((2, data_axis, pools, intra),
+                          ("pod", "data", "pool", "intra"))
+    return _make_mesh((data_axis, pools, intra), ("data", "pool", "intra"))
 
 
 def mesh_for_plan(plan, *, multi_pod: bool = False, factored: bool = False):

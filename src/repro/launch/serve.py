@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke \
         --requests 6 --max-new 12
+
+``--warmup`` pre-compiles every prefill bucket, the jitted cache splice,
+and the fused decode chunk before the first request arrives, so the
+serving loop never pays a compile (the steady-state loop then runs one
+dispatch per ``--sync-interval`` decode steps with zero per-token host
+syncs — see docs/serving.md).
 """
 
 import argparse
@@ -15,6 +21,11 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--sync-interval", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile prefill buckets + decode chunk")
     args = ap.parse_args()
 
     import jax
@@ -28,7 +39,15 @@ def main() -> None:
     cfg = reduced(get_config(args.arch))
     params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
-    eng = Engine(cfg, params, slots=args.slots, max_len=64)
+    eng = Engine(cfg, params, slots=args.slots, max_len=64,
+                 temperature=args.temperature, top_k=args.top_k,
+                 sync_interval=args.sync_interval)
+    if args.warmup:
+        t0 = time.perf_counter()
+        eng.warmup()
+        print(f"warmup: {len(eng.buckets)} prefill buckets "
+              f"{eng.buckets} + decode chunk compiled in "
+              f"{time.perf_counter() - t0:.2f}s")
     t0 = time.perf_counter()
     for i in range(args.requests):
         eng.submit(Request(rid=i, prompt=[1 + i, 2, 3, 4 + i % 3],
@@ -39,7 +58,10 @@ def main() -> None:
     for r in sorted(done, key=lambda r: r.rid):
         print(f"req {r.rid}: {r.out_tokens}")
     print(f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, {eng.steps} engine steps)")
+          f"({toks/dt:.1f} tok/s, {eng.steps} engine steps, "
+          f"{eng.host_syncs} host syncs, "
+          f"{eng.prefill_compiles} prefill compiles / "
+          f"{eng.decode_compiles} decode compiles)")
 
 
 if __name__ == "__main__":

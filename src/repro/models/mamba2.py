@@ -59,11 +59,15 @@ def mamba2_defs(cfg: ModelConfig) -> Dict:
 
 
 def _conv(w: jax.Array, b: jax.Array, x: jax.Array,
-          conv_state: Optional[jax.Array], width: int
+          conv_state: Optional[jax.Array], width: int,
+          length: Optional[jax.Array] = None
           ) -> Tuple[jax.Array, jax.Array]:
     """Causal depthwise conv, width taps, via static shifted adds.
 
-    x [B,S,C] -> (y [B,S,C], new_state [B,W-1,C])."""
+    x [B,S,C] -> (y [B,S,C], new_state [B,W-1,C]).  When ``length`` [B] is
+    given (right-padded prefill), the carried state is the last ``W-1``
+    inputs *before* the padding, so decode resumes from the true prompt
+    end rather than from pad garbage."""
     bsz, s, c = x.shape
     if conv_state is None:
         conv_state = jnp.zeros((bsz, width - 1, c), x.dtype)
@@ -71,7 +75,14 @@ def _conv(w: jax.Array, b: jax.Array, x: jax.Array,
     y = b.astype(x.dtype)[None, None]
     for i in range(width):  # static taps
         y = y + full[:, i:i + s] * w[i].astype(x.dtype)
-    new_state = full[:, -(width - 1):]
+    if length is None:
+        new_state = full[:, -(width - 1):]
+    else:
+        # token t sits at full[:, (W-1)+t]; want tokens length-W+1..length-1,
+        # i.e. full[:, length : length+W-1] (length==0 recovers the initial
+        # state slice full[:, :W-1] exactly).
+        idx = length[:, None] + jnp.arange(width - 1)[None, :]
+        new_state = jnp.take_along_axis(full, idx[..., None], axis=1)
     return jax.nn.silu(y), new_state
 
 
@@ -150,8 +161,15 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
 
 
 def apply(params, x: jax.Array, cfg: ModelConfig, *, mode: str = "dense",
-          state: Optional[Dict] = None) -> Tuple[jax.Array, Optional[Dict]]:
-    """x [B,S,d] -> (y [B,S,d], new_state | None)."""
+          state: Optional[Dict] = None,
+          length: Optional[jax.Array] = None
+          ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x [B,S,d] -> (y [B,S,d], new_state | None).
+
+    ``length`` [B] (prefill only): true prompt lengths for right-padded
+    inputs.  Padded steps get dt == 0, i.e. exp(dt*a) == 1 decay and zero
+    input contribution, so the carried SSM state is exactly the state as of
+    position ``length - 1`` while all shapes stay bucket-padded."""
     ssm = cfg.ssm
     d_inner, nheads, n, p = dims(cfg)
     dt_ = x.dtype
@@ -166,9 +184,9 @@ def apply(params, x: jax.Array, cfg: ModelConfig, *, mode: str = "dense",
     cs_x = cs[..., :d_inner] if cs is not None else None
     cs_bc = cs[..., d_inner:] if cs is not None else None
     xs, new_conv_x = _conv(params["conv_w"], params["conv_b"], xs_raw,
-                           cs_x, ssm.conv_width)
+                           cs_x, ssm.conv_width, length)
     bc, new_conv_bc = _conv(params["conv_w_bc"], params["conv_b_bc"], bc_raw,
-                            cs_bc, ssm.conv_width)
+                            cs_bc, ssm.conv_width, length)
     new_conv = jnp.concatenate([new_conv_x, new_conv_bc], axis=-1)
     b_in = bc[..., :n]
     c_in = bc[..., n:]
@@ -178,6 +196,9 @@ def apply(params, x: jax.Array, cfg: ModelConfig, *, mode: str = "dense",
     xh = sh.shard(xh, sh.BATCH, None, sh.HEADS, None)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
                          params["dt_bias"].astype(jnp.float32))
+    if length is not None:
+        smask = jnp.arange(s)[None, :] < length[:, None]        # [B,S]
+        dt = dt * smask[..., None].astype(dt.dtype)
 
     new_state = None
     if mode == "decode":

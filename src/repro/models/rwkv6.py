@@ -151,10 +151,27 @@ def wkv_chunked(r, k, v, lw, u, h0=None):
     return y.astype(r.dtype), h_final
 
 
+def _state_at(x: jax.Array, length: Optional[jax.Array]) -> jax.Array:
+    """Token-shift carry: x at the last *valid* position (right-padded
+    prefill), zeros for empty prompts."""
+    if length is None:
+        return x[:, -1:]
+    idx = jnp.clip(length - 1, 0)[:, None, None]
+    picked = jnp.take_along_axis(x, jnp.broadcast_to(
+        idx, (x.shape[0], 1, x.shape[2])), axis=1)
+    return jnp.where((length > 0)[:, None, None], picked,
+                     jnp.zeros_like(picked))
+
+
 def time_mix(params, x: jax.Array, cfg: ModelConfig, *, mode: str,
-             state: Optional[Dict] = None
+             state: Optional[Dict] = None,
+             length: Optional[jax.Array] = None
              ) -> Tuple[jax.Array, Optional[Dict]]:
-    """x [B,S,d] -> (y, new partial state {"tshift","wkv"})."""
+    """x [B,S,d] -> (y, new partial state {"tshift","wkv"}).
+
+    ``length`` [B] (prefill only): right-padded true lengths.  Padded steps
+    get k == 0 and log-decay 0 (w == 1), so the wkv state passes through
+    them unchanged and the carried state is exact as of ``length - 1``."""
     nh, hd = hdims(cfg)
     b, s, d = x.shape
     dt = x.dtype
@@ -188,6 +205,10 @@ def time_mix(params, x: jax.Array, cfg: ModelConfig, *, mode: str,
     kh = k.reshape(b, s, nh, hd)
     vh = v.reshape(b, s, nh, hd)
     lwh = lw.reshape(b, s, nh, hd)
+    if length is not None:
+        smask = (jnp.arange(s)[None, :] < length[:, None])[..., None, None]
+        kh = kh * smask.astype(kh.dtype)
+        lwh = lwh * smask.astype(lwh.dtype)
     uh = params["bonus_u"].astype(jnp.float32).reshape(nh, hd)
 
     new_state = None
@@ -208,7 +229,7 @@ def time_mix(params, x: jax.Array, cfg: ModelConfig, *, mode: str,
         yh, h_final = wkv_chunked(rh, kh, vh, lwh, uh, h0)
         y = yh.reshape(b, s, d)
         if mode == "prefill":
-            new_state = {"tshift": x[:, -1:], "wkv": h_final}
+            new_state = {"tshift": _state_at(x, length), "wkv": h_final}
 
     y = groupnorm(params["ln_x"], y, nh, eps=64e-5)
     y = y * jax.nn.silu(g)
@@ -217,7 +238,8 @@ def time_mix(params, x: jax.Array, cfg: ModelConfig, *, mode: str,
 
 
 def channel_mix(params, x: jax.Array, cfg: ModelConfig, *, mode: str,
-                state: Optional[Dict] = None
+                state: Optional[Dict] = None,
+                length: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[Dict]]:
     dt = x.dtype
     prev = _token_shift(x, state["cshift"] if state else None)
@@ -229,7 +251,12 @@ def channel_mix(params, x: jax.Array, cfg: ModelConfig, *, mode: str,
     kk = jnp.square(jax.nn.relu(k))
     v = jnp.dot(kk, params["wv"].astype(dt))
     out = jax.nn.sigmoid(jnp.dot(xr, params["wr"].astype(dt))) * v
-    new_state = {"cshift": x[:, -1:]} if mode in ("prefill", "decode") else None
+    if mode == "decode":
+        new_state = {"cshift": x[:, -1:]}
+    elif mode == "prefill":
+        new_state = {"cshift": _state_at(x, length)}
+    else:
+        new_state = None
     return sh.shard(out, sh.BATCH, sh.SEQ, sh.EMBED), new_state
 
 

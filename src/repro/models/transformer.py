@@ -111,9 +111,15 @@ def _apply_block(lp: Dict, shared_params: Optional[List[Dict]], h: jax.Array,
                  h0: jax.Array, cfg: ModelConfig, block: BlockSpec, *,
                  mode: str, positions: jax.Array,
                  cache: Optional[Dict], cache_len: Optional[jax.Array],
-                 enc_kv: Optional[Dict], q_chunk: Optional[int]
+                 enc_kv: Optional[Dict], q_chunk: Optional[int],
+                 length: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Optional[Dict], Dict]:
-    """One decoder layer. Returns (h, new_cache, aux)."""
+    """One decoder layer. Returns (h, new_cache, aux).
+
+    ``length`` [B]: true lengths of right-padded prefill inputs (bucketed
+    prefill).  Attention needs no masking for right padding (causality
+    already hides later positions); the recurrent mixers use it to carry
+    state as of the last valid token."""
     aux: Dict[str, jax.Array] = {}
     new_cache: Optional[Dict] = None
 
@@ -141,10 +147,10 @@ def _apply_block(lp: Dict, shared_params: Optional[List[Dict]], h: jax.Array,
             q_chunk=q_chunk)
     elif block.mixer == MAMBA2:
         y, new_cache = mamba2.apply(lp["mixer"], xn, cfg, mode=mode,
-                                    state=cache)
+                                    state=cache, length=length)
     elif block.mixer == RWKV6:
         y, tm_state = rwkv6.time_mix(lp["mixer"], xn, cfg, mode=mode,
-                                     state=cache)
+                                     state=cache, length=length)
         new_cache = tm_state
     else:
         raise ValueError(block.mixer)
@@ -166,7 +172,7 @@ def _apply_block(lp: Dict, shared_params: Optional[List[Dict]], h: jax.Array,
             aux.update(moe_aux)
         elif block.ffn == FFN_RWKV:
             y, cm_state = rwkv6.channel_mix(lp["ffn"], xn, cfg, mode=mode,
-                                            state=cache)
+                                            state=cache, length=length)
             if cm_state is not None:
                 new_cache = {**(new_cache or {}), **cm_state}
         else:
@@ -178,7 +184,8 @@ def _apply_block(lp: Dict, shared_params: Optional[List[Dict]], h: jax.Array,
 def _decoder(params, cfg: ModelConfig, h: jax.Array, *, mode: str,
              positions: jax.Array, caches: Optional[List],
              cache_len: Optional[jax.Array], enc_kv_list: Optional[List],
-             q_chunk: Optional[int], remat: bool = False
+             q_chunk: Optional[int], remat: bool = False,
+             length: Optional[jax.Array] = None
              ) -> Tuple[jax.Array, Optional[List], Dict]:
     h0 = h
     shared = params.get("shared")
@@ -199,7 +206,7 @@ def _decoder(params, cfg: ModelConfig, h: jax.Array, *, mode: str,
             h, nc, aux = _apply_block(
                 params["layers"][i], shared, h, h0, cfg, block, mode=mode,
                 positions=positions, cache=cache_i, cache_len=cache_len,
-                enc_kv=enc_kv, q_chunk=q_chunk)
+                enc_kv=enc_kv, q_chunk=q_chunk, length=length)
         new_caches.append(nc)
         for k_, v_ in aux.items():
             aux_all[k_] = aux_all.get(k_, 0.0) + v_ / cfg.num_layers
@@ -290,9 +297,16 @@ def forward_dense_logits(params, cfg: ModelConfig, batch: Dict, *,
 
 
 def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
-                    q_chunk: Optional[int] = None
+                    q_chunk: Optional[int] = None,
+                    length: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, Dict]:
-    """Returns (last-token logits [B,vocab], cache pytree)."""
+    """Returns (last-token logits [B,vocab], cache pytree).
+
+    ``length`` [B] int32: true prompt lengths when ``tokens`` is
+    right-padded to a shape bucket.  Logits are taken at position
+    ``length - 1`` and the cache records ``length`` valid tokens, so a
+    small fixed set of padded shapes serves every prompt length with no
+    retrace (serve/engine.py's bucketed prefill)."""
     tokens = batch["tokens"]
     positions = jnp.arange(tokens.shape[1])
     enc_kv_list = None
@@ -302,10 +316,18 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
     h = _embed_with_frontend(params, cfg, tokens, batch.get("frontend"))
     h, caches, _ = _decoder(params, cfg, h, mode="prefill",
                             positions=positions, caches=None, cache_len=None,
-                            enc_kv_list=enc_kv_list, q_chunk=q_chunk)
-    lg = layers.logits(params["embed"], cfg, h[:, -1:])
-    cache = {"layers": caches, "enc_kv": enc_kv_list,
-             "len": jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)}
+                            enc_kv_list=enc_kv_list, q_chunk=q_chunk,
+                            length=length)
+    if length is None:
+        h_last = h[:, -1:]
+        clen = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+    else:
+        idx = jnp.clip(length - 1, 0)[:, None, None]
+        h_last = jnp.take_along_axis(
+            h, jnp.broadcast_to(idx, (h.shape[0], 1, h.shape[2])), axis=1)
+        clen = length.astype(jnp.int32)
+    lg = layers.logits(params["embed"], cfg, h_last)
+    cache = {"layers": caches, "enc_kv": enc_kv_list, "len": clen}
     return lg[:, 0], cache
 
 

@@ -1,3 +1,6 @@
-from repro.serve import engine
+from repro.serve import engine, reference, sampling
+from repro.serve.engine import Engine, Request
+from repro.serve.reference import ReferenceEngine
 
-__all__ = ["engine"]
+__all__ = ["engine", "reference", "sampling", "Engine", "Request",
+           "ReferenceEngine"]

@@ -1,25 +1,47 @@
-"""Batched serving engine: request-level parallelism -> batch dimension
-(paper §2.2.3), with slot-based continuous batching.
+"""Shape-stable, sync-free batched serving engine (paper §2.2.3, Fig. 14).
 
-``BatchScheduler`` keeps B cache slots.  Each engine step decodes one token
-for every live slot; finished slots are refilled from the queue (prefill of
-the newcomer, then its cache rows are spliced into the batch cache).  The
-per-slot ``cache["len"]`` that the model already supports makes ragged
-occupancy free.
+The paper's central measurement is that framework overhead — dispatch,
+scheduling, synchronization — dominates serving once the math is tuned.
+This engine removes all three from the steady-state decode loop:
+
+* **Fused decode chunks.**  ``sync_interval`` decode steps (model forward +
+  on-device sampling + per-slot EOS / max-token bookkeeping) are rolled
+  into ONE compiled ``lax.scan`` computation: one dispatch per chunk, not
+  per token, and zero host<->device synchronization inside it.  Tokens
+  cross to the host as one batched ``[T, slots]`` transfer per chunk.
+* **Shape stability.**  The decode state (token buffer, per-slot lengths,
+  done flags, PRNG key) lives on device with fixed shapes, so exactly one
+  decode executable is ever compiled (``decode_compiles == 1``).
+* **Bucketed prefill.**  Prompts are right-padded to a power-of-two bucket
+  and prefilled with a true-``length`` argument (see
+  ``models/transformer.forward_prefill``), so mixed prompt lengths compile
+  at most ``len(buckets)`` prefill executables instead of one per length.
+* **Jitted splice.**  Admitting a request writes its prefill cache into a
+  batch slot with a single compiled dynamic-update-slice (including the
+  sliding-window ring-buffer gather), replacing the Python ``tree.map`` /
+  ``.at[].set`` dispatch chain.
+* **Donation.**  The batch cache and slot state are donated through the
+  decode chunk and the splice (``donate_argnums``), so steady-state decode
+  allocates no new cache buffers.  Donation is a no-op on CPU backends
+  (JAX does not implement it there); ``donate="auto"`` enables it
+  everywhere else.
+
+``ReferenceEngine`` in ``repro.serve.reference`` preserves the old
+per-token-sync loop as the measurement baseline for
+``benchmarks/fig14_dispatch_overhead.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import (cache_structure, forward_decode, forward_prefill,
-                          model_defs)
+from repro.models import cache_structure, forward_decode, forward_prefill
+from repro.serve import sampling
 
 
 @dataclasses.dataclass
@@ -28,13 +50,41 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    temperature: Optional[float] = None   # None -> engine default
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def empty_batch_cache(cfg: ModelConfig, slots: int, max_len: int):
+    """Zeroed slot-batched decode cache (shared with ReferenceEngine so
+    the equivalence baseline can never diverge structurally)."""
+    struct = cache_structure(cfg, slots, max_len)
+
+    def is_leaf(x):
+        return (isinstance(x, tuple) and len(x) == 2
+                and isinstance(x[0], tuple))
+
+    def mk(leaf):
+        shp, _axes = leaf
+        return jnp.zeros(shp, jnp.float32)
+
+    cache = jax.tree.map(mk, struct, is_leaf=is_leaf)
+    cache["len"] = jnp.zeros((slots,), jnp.int32)
+    cache.pop("enc_kv", None)
+    return cache
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 sync_interval: int = 8, min_bucket: int = 8,
+                 buckets: Optional[List[int]] = None,
+                 donate: Any = "auto"):
         if cfg.cross_attention:
             raise NotImplementedError(
                 "Engine serves decoder-only archs; whisper uses "
@@ -44,111 +94,253 @@ class Engine:
         self.slots = slots
         self.max_len = max_len
         self.greedy = greedy
-        self._prefill = jax.jit(
-            lambda p, b: forward_prefill(p, cfg, b))
-        self._decode = jax.jit(
-            lambda p, t, c: forward_decode(p, cfg, t, c))
+        if temperature > 0.0:
+            self.default_temp = float(temperature)
+        else:
+            self.default_temp = 0.0 if greedy else 1.0
+        self.top_k = int(top_k)
+        self.sync_interval = int(sync_interval)
+        if buckets is None:
+            b, buckets = min_bucket, []
+            while b < _next_pow2(max_len):
+                buckets.append(b)
+                b *= 2
+            buckets.append(b)
+        self.buckets = sorted(set(int(b) for b in buckets))
+        if donate == "auto":
+            donate = jax.default_backend() != "cpu"
+        self._donate = bool(donate)
+
+        self._prefill_fn = jax.jit(self._prefill_impl)
+        # cache+state are donated through the decode chunk and the admit
+        # splice; on CPU JAX has no donation so those stay plain jits.
+        if self._donate:
+            self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(0, 1))
+            self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1, 2))
+        else:
+            self._admit_fn = jax.jit(self._admit_impl)
+            self._chunk_fn = jax.jit(self._chunk_impl)
+
         self._slot_req: List[Optional[Request]] = [None] * slots
+        self._slot_first_tok: List[Optional[jax.Array]] = [None] * slots
         self.cache = self._empty_cache()
+        self.state = sampling.make_slot_state(slots, seed)
+        self._key = jax.random.PRNGKey(seed + 1)
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.steps = 0
+        self.host_syncs = 0
 
     # -------------------------------------------------------------- setup
     def _empty_cache(self):
-        struct = cache_structure(self.cfg, self.slots, self.max_len)
+        return empty_batch_cache(self.cfg, self.slots, self.max_len)
 
-        def is_leaf(x):
-            return (isinstance(x, tuple) and len(x) == 2
-                    and isinstance(x[0], tuple))
+    # ------------------------------------------------------- compiled fns
+    def _prefill_impl(self, params, tokens, length, key, temp):
+        """Padded prefill + on-device first-token sampling.
 
-        def mk(leaf):
-            shp, _axes = leaf
-            return jnp.zeros(shp, jnp.float32)
+        tokens [1, bucket], length [1].  One compile per bucket shape."""
+        batch = {"tokens": tokens}
+        if self.cfg.frontend:
+            k = "frames" if self.cfg.family == "audio" else "frontend"
+            batch[k] = jnp.zeros(
+                (1, self.cfg.frontend_len, self.cfg.d_model), jnp.float32)
+        logits, cache = forward_prefill(params, self.cfg, batch,
+                                        length=length)
+        tok = sampling.sample(logits, key, temperature=temp,
+                              top_k=self.top_k)
+        return tok, cache
 
-        cache = jax.tree.map(mk, struct, is_leaf=is_leaf)
-        cache["len"] = jnp.zeros((self.slots,), jnp.int32)
-        cache.pop("enc_kv", None)
-        return cache
+    @staticmethod
+    def _splice_leaf(big, small, slot, plen):
+        """Write batch-1 prefill leaf ``small`` into row ``slot`` of the
+        batch cache leaf ``big`` with one dynamic-update-slice.
+
+        Attention KV leaves may disagree with the ring size R on the seq
+        axis (-2).  ``small`` shorter than R is placed at its absolute
+        positions (decode writes token t at slot t % R, and t < R here).
+        ``small`` longer than R keeps, for each ring slot r, the *last
+        valid* token t < plen with t ≡ r (mod R) — dtype-preserving and
+        exact even when plen is 0, a multiple of R, or the window is
+        exactly full (the old roll-based splice misplaced those)."""
+        if big is None or small is None:
+            return big
+        if small.shape[1:] != big.shape[1:]:
+            r_size, p_size = big.shape[-2], small.shape[-2]
+            if p_size > r_size:
+                r = jnp.arange(r_size)
+                t = plen - 1 - ((plen - 1 - r) % r_size)
+                t = jnp.clip(t, 0, p_size - 1)
+                small = jnp.take(small, t, axis=-2)
+            else:
+                pad = [(0, 0)] * small.ndim
+                pad[-2] = (0, r_size - p_size)
+                small = jnp.pad(small, pad)
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=0)
+
+    def _admit_impl(self, cache, state, one_cache, slot, plen, first_tok,
+                    max_new, eos, temp, active):
+        """Jitted admission: splice the prefill cache into ``slot`` and
+        initialize its device-side bookkeeping.  One compile per prefill
+        bucket (the one_cache seq dim); everything else is traced."""
+        layers = jax.tree.map(
+            lambda b, s: self._splice_leaf(b, s, slot, plen),
+            cache["layers"], one_cache["layers"],
+            is_leaf=lambda x: x is None)
+        new_cache = dict(cache)
+        new_cache["layers"] = layers
+        new_cache["len"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["len"], plen[None].astype(jnp.int32), slot, axis=0)
+        st = dict(state)
+        st["tokens"] = state["tokens"].at[slot].set(first_tok)
+        st["out_len"] = state["out_len"].at[slot].set(1)
+        st["max_new"] = state["max_new"].at[slot].set(max_new)
+        st["eos"] = state["eos"].at[slot].set(eos)
+        st["temp"] = state["temp"].at[slot].set(temp)
+        st["active"] = state["active"].at[slot].set(active)
+        return new_cache, st
+
+    def _chunk_impl(self, params, cache, state):
+        """``sync_interval`` fused decode steps: forward + sample + slot
+        bookkeeping, all on device.  Returns the [T, slots] token history
+        (-1 where a slot was idle) — the only thing the host ever reads."""
+        def body(carry, _):
+            cache, state = carry
+            logits, cache = forward_decode(
+                params, self.cfg, state["tokens"][:, None], cache)
+            cache.pop("enc_kv", None)   # decoder-only: keep carry structure
+            key, sub = jax.random.split(state["key"])
+            nxt = sampling.sample(logits, sub, temperature=state["temp"],
+                                  top_k=self.top_k)
+            state, emitted = sampling.decode_update(state, nxt, key)
+            return (cache, state), emitted
+
+        (cache, state), toks = jax.lax.scan(
+            body, (cache, state), None, length=self.sync_interval)
+        return toks, cache, state
+
+    # ---------------------------------------------------------- telemetry
+    @property
+    def prefill_compiles(self) -> int:
+        return self._prefill_fn._cache_size()
+
+    @property
+    def decode_compiles(self) -> int:
+        return self._chunk_fn._cache_size()
 
     # ------------------------------------------------------------ serving
     def submit(self, req: Request) -> None:
+        # validate HERE, where the caller can handle it: raising mid-run()
+        # would drop the request and strand in-flight slots
+        if len(req.prompt) > self.max_len \
+                and not self.cfg.supports_long_context:
+            # full-attention KV rows are capped at max_len; splicing a
+            # longer prompt would silently mod-wrap it like a ring
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds "
+                f"max_len={self.max_len} and {self.cfg.name} has "
+                f"non-windowed attention; raise max_len")
         self.queue.append(req)
 
-    def _splice(self, slot: int, one_cache) -> None:
-        """Copy a batch-1 prefill cache into slot ``slot``."""
-        plen = int(one_cache["len"][0])
+    def bucket_for(self, plen: int) -> int:
+        for b in self.buckets:
+            if b >= plen:
+                return b
+        b = _next_pow2(max(plen, 1))
+        self.buckets.append(b)   # keep the ≤ len(buckets) compile invariant
+        self.buckets.sort()
+        return b
 
-        def sp(big, small):
-            if big is None or small is None:
-                return big
-            if small.shape != big[slot:slot + 1].shape:
-                size = big.shape[-2]
-                if small.shape[-2] > size:
-                    # windowed ring buffer: keep the last `size` tokens and
-                    # roll so token t sits at slot t % size (the decode
-                    # write rule), keeping ring overwrites oldest-first.
-                    small = small[..., -size:, :]
-                    small = jnp.roll(small, plen % size, axis=-2)
-                else:
-                    pad = [(0, 0)] * small.ndim
-                    pad[-2] = (0, size - small.shape[-2])
-                    small = jnp.pad(small, pad)
-            return big.at[slot:slot + 1].set(small.astype(big.dtype))
+    def warmup(self) -> None:
+        """Pre-compile every prefill bucket, the splice, and the decode
+        chunk so serving never pays a compile inside the hot loop.
+        Semantically inert: the PRNG key is restored afterwards, so seeded
+        sampled runs are identical with or without warmup."""
+        key_before = jnp.array(self.state["key"])   # copy: state is donated
+        for b in self.buckets:
+            tokens = jnp.zeros((1, b), jnp.int32)
+            length = jnp.zeros((1,), jnp.int32)
+            key = jax.random.PRNGKey(0)
+            temp = jnp.zeros((1,), jnp.float32)
+            tok, one_cache = self._prefill_fn(
+                self.params, tokens, length, key, temp)
+            # active=False: compiles the splice without touching live slots
+            self.cache, self.state = self._admit_fn(
+                self.cache, self.state, one_cache, 0, jnp.int32(0), tok[0],
+                jnp.int32(0), jnp.int32(-1), jnp.float32(0.0), False)
+        _, self.cache, self.state = self._chunk_fn(
+            self.params, self.cache, self.state)
+        self.state = dict(self.state, key=key_before)
 
-        self.cache["layers"] = jax.tree.map(
-            sp, self.cache["layers"], one_cache["layers"],
-            is_leaf=lambda x: x is None)
-        self.cache["len"] = self.cache["len"].at[slot].set(
-            int(one_cache["len"][0]))
+    def _req_temp(self, req: Request) -> float:
+        if req.temperature is not None:
+            return float(req.temperature)
+        return self.default_temp
 
     def _admit(self) -> None:
         for slot in range(self.slots):
             if self._slot_req[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
-            prompt = jnp.asarray([req.prompt], jnp.int32)
-            batch = {"tokens": prompt}
-            if self.cfg.frontend:
-                key = "frames" if self.cfg.family == "audio" else "frontend"
-                batch[key] = jnp.zeros(
-                    (1, self.cfg.frontend_len, self.cfg.d_model), jnp.float32)
-            logits, one_cache = self._prefill(self.params, batch)
-            tok = self._sample(logits)[0]
-            req.out_tokens.append(int(tok))
+            plen = len(req.prompt)
+            bucket = self.bucket_for(plen)
+            padded = list(req.prompt) + [0] * (bucket - plen)
+            tokens = jnp.asarray([padded], jnp.int32)
+            length = jnp.asarray([plen], jnp.int32)
+            self._key, sub = jax.random.split(self._key)
+            temp = jnp.asarray([self._req_temp(req)], jnp.float32)
+            tok, one_cache = self._prefill_fn(
+                self.params, tokens, length, sub, temp)
+            eos = -1 if req.eos_id is None else int(req.eos_id)
+            self.cache, self.state = self._admit_fn(
+                self.cache, self.state, one_cache, slot, jnp.int32(plen),
+                tok[0], jnp.int32(req.max_new_tokens), jnp.int32(eos),
+                jnp.float32(self._req_temp(req)), True)
             self._slot_req[slot] = req
-            self._splice(slot, one_cache)
+            self._slot_first_tok[slot] = tok   # stays on device until drain
 
-    def _sample(self, logits: jax.Array) -> np.ndarray:
-        if self.greedy:
-            return np.asarray(jnp.argmax(logits, axis=-1))
-        raise NotImplementedError
+    def step_chunk(self) -> jax.Array:
+        """Dispatch one fused decode chunk.  No host synchronization —
+        safe to call under ``jax.transfer_guard_device_to_host``."""
+        toks, self.cache, self.state = self._chunk_fn(
+            self.params, self.cache, self.state)
+        self.steps += self.sync_interval
+        return toks
 
-    def step(self) -> None:
-        self._admit()
-        live = [i for i, r in enumerate(self._slot_req) if r is not None]
-        if not live:
-            return
-        tokens = np.zeros((self.slots, 1), np.int32)
-        for i in live:
-            tokens[i, 0] = self._slot_req[i].out_tokens[-1]
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tokens), self.cache)
-        nxt = self._sample(logits)
-        self.steps += 1
-        for i in live:
-            req = self._slot_req[i]
-            req.out_tokens.append(int(nxt[i]))
-            hit_eos = (req.eos_id is not None
-                       and req.out_tokens[-1] == req.eos_id)
-            if len(req.out_tokens) >= req.max_new_tokens or hit_eos:
+    def _drain(self, toks: jax.Array) -> None:
+        """One batched device->host transfer: token history + slot state."""
+        toks_np, out_len, active, firsts = jax.device_get(
+            (toks, self.state["out_len"], self.state["active"],
+             [self._slot_first_tok[i] for i in range(self.slots)]))
+        self.host_syncs += 1
+        for slot in range(self.slots):
+            req = self._slot_req[slot]
+            if req is None:
+                continue
+            if not req.out_tokens:          # prefill-sampled first token
+                req.out_tokens.append(int(firsts[slot][0]))
+            k = int(out_len[slot]) - len(req.out_tokens)
+            for i in range(k):
+                req.out_tokens.append(int(toks_np[i, slot]))
+            if not active[slot]:
                 req.done = True
                 self.finished.append(req)
-                self._slot_req[i] = None
-                self.cache["len"] = self.cache["len"].at[i].set(0)
+                self._slot_req[slot] = None
+                self._slot_first_tok[slot] = None
+
+    def _live(self) -> bool:
+        return any(r is not None for r in self._slot_req)
+
+    def step(self) -> None:
+        """One admit + fused-chunk + drain round (``sync_interval`` decode
+        steps per call)."""
+        self._admit()
+        if not self._live():
+            return
+        self._drain(self.step_chunk())
 
     def run(self, max_steps: int = 1000) -> List[Request]:
-        while (self.queue or any(r is not None for r in self._slot_req)) \
-                and self.steps < max_steps:
+        while (self.queue or self._live()) and self.steps < max_steps:
             self.step()
         return self.finished

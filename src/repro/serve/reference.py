@@ -1,0 +1,147 @@
+"""Reference (pre-fast-path) serving engine, kept as the measurement
+baseline for ``benchmarks/fig14_dispatch_overhead.py`` and as an oracle for
+engine-equivalence tests.
+
+This is the anti-pattern the paper's §2.2.3 / Fig. 14 analysis warns about,
+preserved deliberately: every decode step round-trips tokens through NumPy
+plus per-slot ``int()`` host syncs, every admitted request retraces the
+prefill jit for its exact prompt length, and the cache splice is a Python
+``tree.map``/``.at[].set`` chain.  ``host_syncs`` counts device->host
+transfers so the benchmark can report the overhead it pays.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_decode, forward_prefill
+from repro.serve.engine import Request, empty_batch_cache
+
+__all__ = ["ReferenceEngine", "Request"]
+
+
+class ReferenceEngine:
+    """Slot-based continuous batching with per-token host synchronization."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        if cfg.cross_attention:
+            raise NotImplementedError(
+                "Engine serves decoder-only archs; whisper uses "
+                "examples/whisper_transcribe.py's direct loop")
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self._prefill = jax.jit(
+            lambda p, b: forward_prefill(p, cfg, b))
+        self._decode = jax.jit(
+            lambda p, t, c: forward_decode(p, cfg, t, c))
+        self._slot_req: List[Optional[Request]] = [None] * slots
+        self.cache = self._empty_cache()
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.steps = 0
+        self.host_syncs = 0
+
+    # -------------------------------------------------------------- setup
+    def _empty_cache(self):
+        return empty_batch_cache(self.cfg, self.slots, self.max_len)
+
+    # ------------------------------------------------------------ serving
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    @property
+    def prefill_compiles(self) -> int:
+        return self._prefill._cache_size()
+
+    @property
+    def decode_compiles(self) -> int:
+        return self._decode._cache_size()
+
+    def _splice(self, slot: int, one_cache) -> None:
+        """Copy a batch-1 prefill cache into slot ``slot``."""
+        plen = int(one_cache["len"][0])
+        self.host_syncs += 1
+
+        def sp(big, small):
+            if big is None or small is None:
+                return big
+            if small.shape != big[slot:slot + 1].shape:
+                size = big.shape[-2]
+                if small.shape[-2] > size:
+                    # windowed ring buffer: keep the last `size` tokens and
+                    # roll so token t sits at slot t % size (the decode
+                    # write rule), keeping ring overwrites oldest-first.
+                    small = small[..., -size:, :]
+                    small = jnp.roll(small, plen % size, axis=-2)
+                else:
+                    pad = [(0, 0)] * small.ndim
+                    pad[-2] = (0, size - small.shape[-2])
+                    small = jnp.pad(small, pad)
+            return big.at[slot:slot + 1].set(small.astype(big.dtype))
+
+        self.cache["layers"] = jax.tree.map(
+            sp, self.cache["layers"], one_cache["layers"],
+            is_leaf=lambda x: x is None)
+        self.cache["len"] = self.cache["len"].at[slot].set(plen)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self._slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray([req.prompt], jnp.int32)
+            batch = {"tokens": prompt}
+            if self.cfg.frontend:
+                key = "frames" if self.cfg.family == "audio" else "frontend"
+                batch[key] = jnp.zeros(
+                    (1, self.cfg.frontend_len, self.cfg.d_model), jnp.float32)
+            logits, one_cache = self._prefill(self.params, batch)
+            tok = self._sample(logits)[0]
+            req.out_tokens.append(int(tok))
+            self.host_syncs += 1
+            self._slot_req[slot] = req
+            self._splice(slot, one_cache)
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        raise NotImplementedError
+
+    def step(self) -> None:
+        self._admit()
+        live = [i for i, r in enumerate(self._slot_req) if r is not None]
+        if not live:
+            return
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i in live:
+            tokens[i, 0] = self._slot_req[i].out_tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache)
+        nxt = self._sample(logits)
+        self.host_syncs += 1
+        self.steps += 1
+        for i in live:
+            req = self._slot_req[i]
+            req.out_tokens.append(int(nxt[i]))
+            hit_eos = (req.eos_id is not None
+                       and req.out_tokens[-1] == req.eos_id)
+            if len(req.out_tokens) >= req.max_new_tokens or hit_eos:
+                req.done = True
+                self.finished.append(req)
+                self._slot_req[i] = None
+                self.cache["len"] = self.cache["len"].at[i].set(0)
+
+    def run(self, max_steps: int = 1000) -> List[Request]:
+        while (self.queue or any(r is not None for r in self._slot_req)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.finished

@@ -1,0 +1,86 @@
+"""On-device token sampling for the serving fast path.
+
+Everything here is shape-stable and jit-friendly: no host round trips, no
+data-dependent shapes.  Greedy vs. stochastic is selected *per slot* with a
+``temperature`` vector (0 == greedy) via ``jnp.where``, so one compiled
+decode step serves mixed greedy/sampled batches.  The PRNG key is threaded
+through the engine's device-side slot state — the host never touches it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, key: jax.Array, *,
+           temperature: jax.Array, top_k: int = 0) -> jax.Array:
+    """Sample next tokens from ``logits`` [B, V] -> [B] int32.
+
+    temperature: [B] float32, 0.0 selects argmax for that row.
+    top_k: static int; 0 disables the top-k filter.  Rows share one key but
+    draw independent categoricals (jax.random.categorical is per-row).
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+    # safe divisor for greedy rows (their sampled value is discarded)
+    safe_t = jnp.where(temperature > 0.0, temperature, 1.0)[:, None]
+    if top_k and top_k < logits.shape[-1]:
+        vals, idx = jax.lax.top_k(logits, top_k)        # [B,K], [B,K]
+        draw = jax.random.categorical(key, vals / safe_t, axis=-1)
+        sampled = jnp.take_along_axis(idx, draw[:, None], axis=-1)[:, 0]
+    else:
+        sampled = jax.random.categorical(key, logits / safe_t, axis=-1)
+    sampled = sampled.astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
+
+
+def make_slot_state(slots: int, seed: int = 0) -> dict:
+    """Device-side per-slot bookkeeping for the fused decode step.
+
+    tokens:   last token fed/emitted per slot (decode input)
+    out_len:  generated tokens so far (incl. the prefill-sampled one)
+    max_new:  generation budget per slot
+    eos:      per-slot EOS id, -1 for none
+    active:   slot is decoding a live request
+    temp:     per-slot sampling temperature (0 == greedy)
+    key:      threaded PRNG key (split inside the compiled step)
+    """
+    zi = jnp.zeros((slots,), jnp.int32)
+    return {
+        "tokens": zi,
+        "out_len": zi,
+        "max_new": zi,
+        "eos": jnp.full((slots,), -1, jnp.int32),
+        "active": jnp.zeros((slots,), bool),
+        "temp": jnp.zeros((slots,), jnp.float32),
+        "key": jax.random.PRNGKey(seed),
+    }
+
+
+def decode_update(state: dict, nxt: jax.Array, new_key: jax.Array) -> tuple:
+    """One step of on-device slot bookkeeping.
+
+    ``nxt`` [B] are freshly sampled tokens.  Returns ``(state', emitted)``
+    where ``emitted`` is ``nxt`` for active slots and -1 elsewhere — the
+    host decodes the batched [T, B] history after the fact, so no per-token
+    sync is needed for EOS/max-token termination.
+    """
+    active = state["active"]
+    out_len = state["out_len"] + active.astype(jnp.int32)
+    hit_eos = active & (nxt == state["eos"])
+    exhausted = out_len >= state["max_new"]
+    done = active & (hit_eos | exhausted)
+    tokens = jnp.where(active, nxt, state["tokens"])
+    emitted = jnp.where(active, nxt, -1)
+    new_state = {
+        "tokens": tokens,
+        "out_len": out_len,
+        "max_new": state["max_new"],
+        "eos": state["eos"],
+        "active": active & ~done,
+        "temp": state["temp"],
+        "key": new_key,
+    }
+    return new_state, emitted

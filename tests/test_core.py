@@ -1,6 +1,10 @@
 """Graph/width/tuner/cost-model tests, incl. hypothesis property tests on
 the system's invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, do not error
+
 import hypothesis.strategies as st
 import pytest
 from hypothesis import given, settings

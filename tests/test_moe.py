@@ -3,6 +3,10 @@ numerics; the sharded version is exercised in test_distribution.py)."""
 
 import dataclasses
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, do not error
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

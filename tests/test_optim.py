@@ -1,5 +1,9 @@
 """AdamW + int8 second moment + schedules."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, do not error
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

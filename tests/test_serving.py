@@ -1,4 +1,5 @@
-"""Serving engine: continuous batching, ring buffers, request lifecycle."""
+"""Serving engine: continuous batching, ring buffers, request lifecycle,
+bucketed prefill, retrace/sync regression guards."""
 
 import jax
 import jax.numpy as jnp
@@ -6,15 +7,21 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
-from repro.models import (forward_dense_logits, model_defs)
+from repro.models import (forward_dense_logits, forward_prefill, model_defs)
 from repro.models import module as m
 from repro.serve.engine import Engine, Request
+from repro.serve.reference import ReferenceEngine
 
 
-def _engine(arch, slots=3, max_len=64, **kw):
+def _model(arch, **kw):
     cfg = reduced(get_config(arch), **kw)
     params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
+    return cfg, params
+
+
+def _engine(arch, slots=3, max_len=64, **kw):
+    cfg, params = _model(arch, **kw)
     return cfg, params, Engine(cfg, params, slots=slots, max_len=max_len)
 
 
@@ -68,3 +75,193 @@ def test_eos_terminates():
     eng2.submit(Request(rid=1, prompt=[2, 3], max_new_tokens=8, eos_id=eos))
     (r,) = eng2.run()
     assert r.out_tokens[-1] == eos and len(r.out_tokens) == 3
+
+
+# ---------------------------------------------------------------------------
+# Fast-path regression suite: ragged batching, bucketed prefill, retraces
+# ---------------------------------------------------------------------------
+
+def test_ragged_continuous_batching_staggered():
+    """Mixed prompt lengths AND generation budgets: slots free and refill
+    at different chunk boundaries; every request still completes with
+    exactly its budget (no EOS set)."""
+    cfg, params, eng = _engine("internlm2-1.8b", slots=2)
+    budgets = [3, 9, 5, 14, 7, 4, 11]
+    for i, mn in enumerate(budgets):
+        plen = 1 + (3 * i) % 9
+        eng.submit(Request(rid=i, prompt=[(2 * i + j) % cfg.vocab_size
+                                          for j in range(plen)],
+                           max_new_tokens=mn))
+    done = eng.run()
+    assert len(done) == len(budgets)
+    by_rid = {r.rid: r for r in done}
+    for i, mn in enumerate(budgets):
+        assert len(by_rid[i].out_tokens) == mn, (i, by_rid[i].out_tokens)
+        assert all(0 <= t < cfg.vocab_size for t in by_rid[i].out_tokens)
+
+
+def test_engine_matches_reference_engine():
+    """Token-for-token parity with the pre-fast-path engine (greedy)."""
+    cfg, params = _model("gemma2-2b")
+    eng = Engine(cfg, params, slots=2, max_len=64)
+    ref = ReferenceEngine(cfg, params, slots=2, max_len=64)
+    for i in range(5):
+        plen = 2 + (4 * i) % 7
+        prompt = [(5 * i + j) % cfg.vocab_size for j in range(plen)]
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=5 + i % 3))
+        ref.submit(Request(rid=i, prompt=prompt, max_new_tokens=5 + i % 3))
+    em = {r.rid: r.out_tokens for r in eng.run()}
+    rm = {r.rid: r.out_tokens for r in ref.run()}
+    assert em == rm
+
+
+def test_empty_prompt_no_stale_slot():
+    """plen == 0 admits cleanly (fresh state, len 0) and generates."""
+    cfg, params, eng = _engine("rwkv6-7b", slots=2)
+    eng.submit(Request(rid=0, prompt=[], max_new_tokens=4))
+    eng.submit(Request(rid=1, prompt=[4, 5, 6], max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 2
+    assert all(len(r.out_tokens) == 4 for r in done)
+    # the non-empty request must be unaffected by its neighbour: compare
+    # against a solo run
+    cfg2, params2, solo = _engine("rwkv6-7b", slots=2)
+    solo.submit(Request(rid=1, prompt=[4, 5, 6], max_new_tokens=4))
+    (s,) = solo.run()
+    assert s.out_tokens == next(r for r in done if r.rid == 1).out_tokens
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "rwkv6-7b", "gemma2-2b",
+                                  "zamba2-7b"])
+def test_bucketed_prefill_matches_unpadded(arch):
+    """Right-padding a prompt to a bucket with a true ``length`` argument
+    must reproduce the unpadded prefill: last-token logits and every
+    carried state (KV rows, SSM/wkv states, token shifts) within fp32
+    tolerance.  Pad token is deliberately != 0 to prove masking."""
+    cfg, params = _model(arch)
+    prompt = [3, 1, 4, 1, 5]
+    plen, bucket = len(prompt), 16
+
+    @jax.jit
+    def fn(toks, length):
+        return forward_prefill(params, cfg, {"tokens": toks}, length=length)
+
+    logits_u, cache_u = fn(jnp.asarray([prompt], jnp.int32), None)
+    padded = prompt + [9] * (bucket - plen)
+    logits_p, cache_p = fn(jnp.asarray([padded], jnp.int32),
+                           jnp.asarray([plen], jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_u), np.asarray(logits_p),
+                               atol=1e-4, rtol=1e-4)
+    assert int(cache_p["len"][0]) == plen
+    for lu, lp in zip(cache_u["layers"], cache_p["layers"]):
+        if lu is None:
+            continue
+        for k in lu:
+            u, p = np.asarray(lu[k]), np.asarray(lp[k])
+            if u.shape != p.shape:        # attention KV: seq axis padded
+                p = p[..., :u.shape[-2], :]
+            np.testing.assert_allclose(u, p, atol=1e-4, rtol=1e-4,
+                                       err_msg=f"{arch} state {k}")
+
+
+def test_prefill_retrace_bounded_by_buckets():
+    """Mixed prompt lengths compile at most len(buckets) prefill
+    executables and exactly one decode executable."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=3, max_len=64)
+    lengths = [1, 2, 3, 5, 7, 8, 9, 11, 13, 4, 6, 12]
+    for i, plen in enumerate(lengths):
+        eng.submit(Request(rid=i, prompt=[(i + j) % cfg.vocab_size
+                                          for j in range(plen)],
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == len(lengths)
+    assert eng.prefill_compiles <= len(eng.buckets), (
+        eng.prefill_compiles, eng.buckets)
+    assert eng.prefill_compiles == 2       # lengths 1..8 -> 8, 9..13 -> 16
+    assert eng.decode_compiles == 1
+
+
+def test_overlong_prompt_rejected_for_full_attention():
+    """Full-attention caches cap at max_len; a longer prompt must fail
+    loudly instead of silently mod-wrapping into the KV rows."""
+    cfg, params = _model("internlm2-1.8b")   # non-windowed attention
+    eng = Engine(cfg, params, slots=1, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        # raises at submit(), before anything is in flight
+        eng.submit(Request(rid=0, prompt=list(range(1, 21)),
+                           max_new_tokens=2))
+    assert not eng.queue
+
+
+def test_steady_state_decode_is_sync_free():
+    """A fused decode chunk dispatch performs zero device->host transfers.
+    The guard raises on any sync on accelerator backends (on CPU d2h is
+    zero-copy so it cannot fire); the host_syncs accounting below is the
+    backend-independent check."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=32))
+    eng.submit(Request(rid=1, prompt=[4, 5], max_new_tokens=32))
+    eng._admit()
+    with jax.transfer_guard_device_to_host("disallow"):
+        toks = eng.step_chunk()
+        toks2 = eng.step_chunk()
+    eng._drain(jnp.concatenate([toks, toks2]))   # un-drained history so far
+    reqs = [r for r in eng._slot_req if r is not None]
+    assert len(reqs) == 2
+    assert all(len(r.out_tokens) == 1 + 2 * eng.sync_interval for r in reqs)
+    # 2 chunks of decode, exactly 1 batched host sync to read them back
+    assert eng.host_syncs == 1 and eng.steps == 2 * eng.sync_interval
+
+
+def test_warmup_precompiles_and_stays_inert():
+    """warmup() compiles every bucket + the decode chunk without
+    activating slots, and later serving adds no new compiles for bucketed
+    lengths."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64)
+    eng.warmup()
+    n_prefill, n_decode = eng.prefill_compiles, eng.decode_compiles
+    assert n_prefill == len(eng.buckets) and n_decode == 1
+    assert not bool(np.asarray(eng.state["active"]).any())
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[1 + i] * (2 + 7 * i),
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 3
+    assert eng.prefill_compiles == n_prefill
+    assert eng.decode_compiles == n_decode
+
+
+def test_warmup_preserves_sampling_reproducibility():
+    """Seeded sampled runs are identical with and without warmup (the
+    warmup chunk restores the threaded PRNG key)."""
+    cfg, params = _model("internlm2-1.8b")
+    outs = []
+    for do_warmup in (False, True):
+        eng = Engine(cfg, params, slots=2, max_len=64, temperature=1.0,
+                     seed=3)
+        if do_warmup:
+            eng.warmup()
+        eng.submit(Request(rid=0, prompt=[7, 8, 9], max_new_tokens=6))
+        (r,) = eng.run()
+        outs.append(r.out_tokens)
+    assert outs[0] == outs[1]
+
+
+def test_per_request_temperature_mixed_batch():
+    """Greedy and sampled requests share one compiled decode step."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64)
+    eng.submit(Request(rid=0, prompt=[2, 3], max_new_tokens=6))
+    eng.submit(Request(rid=1, prompt=[2, 3], max_new_tokens=6,
+                       temperature=2.0))
+    done = {r.rid: r for r in eng.run()}
+    # greedy slot must match a solo greedy run exactly
+    cfg2, params2, solo = _engine("internlm2-1.8b", slots=2)
+    solo.submit(Request(rid=0, prompt=[2, 3], max_new_tokens=6))
+    (s,) = solo.run()
+    assert done[0].out_tokens == s.out_tokens
+    assert len(done[1].out_tokens) == 6
+    assert eng.decode_compiles == 1

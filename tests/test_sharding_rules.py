@@ -1,5 +1,9 @@
 """Pure (device-free) tests of the logical-axis sharding rules."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, do not error
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
