@@ -1,0 +1,84 @@
+"""CI gate over the BENCH_serve.json trajectory.
+
+Compares the newest run (appended by ``benchmarks/fig14_dispatch_overhead``
+in the same CI job) against the committed baseline run and fails when:
+
+* ``decode_sync_free`` regressed — the fused decode chunk performed a
+  device->host transfer, i.e. the paper-motivated sync-free property broke;
+* tokens/sec dropped more than ``--threshold`` (default 25%) vs the
+  baseline.  CI machines differ from the machine that committed the
+  baseline, so the comparison is machine-normalized: both runs also
+  measure the *same* ``ReferenceEngine`` workload, and the candidate's
+  expected tokens/sec is the baseline's scaled by the observed
+  reference-engine speed ratio::
+
+      expected = base.new_tokens_per_s * (cand.ref_tokens_per_s /
+                                          base.ref_tokens_per_s)
+
+  so a uniformly slower CI runner does not trip the gate, while a real
+  fast-path regression (fused engine slower *relative to* the reference)
+  does.
+
+Usage:  python -m benchmarks.check_serve_regression [--threshold 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.common import REPO_ROOT
+
+
+def check(runs, threshold: float) -> int:
+    if len(runs) < 2:
+        print("check_serve_regression: need a committed baseline run plus "
+              "a fresh candidate run; got "
+              f"{len(runs)} run(s) — nothing to compare")
+        return 1
+    base, cand = runs[-2], runs[-1]
+    failures = []
+
+    if not cand.get("decode_sync_free", False):
+        failures.append("decode_sync_free regressed: the fused decode "
+                        "chunk performed a device->host transfer")
+
+    ref_scale = cand["ref_tokens_per_s"] / base["ref_tokens_per_s"]
+    expected = base["new_tokens_per_s"] * ref_scale
+    floor = (1.0 - threshold) * expected
+    print(f"baseline new_tokens_per_s={base['new_tokens_per_s']:.0f} "
+          f"(machine scale x{ref_scale:.2f} -> expected {expected:.0f})")
+    print(f"candidate new_tokens_per_s={cand['new_tokens_per_s']:.0f} "
+          f"(floor {floor:.0f} at threshold {threshold:.0%})")
+    if cand["new_tokens_per_s"] < floor:
+        failures.append(
+            f"tokens/sec dropped >{threshold:.0%}: "
+            f"{cand['new_tokens_per_s']:.0f} < {floor:.0f}")
+
+    if cand.get("new_decode_compiles", 1) != 1:
+        failures.append("decode executable count != 1: the shape-stable "
+                        "chunk retraced "
+                        f"({cand.get('new_decode_compiles')} compiles)")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    print("serve bench OK: sync-free, single decode executable, "
+          "tokens/sec within threshold")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional tokens/sec drop")
+    ap.add_argument("--file", default="BENCH_serve.json")
+    args = ap.parse_args()
+    data = json.loads((REPO_ROOT / args.file).read_text())
+    sys.exit(check(data.get("runs", []), args.threshold))
+
+
+if __name__ == "__main__":
+    main()

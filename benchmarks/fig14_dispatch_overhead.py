@@ -46,7 +46,7 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     from repro.configs import get_config, reduced
     from repro.models import model_defs
     from repro.models import module as m
-    from repro.serve.engine import Engine
+    from repro.serve.engine import Engine, Request
     from repro.serve.reference import ReferenceEngine
 
     cfg = reduced(get_config("internlm2-1.8b"))
@@ -76,6 +76,15 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     eng = Engine(cfg, params, slots=4, max_len=64, sync_interval=16)
     eng.warmup()                                  # compile caches
     _serve_workload(eng, n_req, max_new)          # host-path warm, like ref
+
+    # paged-cache memory telemetry: sample bytes/live-token mid-flight
+    # (request admitted, pages leased), peak page occupancy at the end
+    eng.submit(Request(rid=10_000, prompt=[1, 2, 3], max_new_tokens=max_new))
+    eng._admit()
+    mem_live = eng.memory_stats()
+    eng.run(max_steps=100_000)
+    eng.finished = []
+
     eng_tps, eng_sps, eng_syncs = timed_trials(eng)
 
     # steady-state decode is sync-free two ways: (a) the engine's own
@@ -95,6 +104,7 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         eng._drain(toks)
     assert sync_free, "decode chunk performed a device->host transfer"
     assert abs(eng_syncs - 1.0 / eng.sync_interval) < 1e-9, eng_syncs
+    mem_end = eng.memory_stats()
 
     rec = {
         "arch": cfg.name,
@@ -113,6 +123,15 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         "buckets": list(eng.buckets),
         "sync_interval": eng.sync_interval,
         "decode_sync_free": sync_free,
+        # paged-cache memory schema (serve/cache.CacheSpec.memory_stats)
+        "page_size": mem_end["page_size"],
+        "num_pages": mem_end["num_pages"],
+        "peak_pages_in_use": mem_end["peak_pages_in_use"],
+        "hbm_bytes_per_live_token": mem_live["hbm_bytes_per_live_token"],
+        "dense_vs_paged_capacity_ratio":
+            mem_end["dense_vs_paged_capacity_ratio"],
+        "paged_kv_bytes": mem_end["paged_kv_bytes"],
+        "dense_kv_bytes": mem_end["dense_kv_bytes"],
     }
     emit("fig14.engine_ref_steps_per_s", 1e6 / rec["ref_steps_per_s"],
          f"syncs_per_step={rec['ref_host_syncs_per_step']:.2f}")
@@ -121,6 +140,9 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     emit("fig14.engine_speedup", rec["speedup"],
          f"sync_free={sync_free},prefill_compiles="
          f"{rec['new_prefill_compiles']}/{rec['ref_prefill_compiles']}")
+    emit("fig14.paged_kv_mem", rec["hbm_bytes_per_live_token"],
+         f"peak_pages={rec['peak_pages_in_use']}/{rec['num_pages']},"
+         f"dense_vs_paged={rec['dense_vs_paged_capacity_ratio']:.2f}")
     return rec
 
 

@@ -1,0 +1,12 @@
+"""Pallas API version compatibility, shared by every kernel.
+
+pallas renamed ``TPUCompilerParams`` -> ``CompilerParams`` (jax>=0.5);
+alias once here so the same kernel source runs on both toolchains.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+if not hasattr(pltpu, "CompilerParams"):  # pragma: no cover - version compat
+    CompilerParams = pltpu.TPUCompilerParams
+else:
+    CompilerParams = pltpu.CompilerParams

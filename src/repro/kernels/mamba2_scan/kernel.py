@@ -23,6 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
+
 
 def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, hout_ref, state_ref,
             *, q: int, nc: int):
@@ -103,7 +106,7 @@ def mamba2_scan(x: jax.Array, dt: jax.Array, b: jax.Array, c: jax.Array,
             jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, b, c, a)

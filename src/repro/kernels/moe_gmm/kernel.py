@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
+
 
 def _kernel(counts_ref, x_ref, w_ref, o_ref, acc_ref, *, bm: int, nsteps: int,
             use_counts: bool):
@@ -77,7 +80,7 @@ def moe_gmm(x: jax.Array, w: jax.Array,
         out_specs=pl.BlockSpec((1, bm, bn), lambda e_, im, jn, kk: (e_, im, jn)),
         out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -19,6 +19,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
+
 
 def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, hout_ref, state_ref,
             *, q: int, nc: int):
@@ -94,7 +97,7 @@ def rwkv6_wkv(r, k, v, lw, u, *, chunk: int = 16, interpret: bool = False):
             jax.ShapeDtypeStruct((bh, kk, kk), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((kk, kk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, lw, u)

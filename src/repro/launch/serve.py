@@ -21,6 +21,16 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64,
+                    help="logical per-slot token cap (page-table width "
+                         "x page size)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (serve/cache.py paged pools)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="shared KV page budget; default slots*max_len/"
+                         "page_size (the old dense cache's token capacity;"
+                         " windowed archs pay more bytes — see "
+                         "dense/paged ratio in the output)")
     ap.add_argument("--sync-interval", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -39,7 +49,8 @@ def main() -> None:
     cfg = reduced(get_config(args.arch))
     params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
-    eng = Engine(cfg, params, slots=args.slots, max_len=64,
+    eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
+                 page_size=args.page_size, num_pages=args.num_pages,
                  temperature=args.temperature, top_k=args.top_k,
                  sync_interval=args.sync_interval)
     if args.warmup:
@@ -62,6 +73,10 @@ def main() -> None:
           f"{eng.host_syncs} host syncs, "
           f"{eng.prefill_compiles} prefill compiles / "
           f"{eng.decode_compiles} decode compiles)")
+    ms = eng.memory_stats()
+    print(f"paged KV: page_size={ms['page_size']} num_pages={ms['num_pages']} "
+          f"peak_pages_in_use={ms['peak_pages_in_use']} "
+          f"dense/paged capacity ratio={ms['dense_vs_paged_capacity_ratio']:.2f}")
 
 
 if __name__ == "__main__":

@@ -172,9 +172,14 @@ def cp_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def decode_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
                      cache_len: jax.Array, *,
                      window: Optional[int] = None,
-                     softcap: Optional[float] = None) -> jax.Array:
+                     softcap: Optional[float] = None,
+                     valid: Optional[jax.Array] = None) -> jax.Array:
     """q [B,1,H,dh]; cache [B,Hkv,S,dh] (S model-sharded); cache_len counts
-    valid entries *including* the current token."""
+    valid entries *including* the current token.
+
+    ``valid`` [B,S] overrides the default position-order mask — the paged
+    path passes ``ring_valid`` because its KV rows are in ring order, not
+    absolute order."""
     b, _, h, dh = q.shape
     _, hkv, s, _ = ck.shape
     g = h // hkv
@@ -182,14 +187,93 @@ def decode_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
     scale = dh ** -0.5
     scores = jnp.einsum("bkgd,bksd->bkgs", q2, ck).astype(jnp.float32) * scale
     scores = _softcap(scores, softcap)
-    pos = jnp.arange(s)
-    valid = pos[None, :] < cache_len[:, None]          # [B, S]
-    if window is not None:
-        valid &= pos[None, :] >= cache_len[:, None] - window
+    if valid is None:
+        pos = jnp.arange(s)
+        valid = pos[None, :] < cache_len[:, None]      # [B, S]
+        if window is not None:
+            valid &= pos[None, :] >= cache_len[:, None] - window
     scores = jnp.where(valid[:, None, None], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)  # GSPMD all-reduces
     out = jnp.einsum("bkgs,bksd->bkgd", p, cv)
     return out.reshape(b, 1, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV decode (serve/cache.py block-paged pools)
+# ---------------------------------------------------------------------------
+
+def ring_token_positions(cache_len: jax.Array, ring: int) -> jax.Array:
+    """Absolute token position held by each ring slot.
+
+    The paged/ring write rule puts token ``t`` at ring index ``t % ring``,
+    so slot ``r`` holds the *latest* token ``u <= t_cur`` with ``u === r
+    (mod ring)``; a negative ``u`` means the slot was never written.
+    ``cache_len`` [B] counts tokens *including* the current one.
+    Returns [B, ring] int32."""
+    t = (cache_len - 1)[:, None]                       # [B,1] current token
+    r = jnp.arange(ring)[None, :]                      # [1,R]
+    return t - ((t - r) % ring)
+
+
+def ring_valid(cache_len: jax.Array, ring: int,
+               window: Optional[int]) -> jax.Array:
+    """[B, ring] attention validity for a ring-ordered KV layout: written
+    slots only, window-masked by *absolute* position (a ring rounded up to
+    page granularity may physically retain a few tokens older than the
+    window — they must not be attended)."""
+    u = ring_token_positions(cache_len, ring)
+    valid = u >= 0
+    if window is not None:
+        valid &= u > (cache_len - 1)[:, None] - window
+    return valid
+
+
+def paged_ring_blocks(window: Optional[int], max_blocks: int,
+                      page_size: int) -> int:
+    """Logical ring width in pages for a paged attention layer — must match
+    ``serve/cache.CacheSpec``'s per-layer ``ring_blocks`` (it does:
+    ``ceil(min(max_len, window)/P) == min(ceil(max_len/P), ceil(window/P))``
+    and ``max_blocks == ceil(max_len/P)``)."""
+    if window is None:
+        return max_blocks
+    return min(max_blocks, -(-window // page_size))
+
+
+def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
+                      cache: Dict, cache_len: jax.Array, *,
+                      window: Optional[int],
+                      softcap: Optional[float]
+                      ) -> Tuple[jax.Array, Dict]:
+    """One-token attention against a block-paged KV pool.
+
+    cache: {"pk","pv": [num_pages+1, P, Hkv, dh], "pt": [B, max_blocks]}.
+    Writes the new KV through the page table (write-then-gather, so the
+    current token attends to itself), gathers the slot's logical ring, and
+    masks by ring validity.  All shapes are static: the compiled decode
+    chunk only indexes the table the host populated at admission."""
+    pool_k, pool_v, pt = cache["pk"], cache["pv"], cache["pt"]
+    b = q.shape[0]
+    page_size = pool_k.shape[1]
+    blocks = paged_ring_blocks(window, pt.shape[1], page_size)
+    ring = blocks * page_size
+    t = cache_len - 1                                   # [B] current position
+    lb = (t // page_size) % blocks                      # logical block
+    phys = jnp.take_along_axis(pt[:, :blocks], lb[:, None], axis=1)[:, 0]
+    off = t % page_size
+    k_new = kk[:, 0]                                    # [B, Hkv, dh]
+    v_new = vv[:, 0]
+    # distinct slots own distinct pages (host invariant); idle slots map to
+    # the shared trash page where last-write-wins races are harmless
+    pool_k = pool_k.at[phys, off].set(k_new.astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, off].set(v_new.astype(pool_v.dtype))
+    gk = pool_k[pt[:, :blocks]]        # [B, blocks, P, Hkv, dh]
+    gv = pool_v[pt[:, :blocks]]
+    ck = jnp.moveaxis(gk.reshape(b, ring, *gk.shape[3:]), 1, 2)
+    cv = jnp.moveaxis(gv.reshape(b, ring, *gv.shape[3:]), 1, 2)
+    valid = ring_valid(cache_len, ring, window)
+    out = decode_attention(q, ck, cv, cache_len, softcap=softcap,
+                           valid=valid)
+    return out, {"pk": pool_k, "pv": pool_v}
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +323,13 @@ def apply(params: Dict, x: jax.Array, *, cfg: ModelConfig,
     kk = rope(kk, positions, cfg.rope_theta)
 
     new_cache = None
+    if mode == "decode" and cache is not None and "pk" in cache:
+        # block-paged KV (serve/cache.py): pool + page-table indirection
+        out, new_cache = paged_decode_step(
+            q, kk, vv, cache, cache_len, window=window,
+            softcap=cfg.attn_softcap)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+        return sh.shard(y, sh.BATCH, sh.SEQ, sh.EMBED), new_cache
     if mode == "decode":
         assert cache is not None and cache_len is not None
         k_new = jnp.swapaxes(kk, 1, 2)  # [B,Hkv,1,dh]

@@ -334,18 +334,31 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
 def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
                    cache: Dict) -> Tuple[jax.Array, Dict]:
     """tokens [B,1]; cache from prefill (or abstract).  cache["len"] is the
-    number of tokens already in the cache (excluding this one)."""
+    number of tokens already in the cache (excluding this one).
+
+    A cache carrying a ``page_table`` uses the block-paged KV layout from
+    ``serve/cache.py``: the shared table is threaded into every paged
+    layer's cache view (``pt``) on the way in and owned once at the top
+    level on the way out, so the scan-carry structure stays stable."""
     b = tokens.shape[0]
     cache_len = cache["len"] + 1         # including current token
     positions = cache["len"][:, None]    # 0-based position of current token
+    page_table = cache.get("page_table")
+    layer_caches = cache["layers"]
+    if page_table is not None:
+        layer_caches = [dict(c, pt=page_table)
+                        if (c is not None and "pk" in c) else c
+                        for c in layer_caches]
     h = layers.embed(params["embed"], cfg, tokens)
     h, new_caches, _ = _decoder(params, cfg, h, mode="decode",
-                                positions=positions, caches=cache["layers"],
+                                positions=positions, caches=layer_caches,
                                 cache_len=cache_len,
                                 enc_kv_list=cache.get("enc_kv"), q_chunk=None)
     lg = layers.logits(params["embed"], cfg, h)
     new_cache = {"layers": new_caches, "enc_kv": cache.get("enc_kv"),
                  "len": cache_len}
+    if page_table is not None:
+        new_cache["page_table"] = page_table
     return lg[:, 0], new_cache
 
 

@@ -31,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 BATCH = "batch"
 SEQ = "seq"          # sequence (activations)
 KV_SEQ = "kv_seq"    # kv-cache sequence dim (decode: sharded on model)
+PAGES = "pages"      # paged-KV pool page dim (serving: sharded on data)
 EMBED = "act_embed"  # activation d_model dim
 HEADS = "act_heads"
 MLP = "act_mlp"

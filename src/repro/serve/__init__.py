@@ -1,6 +1,9 @@
-from repro.serve import engine, reference, sampling
+from repro.serve import cache, engine, reference, sampling, scheduler
+from repro.serve.cache import CacheSpec
 from repro.serve.engine import Engine, Request
 from repro.serve.reference import ReferenceEngine
+from repro.serve.scheduler import PagePool, PagePoolExhausted, Scheduler
 
-__all__ = ["engine", "reference", "sampling", "Engine", "Request",
-           "ReferenceEngine"]
+__all__ = ["cache", "engine", "reference", "sampling", "scheduler",
+           "CacheSpec", "Engine", "Request", "ReferenceEngine",
+           "PagePool", "PagePoolExhausted", "Scheduler"]

@@ -1,0 +1,385 @@
+"""Unified decode-cache subsystem: CacheSpec + block-paged KV pools.
+
+Before this module, every serving slot preallocated a dense ``max_len`` KV
+row per attention layer (``models/transformer.cache_structure``), so total
+capacity was ``slots x max_len`` tokens no matter how long the actual
+sequences were — the static-worst-case allocation the paper flags as a
+naive-setting trap (§2.2.3).  ``CacheSpec`` replaces that plumbing with a
+per-layer *kind* derived from ``ModelConfig``:
+
+* ``PAGED_KV`` (attention / zamba2 shared-attention layers): keys and
+  values live in a block-paged pool ``[num_pages + 1, page_size, kv_heads,
+  head_dim]`` shared by all slots.  A per-slot **page table**
+  ``[slots, max_blocks]`` maps logical blocks to physical pages; windowed
+  layers ring over their first ``ceil(window / page_size)`` table entries
+  (token ``t`` lives at ring index ``t % ring``), so one mapping serves
+  full attention, sliding windows, and wrap-around.  The last pool row is
+  a **trash page**: unreserved table entries point at it, so a slot whose
+  budget ran out (or that finished mid-chunk) writes garbage there instead
+  of into a neighbour's pages.
+* ``STATE`` (mamba2 / rwkv6 layers): O(1) recurrent state stays dense
+  ``[slots, ...]`` exactly as before — paging constant-size state buys
+  nothing.
+
+Total tokens per slot are bounded by the shared page budget (``num_pages x
+page_size``), not a per-slot preallocation, which lifts the ``max_len``
+ceiling: one request can run past the old dense per-slot limit as long as
+pages are free.
+
+Physical page ids are allocated host-side (``serve/scheduler.PagePool``)
+at admission, so the fused decode chunk stays a single shape-stable
+executable with zero host synchronization: the compiled code only ever
+*indexes* the table, never grows it.
+
+Sharding: the spec carries logical axes for every buffer (slot-batched
+state on ``sh.BATCH``, the page pool on ``sh.PAGES``), so a
+``parallel/sharding.Rules`` table mapping both to the data mesh axis
+shards the serving state over the data axis of ``launch/mesh.py`` meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA2, RWKV6, SHARED_ATTN, ModelConfig
+from repro.models import attention, mamba2, rwkv6
+from repro.parallel import sharding as sh
+
+PAGED_KV = "paged_kv"    # block-paged KV ring (attention mixers)
+STATE = "state"          # constant-size recurrent state (mamba2 / rwkv6)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCacheSpec:
+    """Cache layout of one decoder layer."""
+
+    kind: str
+    # PAGED_KV: logical ring width in pages (ceil(min(max_len, window)/P))
+    ring_blocks: int = 0
+    window: Optional[int] = None
+    # STATE: {name: (shape, logical_axes)} at batch == slots
+    state: Optional[Dict[str, Tuple]] = None
+
+
+@dataclasses.dataclass
+class CacheSpec:
+    """Shapes + logical sharding axes + kinds for a slot-batched decode
+    cache, derived per-layer from ``ModelConfig``."""
+
+    cfg: ModelConfig
+    slots: int
+    max_len: int          # logical per-slot token cap (page-table width * P)
+    page_size: int
+    num_pages: int
+    layers: List[Optional[LayerCacheSpec]]
+
+    # ------------------------------------------------------------ factory
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, slots: int, max_len: int, *,
+                    page_size: int = 8,
+                    num_pages: Optional[int] = None) -> "CacheSpec":
+        if cfg.cross_attention:
+            raise ValueError(
+                f"{cfg.name}: cross-attention cache structures (enc_kv) are "
+                "not representable as slot-batched decode caches; the "
+                "serving cache subsystem is decoder-only.  Whisper decodes "
+                "via examples/whisper_transcribe.py's direct loop.")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if num_pages is None:
+            # equal-token-capacity default: slots x max_len tokens, like
+            # the old dense preallocation.  NOTE: every paged layer's pool
+            # is sized to the shared page budget, so windowed layers (old
+            # dense rows: `window` tokens) allocate MORE bytes than dense
+            # under this default — `memory_stats()['dense_vs_paged_
+            # capacity_ratio']` reports the truth (< 1.0 for windowed
+            # archs); pass num_pages explicitly to trade capacity for
+            # bytes.  Per-layer page-id remapping to reclaim the windowed
+            # overhead is a ROADMAP follow-up.
+            num_pages = slots * _ceil_div(max_len, page_size)
+        layers: List[Optional[LayerCacheSpec]] = []
+        for block in cfg.blocks:
+            if block.mixer in (ATTN, SHARED_ATTN):
+                cap = min(max_len, block.window or max_len)
+                layers.append(LayerCacheSpec(
+                    PAGED_KV, ring_blocks=_ceil_div(cap, page_size),
+                    window=block.window))
+            elif block.mixer == MAMBA2:
+                layers.append(LayerCacheSpec(
+                    STATE, state=mamba2.state_shapes(cfg, slots)))
+            elif block.mixer == RWKV6:
+                layers.append(LayerCacheSpec(
+                    STATE, state=rwkv6.state_shapes(cfg, slots)))
+            else:  # pragma: no cover - config validation forbids this
+                raise ValueError(block.mixer)
+        spec = cls(cfg=cfg, slots=slots, max_len=max_len,
+                   page_size=page_size, num_pages=num_pages, layers=layers)
+        # the compiled decode path re-derives each layer's ring width from
+        # (window, table width, page size) — attention.paged_ring_blocks.
+        # Verify the two formulas agree HERE so any future layout change
+        # fails loudly at spec construction instead of silently spliced
+        # and decoded with different ring widths (wrong attention output).
+        for block, ls in zip(cfg.blocks, spec.layers):
+            if ls is not None and ls.kind == PAGED_KV:
+                derived = attention.paged_ring_blocks(
+                    block.window, spec.max_blocks, page_size)
+                assert derived == ls.ring_blocks, (
+                    block.window, derived, ls.ring_blocks)
+        return spec
+
+    # --------------------------------------------------------- properties
+    @property
+    def has_paged(self) -> bool:
+        return any(ls is not None and ls.kind == PAGED_KV
+                   for ls in self.layers)
+
+    @property
+    def max_blocks(self) -> int:
+        """Page-table width: the widest logical ring of any paged layer."""
+        widths = [ls.ring_blocks for ls in self.layers
+                  if ls is not None and ls.kind == PAGED_KV]
+        return max(widths) if widths else 1
+
+    @property
+    def trash_page(self) -> int:
+        """Physical id of the write-discard page (last pool row)."""
+        return self.num_pages
+
+    @property
+    def pool_shape(self) -> Tuple[int, int, int, int]:
+        return (self.num_pages + 1, self.page_size,
+                self.cfg.num_kv_heads, self.cfg.resolved_head_dim)
+
+    POOL_AXES = (sh.PAGES, None, None, None)
+    TABLE_AXES = (sh.BATCH, None)
+
+    def blocks_needed(self, plen: int, max_new: int) -> int:
+        """Worst-case page-table entries a request ever touches: tokens
+        0..plen+max_new-1, ring-wrapped at the table width.  Reserving this
+        up-front at admission makes mid-run pool exhaustion impossible for
+        admitted requests."""
+        if not self.has_paged:
+            return 0
+        total = max(plen + max_new, 1)
+        return min(_ceil_div(total, self.page_size), self.max_blocks)
+
+    # -------------------------------------------------------------- inits
+    def init_paged_cache(self, dtype=jnp.float32) -> Dict[str, Any]:
+        """Zeroed paged decode cache.  Page-table entries start at the
+        trash page, so an unadmitted slot's decode writes are discarded."""
+        layer_caches: List[Optional[Dict]] = []
+        for ls in self.layers:
+            if ls is None:
+                layer_caches.append(None)
+            elif ls.kind == PAGED_KV:
+                layer_caches.append({
+                    "pk": jnp.zeros(self.pool_shape, dtype),
+                    "pv": jnp.zeros(self.pool_shape, dtype),
+                })
+            else:
+                layer_caches.append({
+                    k: jnp.zeros(shp, dtype)
+                    for k, (shp, _axes) in ls.state.items()})
+        return {
+            "layers": layer_caches,
+            "page_table": jnp.full((self.slots, self.max_blocks),
+                                   self.trash_page, jnp.int32),
+            "len": jnp.zeros((self.slots,), jnp.int32),
+        }
+
+    def init_dense_cache(self, dtype=jnp.float32) -> Dict[str, Any]:
+        """Zeroed dense (pre-paging) cache: one ``max_len``-or-ring row per
+        slot per attention layer.  Kept for ``ReferenceEngine`` so the
+        equivalence oracle can never diverge structurally."""
+        layer_caches: List[Optional[Dict]] = []
+        for block, ls in zip(self.cfg.blocks, self.layers):
+            if ls is None:
+                layer_caches.append(None)
+            elif ls.kind == PAGED_KV:
+                shape, _axes = attention.init_cache_shape(
+                    self.cfg, self.slots,
+                    min(self.max_len, block.window or self.max_len))
+                layer_caches.append({"k": jnp.zeros(shape, dtype),
+                                     "v": jnp.zeros(shape, dtype)})
+            else:
+                layer_caches.append({
+                    k: jnp.zeros(shp, dtype)
+                    for k, (shp, _axes) in ls.state.items()})
+        return {"layers": layer_caches,
+                "len": jnp.zeros((self.slots,), jnp.int32)}
+
+    # ---------------------------------------------------------- structure
+    def structure(self) -> Dict[str, Any]:
+        """Nested ``{name: (shape, logical_axes)}`` mirroring the paged
+        runtime cache — the paged analogue of
+        ``models/transformer.cache_structure``."""
+        per_layer: List[Optional[Dict]] = []
+        for ls in self.layers:
+            if ls is None:
+                per_layer.append(None)
+            elif ls.kind == PAGED_KV:
+                per_layer.append({"pk": (self.pool_shape, self.POOL_AXES),
+                                  "pv": (self.pool_shape, self.POOL_AXES)})
+            else:
+                per_layer.append(dict(ls.state))
+        return {
+            "layers": per_layer,
+            "page_table": ((self.slots, self.max_blocks), self.TABLE_AXES),
+            "len": ((self.slots,), (sh.BATCH,)),
+        }
+
+    def shardings(self, rules: sh.Rules) -> Any:
+        """NamedShardings (or None without a mesh) for the paged cache."""
+        def is_leaf(x):
+            return (isinstance(x, tuple) and len(x) == 2
+                    and isinstance(x[0], tuple))
+
+        return jax.tree.map(
+            lambda leaf: rules.sharding_for(leaf[1], leaf[0]),
+            self.structure(), is_leaf=is_leaf)
+
+    # ------------------------------------------------------- memory stats
+    def page_bytes(self, dtype_bytes: int = 4) -> int:
+        """HBM bytes one physical page costs across every paged layer
+        (each page id backs a K and a V block in each paged layer)."""
+        n_paged = sum(1 for ls in self.layers
+                      if ls is not None and ls.kind == PAGED_KV)
+        per_layer = (2 * self.page_size * self.cfg.num_kv_heads
+                     * self.cfg.resolved_head_dim * dtype_bytes)
+        return n_paged * per_layer
+
+    def dense_kv_bytes(self, dtype_bytes: int = 4) -> int:
+        """What the old dense layout preallocated for attention KV."""
+        total = 0
+        for block, ls in zip(self.cfg.blocks, self.layers):
+            if ls is None or ls.kind != PAGED_KV:
+                continue
+            ring = min(self.max_len, block.window or self.max_len)
+            total += (2 * self.slots * ring * self.cfg.num_kv_heads
+                      * self.cfg.resolved_head_dim * dtype_bytes)
+        return total
+
+    def paged_kv_bytes(self, dtype_bytes: int = 4) -> int:
+        return self.num_pages * self.page_bytes(dtype_bytes)
+
+    def memory_stats(self, pages_in_use: int,
+                     live_tokens: int) -> Dict[str, Any]:
+        """Paged-cache memory telemetry for the BENCH_serve.json schema."""
+        in_use_bytes = pages_in_use * self.page_bytes()
+        dense = self.dense_kv_bytes()
+        paged = self.paged_kv_bytes()
+        return {
+            "page_size": self.page_size,
+            "num_pages": self.num_pages,
+            "pages_in_use": pages_in_use,
+            "hbm_bytes_per_live_token": (
+                in_use_bytes / live_tokens if live_tokens else 0.0),
+            "dense_vs_paged_capacity_ratio": (
+                dense / paged if paged else 1.0),
+            "paged_kv_bytes": paged,
+            "dense_kv_bytes": dense,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Jit-traceable cache ops (called inside the Executor's compiled functions)
+# ---------------------------------------------------------------------------
+
+def splice_paged_layer(pool_k: jax.Array, pool_v: jax.Array,
+                       pre_k: jax.Array, pre_v: jax.Array,
+                       pages_row: jax.Array, plen: jax.Array,
+                       ring_blocks: int, page_size: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Write a batch-1 prefill KV ``[1, Hkv, bucket, dh]`` into the pool,
+    one page-granular read-modify-write per logical block.
+
+    Token ``t`` lands at page ``pages_row[(t // P) % ring_blocks]``, offset
+    ``t % P`` — i.e. ring index ``t % (ring_blocks * P)``, the same write
+    rule decode uses.  Pad positions (``t >= plen``, bucketed prefill) are
+    masked out of the merge, so they can neither clobber wrapped-around
+    valid tokens nor leak garbage into pages another slot may later attend
+    to.  The block loop is static (one compile per prefill bucket)."""
+    k = jnp.swapaxes(pre_k[0], 0, 1)   # [bucket, Hkv, dh]
+    v = jnp.swapaxes(pre_v[0], 0, 1)
+    bucket = k.shape[0]
+    nblocks = _ceil_div(bucket, page_size)
+    pad = nblocks * page_size - bucket
+    if pad:
+        k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(nblocks, page_size, *k.shape[1:]).astype(pool_k.dtype)
+    vb = v.reshape(nblocks, page_size, *v.shape[1:]).astype(pool_v.dtype)
+    for j in range(nblocks):           # static: exact HLO, no dynamic loop
+        dest = pages_row[j % ring_blocks]
+        colmask = (j * page_size + jnp.arange(page_size)) < plen
+        cm = colmask[:, None, None]
+        pool_k = pool_k.at[dest].set(jnp.where(cm, kb[j], pool_k[dest]))
+        pool_v = pool_v.at[dest].set(jnp.where(cm, vb[j], pool_v[dest]))
+    return pool_k, pool_v
+
+
+def _splice_state_leaf(big: Optional[jax.Array], small: Optional[jax.Array],
+                       slot: jax.Array) -> Optional[jax.Array]:
+    """Write a batch-1 recurrent-state leaf into row ``slot``."""
+    if big is None or small is None:
+        return big
+    return jax.lax.dynamic_update_slice_in_dim(
+        big, small.astype(big.dtype), slot, axis=0)
+
+
+def admit_cache(spec: CacheSpec, cache: Dict, one_cache: Dict,
+                slot: jax.Array, plen: jax.Array,
+                pages_row: jax.Array) -> Dict:
+    """Jit-traceable admission: splice a batch-1 prefill cache into
+    ``slot`` and install its page-table row (reserved pages padded with
+    the trash id, so writes past the reservation are discarded, never
+    aliased into a neighbour's pages)."""
+    new_layers: List[Optional[Dict]] = []
+    for ls, big, small in zip(spec.layers, cache["layers"],
+                              one_cache["layers"]):
+        if ls is None:
+            new_layers.append(big)
+        elif ls.kind == PAGED_KV:
+            pk, pv = splice_paged_layer(
+                big["pk"], big["pv"], small["k"], small["v"],
+                pages_row, plen, ls.ring_blocks, spec.page_size)
+            new_layers.append({"pk": pk, "pv": pv})
+        else:
+            new_layers.append({
+                k: _splice_state_leaf(big[k], small[k], slot)
+                for k in big})
+    page_table = jax.lax.dynamic_update_slice(
+        cache["page_table"], pages_row[None].astype(jnp.int32), (slot, 0))
+    length = jax.lax.dynamic_update_slice_in_dim(
+        cache["len"], plen[None].astype(jnp.int32), slot, axis=0)
+    return {"layers": new_layers, "page_table": page_table, "len": length}
+
+
+def free_slot_cache(spec: CacheSpec, cache: Dict, slot: jax.Array) -> Dict:
+    """Jit-traceable eviction: point the freed slot's page-table row at the
+    trash page and zero its length.  Its physical pages go back to the
+    host-side free list (``scheduler.PagePool``); after this update the
+    idle slot's dead decode writes land on the trash page, so those pages
+    can be re-leased immediately without corruption."""
+    row = jnp.full((1, spec.max_blocks), spec.trash_page, jnp.int32)
+    page_table = jax.lax.dynamic_update_slice(
+        cache["page_table"], row, (slot, 0))
+    length = jax.lax.dynamic_update_slice_in_dim(
+        cache["len"], jnp.zeros((1,), jnp.int32), slot, axis=0)
+    return dict(cache, page_table=page_table, len=length)
+
+
+def empty_batch_cache(cfg: ModelConfig, slots: int, max_len: int):
+    """Zeroed dense slot-batched decode cache (``ReferenceEngine``'s
+    layout).  Cross-attention structures are rejected by ``CacheSpec``
+    construction with a clear error — previously this silently
+    ``pop``-ed the ``enc_kv`` entry and served garbage cross-attention."""
+    return CacheSpec.from_config(cfg, slots, max_len).init_dense_cache()

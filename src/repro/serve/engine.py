@@ -1,89 +1,185 @@
-"""Shape-stable, sync-free batched serving engine (paper §2.2.3, Fig. 14).
+"""Layered, shape-stable, sync-free serving runtime (paper §2.2.3, Fig. 14).
 
 The paper's central measurement is that framework overhead — dispatch,
-scheduling, synchronization — dominates serving once the math is tuned.
-This engine removes all three from the steady-state decode loop:
+scheduling, synchronization, and memory management — dominates serving
+once the math is tuned.  The runtime is split into three layers so each
+overhead has exactly one owner:
 
-* **Fused decode chunks.**  ``sync_interval`` decode steps (model forward +
-  on-device sampling + per-slot EOS / max-token bookkeeping) are rolled
-  into ONE compiled ``lax.scan`` computation: one dispatch per chunk, not
-  per token, and zero host<->device synchronization inside it.  Tokens
-  cross to the host as one batched ``[T, slots]`` transfer per chunk.
-* **Shape stability.**  The decode state (token buffer, per-slot lengths,
-  done flags, PRNG key) lives on device with fixed shapes, so exactly one
-  decode executable is ever compiled (``decode_compiles == 1``).
-* **Bucketed prefill.**  Prompts are right-padded to a power-of-two bucket
-  and prefilled with a true-``length`` argument (see
-  ``models/transformer.forward_prefill``), so mixed prompt lengths compile
-  at most ``len(buckets)`` prefill executables instead of one per length.
-* **Jitted splice.**  Admitting a request writes its prefill cache into a
-  batch slot with a single compiled dynamic-update-slice (including the
-  sliding-window ring-buffer gather), replacing the Python ``tree.map`` /
-  ``.at[].set`` dispatch chain.
-* **Donation.**  The batch cache and slot state are donated through the
-  decode chunk and the splice (``donate_argnums``), so steady-state decode
-  allocates no new cache buffers.  Donation is a no-op on CPU backends
-  (JAX does not implement it there); ``donate="auto"`` enables it
-  everywhere else.
+* **Scheduler** (``serve/scheduler.Scheduler``) — host-side policy: FIFO
+  queue, slot admission, page-budget reservation, eviction.  Continuous
+  batching: slots free and re-admit at chunk boundaries without
+  recompiling anything.
+* **Executor** (``Executor`` below) — the compiled layer: bucketed
+  prefill, the page-granular admission splice, and the fused decode chunk
+  (``sync_interval`` decode steps + on-device sampling + slot bookkeeping
+  in ONE ``lax.scan`` executable, zero host<->device syncs inside).
+* **Driver** (``Engine``) — glues them: one batched device->host token
+  drain per chunk, finish reporting, admission application.
 
-``ReferenceEngine`` in ``repro.serve.reference`` preserves the old
-per-token-sync loop as the measurement baseline for
+The decode cache is the block-paged subsystem from ``serve/cache.py``:
+attention KV lives in shared page pools behind per-slot page tables
+(capacity bounded by the page budget, not ``slots x max_len``), while
+mamba2/rwkv6 recurrent state stays dense.  ``CacheSpec`` carries logical
+sharding axes for every buffer, so a ``parallel/sharding.Rules`` table
+mapping ``BATCH``/``PAGES`` to the data mesh axis serves multi-device via
+the existing ``launch/mesh.py`` machinery.
+
+``ReferenceEngine`` in ``repro.serve.reference`` preserves the dense
+per-token-sync loop as the measurement baseline and equivalence oracle for
 ``benchmarks/fig14_dispatch_overhead.py``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, List, Optional
+import contextlib
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import cache_structure, forward_decode, forward_prefill
+from repro.models import forward_decode, forward_prefill
+from repro.parallel import sharding as sh
+from repro.serve import cache as cache_mod
 from repro.serve import sampling
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    temperature: Optional[float] = None   # None -> engine default
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+from repro.serve.cache import CacheSpec, empty_batch_cache  # noqa: F401
+from repro.serve.scheduler import (PagePoolExhausted, Request,  # noqa: F401
+                                   Scheduler)
 
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
 
 
-def empty_batch_cache(cfg: ModelConfig, slots: int, max_len: int):
-    """Zeroed slot-batched decode cache (shared with ReferenceEngine so
-    the equivalence baseline can never diverge structurally)."""
-    struct = cache_structure(cfg, slots, max_len)
+class Executor:
+    """Compiled serving layer: every function here is a jit with stable
+    shapes (one executable per prefill bucket; exactly one decode chunk).
+    The cache and slot state are donated through the chunk and the splice
+    on backends that implement donation (not CPU)."""
 
-    def is_leaf(x):
-        return (isinstance(x, tuple) and len(x) == 2
-                and isinstance(x[0], tuple))
+    def __init__(self, cfg: ModelConfig, spec: CacheSpec, *, top_k: int,
+                 sync_interval: int, donate: bool,
+                 rules: Optional[sh.Rules] = None):
+        self.cfg = cfg
+        self.spec = spec
+        self.top_k = int(top_k)
+        self.sync_interval = int(sync_interval)
+        self._rules = rules
+        self._prefill_fn = jax.jit(self._prefill_impl)
+        if donate:
+            self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(0, 1))
+            self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1, 2))
+            self._free_fn = jax.jit(self._free_impl, donate_argnums=(0,))
+        else:
+            self._admit_fn = jax.jit(self._admit_impl)
+            self._chunk_fn = jax.jit(self._chunk_impl)
+            self._free_fn = jax.jit(self._free_impl)
 
-    def mk(leaf):
-        shp, _axes = leaf
-        return jnp.zeros(shp, jnp.float32)
+    def _ctx(self):
+        """Sharding rules are a tracing-time thread-local; enter them for
+        every compiled call so retraces see the same table."""
+        if self._rules is None:
+            return contextlib.nullcontext()
+        return sh.axis_rules(self._rules)
 
-    cache = jax.tree.map(mk, struct, is_leaf=is_leaf)
-    cache["len"] = jnp.zeros((slots,), jnp.int32)
-    cache.pop("enc_kv", None)
-    return cache
+    # ------------------------------------------------------ impls (traced)
+    def _prefill_impl(self, params, tokens, length, key, temp):
+        """Padded prefill + on-device first-token sampling.
+
+        tokens [1, bucket], length [1].  One compile per bucket shape."""
+        batch = {"tokens": tokens}
+        if self.cfg.frontend:
+            k = "frames" if self.cfg.family == "audio" else "frontend"
+            batch[k] = jnp.zeros(
+                (1, self.cfg.frontend_len, self.cfg.d_model), jnp.float32)
+        logits, cache = forward_prefill(params, self.cfg, batch,
+                                        length=length)
+        tok = sampling.sample(logits, key, temperature=temp,
+                              top_k=self.top_k)
+        return tok, cache
+
+    def _admit_impl(self, cache, state, one_cache, slot, plen,
+                    pages_row, first_tok, max_new, eos, temp, active):
+        """Jitted admission: page-granular splice of the prefill cache into
+        ``slot`` (serve/cache.admit_cache) + device-side bookkeeping init.
+        One compile per prefill bucket; everything else is traced."""
+        new_cache = cache_mod.admit_cache(self.spec, cache, one_cache,
+                                          slot, plen, pages_row)
+        st = dict(state)
+        st["tokens"] = state["tokens"].at[slot].set(first_tok)
+        st["out_len"] = state["out_len"].at[slot].set(1)
+        st["max_new"] = state["max_new"].at[slot].set(max_new)
+        st["eos"] = state["eos"].at[slot].set(eos)
+        st["temp"] = state["temp"].at[slot].set(temp)
+        st["active"] = state["active"].at[slot].set(active)
+        return new_cache, st
+
+    def _chunk_impl(self, params, cache, state):
+        """``sync_interval`` fused decode steps: forward (with paged KV
+        lookup) + sample + slot bookkeeping, all on device.  Returns the
+        [T, slots] token history (-1 where a slot was idle) — the only
+        thing the host ever reads."""
+        def body(carry, _):
+            cache, state = carry
+            logits, cache = forward_decode(
+                params, self.cfg, state["tokens"][:, None], cache)
+            cache.pop("enc_kv", None)   # decoder-only: keep carry structure
+            key, sub = jax.random.split(state["key"])
+            nxt = sampling.sample(logits, sub, temperature=state["temp"],
+                                  top_k=self.top_k)
+            state, emitted = sampling.decode_update(state, nxt, key)
+            return (cache, state), emitted
+
+        (cache, state), toks = jax.lax.scan(
+            body, (cache, state), None, length=self.sync_interval)
+        return toks, cache, state
+
+    def _free_impl(self, cache, slot):
+        return cache_mod.free_slot_cache(self.spec, cache, slot)
+
+    # -------------------------------------------------------- public calls
+    def prefill(self, params, tokens, length, key, temp):
+        with self._ctx():
+            return self._prefill_fn(params, tokens, length, key, temp)
+
+    def admit(self, cache, state, *args):
+        with self._ctx():
+            return self._admit_fn(cache, state, *args)
+
+    def chunk(self, params, cache, state):
+        with self._ctx():
+            return self._chunk_fn(params, cache, state)
+
+    def free_slot(self, cache, slot):
+        with self._ctx():
+            return self._free_fn(cache, slot)
+
+    # ----------------------------------------------------------- telemetry
+    @property
+    def prefill_compiles(self) -> int:
+        return self._prefill_fn._cache_size()
+
+    @property
+    def decode_compiles(self) -> int:
+        return self._chunk_fn._cache_size()
 
 
 class Engine:
+    """Host driver: composes Scheduler (policy) + Executor (compiled) over
+    the paged cache.  ``max_len`` is the *logical* per-slot token cap (the
+    page-table width x page_size); physical capacity is ``num_pages x
+    page_size`` tokens shared by all slots (default: the old dense
+    ``slots x max_len`` token capacity — equal KV bytes too for
+    full-attention archs; windowed layers cost more under the default,
+    see ``CacheSpec.from_config`` and ``memory_stats()``)."""
+
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  sync_interval: int = 8, min_bucket: int = 8,
                  buckets: Optional[List[int]] = None,
+                 page_size: int = 8, num_pages: Optional[int] = None,
+                 rules: Optional[sh.Rules] = None,
                  donate: Any = "auto"):
         if cfg.cross_attention:
             raise NotImplementedError(
@@ -110,124 +206,56 @@ class Engine:
         if donate == "auto":
             donate = jax.default_backend() != "cpu"
         self._donate = bool(donate)
+        self._rules = rules
 
-        self._prefill_fn = jax.jit(self._prefill_impl)
-        # cache+state are donated through the decode chunk and the admit
-        # splice; on CPU JAX has no donation so those stay plain jits.
-        if self._donate:
-            self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(0, 1))
-            self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1, 2))
-        else:
-            self._admit_fn = jax.jit(self._admit_impl)
-            self._chunk_fn = jax.jit(self._chunk_impl)
+        self.spec = CacheSpec.from_config(cfg, slots, max_len,
+                                          page_size=page_size,
+                                          num_pages=num_pages)
+        self.scheduler = Scheduler(self.spec)
+        self.executor = Executor(cfg, self.spec, top_k=self.top_k,
+                                 sync_interval=self.sync_interval,
+                                 donate=self._donate, rules=rules)
 
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._slot_first_tok: List[Optional[jax.Array]] = [None] * slots
         self.cache = self._empty_cache()
         self.state = sampling.make_slot_state(slots, seed)
         self._key = jax.random.PRNGKey(seed + 1)
-        self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.steps = 0
         self.host_syncs = 0
 
     # -------------------------------------------------------------- setup
     def _empty_cache(self):
-        return empty_batch_cache(self.cfg, self.slots, self.max_len)
-
-    # ------------------------------------------------------- compiled fns
-    def _prefill_impl(self, params, tokens, length, key, temp):
-        """Padded prefill + on-device first-token sampling.
-
-        tokens [1, bucket], length [1].  One compile per bucket shape."""
-        batch = {"tokens": tokens}
-        if self.cfg.frontend:
-            k = "frames" if self.cfg.family == "audio" else "frontend"
-            batch[k] = jnp.zeros(
-                (1, self.cfg.frontend_len, self.cfg.d_model), jnp.float32)
-        logits, cache = forward_prefill(params, self.cfg, batch,
-                                        length=length)
-        tok = sampling.sample(logits, key, temperature=temp,
-                              top_k=self.top_k)
-        return tok, cache
-
-    @staticmethod
-    def _splice_leaf(big, small, slot, plen):
-        """Write batch-1 prefill leaf ``small`` into row ``slot`` of the
-        batch cache leaf ``big`` with one dynamic-update-slice.
-
-        Attention KV leaves may disagree with the ring size R on the seq
-        axis (-2).  ``small`` shorter than R is placed at its absolute
-        positions (decode writes token t at slot t % R, and t < R here).
-        ``small`` longer than R keeps, for each ring slot r, the *last
-        valid* token t < plen with t ≡ r (mod R) — dtype-preserving and
-        exact even when plen is 0, a multiple of R, or the window is
-        exactly full (the old roll-based splice misplaced those)."""
-        if big is None or small is None:
-            return big
-        if small.shape[1:] != big.shape[1:]:
-            r_size, p_size = big.shape[-2], small.shape[-2]
-            if p_size > r_size:
-                r = jnp.arange(r_size)
-                t = plen - 1 - ((plen - 1 - r) % r_size)
-                t = jnp.clip(t, 0, p_size - 1)
-                small = jnp.take(small, t, axis=-2)
-            else:
-                pad = [(0, 0)] * small.ndim
-                pad[-2] = (0, r_size - p_size)
-                small = jnp.pad(small, pad)
-        return jax.lax.dynamic_update_slice_in_dim(
-            big, small.astype(big.dtype), slot, axis=0)
-
-    def _admit_impl(self, cache, state, one_cache, slot, plen, first_tok,
-                    max_new, eos, temp, active):
-        """Jitted admission: splice the prefill cache into ``slot`` and
-        initialize its device-side bookkeeping.  One compile per prefill
-        bucket (the one_cache seq dim); everything else is traced."""
-        layers = jax.tree.map(
-            lambda b, s: self._splice_leaf(b, s, slot, plen),
-            cache["layers"], one_cache["layers"],
-            is_leaf=lambda x: x is None)
-        new_cache = dict(cache)
-        new_cache["layers"] = layers
-        new_cache["len"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["len"], plen[None].astype(jnp.int32), slot, axis=0)
-        st = dict(state)
-        st["tokens"] = state["tokens"].at[slot].set(first_tok)
-        st["out_len"] = state["out_len"].at[slot].set(1)
-        st["max_new"] = state["max_new"].at[slot].set(max_new)
-        st["eos"] = state["eos"].at[slot].set(eos)
-        st["temp"] = state["temp"].at[slot].set(temp)
-        st["active"] = state["active"].at[slot].set(active)
-        return new_cache, st
-
-    def _chunk_impl(self, params, cache, state):
-        """``sync_interval`` fused decode steps: forward + sample + slot
-        bookkeeping, all on device.  Returns the [T, slots] token history
-        (-1 where a slot was idle) — the only thing the host ever reads."""
-        def body(carry, _):
-            cache, state = carry
-            logits, cache = forward_decode(
-                params, self.cfg, state["tokens"][:, None], cache)
-            cache.pop("enc_kv", None)   # decoder-only: keep carry structure
-            key, sub = jax.random.split(state["key"])
-            nxt = sampling.sample(logits, sub, temperature=state["temp"],
-                                  top_k=self.top_k)
-            state, emitted = sampling.decode_update(state, nxt, key)
-            return (cache, state), emitted
-
-        (cache, state), toks = jax.lax.scan(
-            body, (cache, state), None, length=self.sync_interval)
-        return toks, cache, state
+        cache = self.spec.init_paged_cache()
+        if self._rules is not None and self._rules.mesh is not None:
+            shardings = self.spec.shardings(self._rules)
+            cache = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else x,
+                cache, shardings)
+        return cache
 
     # ---------------------------------------------------------- telemetry
     @property
+    def queue(self) -> List[Request]:
+        return self.scheduler.queue
+
+    @property
     def prefill_compiles(self) -> int:
-        return self._prefill_fn._cache_size()
+        return self.executor.prefill_compiles
 
     @property
     def decode_compiles(self) -> int:
-        return self._chunk_fn._cache_size()
+        return self.executor.decode_compiles
+
+    def memory_stats(self) -> Dict[str, Any]:
+        """Paged-cache memory telemetry (peak page occupancy + HBM bytes
+        per live generated token at the current instant)."""
+        live = sum(len(r.out_tokens) + len(r.prompt)
+                   for r in self._slot_req if r is not None)
+        stats = self.spec.memory_stats(self.scheduler.pages_in_use, live)
+        stats["peak_pages_in_use"] = self.scheduler.peak_pages_in_use
+        return stats
 
     # ------------------------------------------------------------ serving
     def submit(self, req: Request) -> None:
@@ -235,13 +263,13 @@ class Engine:
         # would drop the request and strand in-flight slots
         if len(req.prompt) > self.max_len \
                 and not self.cfg.supports_long_context:
-            # full-attention KV rows are capped at max_len; splicing a
+            # full-attention page tables cap at max_len tokens; splicing a
             # longer prompt would silently mod-wrap it like a ring
             raise ValueError(
                 f"prompt length {len(req.prompt)} exceeds "
                 f"max_len={self.max_len} and {self.cfg.name} has "
                 f"non-windowed attention; raise max_len")
-        self.queue.append(req)
+        self.scheduler.submit(req)   # may raise PagePoolExhausted
 
     def bucket_for(self, plen: int) -> int:
         for b in self.buckets:
@@ -255,22 +283,30 @@ class Engine:
     def warmup(self) -> None:
         """Pre-compile every prefill bucket, the splice, and the decode
         chunk so serving never pays a compile inside the hot loop.
-        Semantically inert: the PRNG key is restored afterwards, so seeded
-        sampled runs are identical with or without warmup."""
+        Semantically inert: admissions use the trash page table row and
+        ``active=False``, and the PRNG key is restored afterwards, so
+        seeded sampled runs are identical with or without warmup."""
         key_before = jnp.array(self.state["key"])   # copy: state is donated
+        trash_row = jnp.full((self.spec.max_blocks,), self.spec.trash_page,
+                             jnp.int32)
         for b in self.buckets:
             tokens = jnp.zeros((1, b), jnp.int32)
             length = jnp.zeros((1,), jnp.int32)
             key = jax.random.PRNGKey(0)
             temp = jnp.zeros((1,), jnp.float32)
-            tok, one_cache = self._prefill_fn(
+            tok, one_cache = self.executor.prefill(
                 self.params, tokens, length, key, temp)
             # active=False: compiles the splice without touching live slots
-            self.cache, self.state = self._admit_fn(
-                self.cache, self.state, one_cache, 0, jnp.int32(0), tok[0],
-                jnp.int32(0), jnp.int32(-1), jnp.float32(0.0), False)
-        _, self.cache, self.state = self._chunk_fn(
+            self.cache, self.state = self.executor.admit(
+                self.cache, self.state, one_cache, 0,
+                jnp.int32(0), trash_row, tok[0], jnp.int32(0),
+                jnp.int32(-1), jnp.float32(0.0), False)
+        _, self.cache, self.state = self.executor.chunk(
             self.params, self.cache, self.state)
+        # eviction splice: compiling it here keeps the first request
+        # completion from paying a trace inside the serving loop (slot 0
+        # is idle, so re-trashing its table row is inert)
+        self.cache = self.executor.free_slot(self.cache, jnp.int32(0))
         self.state = dict(self.state, key=key_before)
 
     def _req_temp(self, req: Request) -> float:
@@ -279,10 +315,8 @@ class Engine:
         return self.default_temp
 
     def _admit(self) -> None:
-        for slot in range(self.slots):
-            if self._slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
+        free = [i for i in range(self.slots) if self._slot_req[i] is None]
+        for slot, req, pages_row in self.scheduler.admissions(free):
             plen = len(req.prompt)
             bucket = self.bucket_for(plen)
             padded = list(req.prompt) + [0] * (bucket - plen)
@@ -290,12 +324,13 @@ class Engine:
             length = jnp.asarray([plen], jnp.int32)
             self._key, sub = jax.random.split(self._key)
             temp = jnp.asarray([self._req_temp(req)], jnp.float32)
-            tok, one_cache = self._prefill_fn(
+            tok, one_cache = self.executor.prefill(
                 self.params, tokens, length, sub, temp)
             eos = -1 if req.eos_id is None else int(req.eos_id)
-            self.cache, self.state = self._admit_fn(
-                self.cache, self.state, one_cache, slot, jnp.int32(plen),
-                tok[0], jnp.int32(req.max_new_tokens), jnp.int32(eos),
+            self.cache, self.state = self.executor.admit(
+                self.cache, self.state, one_cache, slot,
+                jnp.int32(plen), jnp.asarray(pages_row), tok[0],
+                jnp.int32(req.max_new_tokens), jnp.int32(eos),
                 jnp.float32(self._req_temp(req)), True)
             self._slot_req[slot] = req
             self._slot_first_tok[slot] = tok   # stays on device until drain
@@ -303,13 +338,16 @@ class Engine:
     def step_chunk(self) -> jax.Array:
         """Dispatch one fused decode chunk.  No host synchronization —
         safe to call under ``jax.transfer_guard_device_to_host``."""
-        toks, self.cache, self.state = self._chunk_fn(
+        toks, self.cache, self.state = self.executor.chunk(
             self.params, self.cache, self.state)
         self.steps += self.sync_interval
         return toks
 
     def _drain(self, toks: jax.Array) -> None:
-        """One batched device->host transfer: token history + slot state."""
+        """One batched device->host transfer: token history + slot state.
+        Finished slots are evicted: pages return to the scheduler's free
+        list and the slot's page-table row is pointed at the trash page,
+        so its dead tail writes cannot touch re-leased pages."""
         toks_np, out_len, active, firsts = jax.device_get(
             (toks, self.state["out_len"], self.state["active"],
              [self._slot_first_tok[i] for i in range(self.slots)]))
@@ -328,6 +366,9 @@ class Engine:
                 self.finished.append(req)
                 self._slot_req[slot] = None
                 self._slot_first_tok[slot] = None
+                self.scheduler.release(slot)
+                self.cache = self.executor.free_slot(self.cache,
+                                                     jnp.int32(slot))
 
     def _live(self) -> bool:
         return any(r is not None for r in self._slot_req)
@@ -337,6 +378,12 @@ class Engine:
         steps per call)."""
         self._admit()
         if not self._live():
+            if not self.scheduler.can_progress(0):
+                head = self.queue[0]
+                raise PagePoolExhausted(
+                    f"wedged: rid={head.rid} cannot be admitted "
+                    f"({self.scheduler.pool.free_pages} pages free) and no "
+                    "slot is live to release more")
             return
         self._drain(self.step_chunk())
 

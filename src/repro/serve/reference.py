@@ -20,7 +20,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import forward_decode, forward_prefill
-from repro.serve.engine import Request, empty_batch_cache
+from repro.serve.cache import empty_batch_cache
+from repro.serve.scheduler import Request
 
 __all__ = ["ReferenceEngine", "Request"]
 

@@ -1,0 +1,150 @@
+"""Host-side serving policy layer: queue, admission, eviction, paging.
+
+The serving runtime is layered (paper §2.2.3: scheduling and memory
+management, not math, bound serving throughput once kernels are tuned):
+
+* **Scheduler** (this module) — pure-Python policy: FIFO queue, slot
+  assignment, page-budget reservation, eviction.  No jax arrays, no
+  device work; decisions are made from state the host already knows, so
+  the policy layer adds zero device synchronization.
+* **Executor** (``serve/engine.Executor``) — the compiled layer: bucketed
+  prefill, page-granular admission splice, the fused decode chunk.
+* **Driver** (``serve/engine.Engine``) — glues the two: drains tokens once
+  per chunk, reports finishes to the scheduler, applies its admissions.
+
+Continuous batching falls out of the layering: at every chunk boundary the
+driver reports finished slots (eviction → pages back to the free list) and
+asks for admissions (a freed slot is re-leased to the queue head without
+recompiling anything — all compiled shapes are slot-count-stable).
+
+Pages are reserved *worst-case at admission* (``CacheSpec.blocks_needed``),
+which makes mid-run pool exhaustion impossible for admitted requests: the
+failure mode surfaces as clean backpressure (the queue head waits for
+pages) or as ``PagePoolExhausted`` when a request can never fit, instead
+of as silent corruption of a neighbour's pages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.cache import CacheSpec
+
+
+class PagePoolExhausted(RuntimeError):
+    """Raised when a request's worst-case page reservation can never be
+    satisfied by the pool (the clean backpressure signal — nothing was
+    admitted, no cache state was touched)."""
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    temperature: Optional[float] = None   # None -> engine default
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class PagePool:
+    """Free-list allocator over physical page ids ``0..num_pages-1``.
+
+    Page ``num_pages`` is the trash page — never allocated; unreserved
+    page-table entries point at it so stray writes are discarded."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self.trash = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.peak_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Lease ``n`` pages, or None (backpressure) if not enough free."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        self._free.extend(pages)
+
+
+class Scheduler:
+    """FIFO continuous-batching policy over ``slots`` cache slots and a
+    shared page budget."""
+
+    def __init__(self, spec: CacheSpec):
+        self.spec = spec
+        self.pool = PagePool(spec.num_pages if spec.has_paged else 0)
+        self.queue: List[Request] = []
+        self._leases: Dict[int, List[int]] = {}
+
+    # ---------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        need = self.spec.blocks_needed(len(req.prompt), req.max_new_tokens)
+        if need > self.pool.num_pages and self.spec.has_paged:
+            raise PagePoolExhausted(
+                f"request rid={req.rid} needs {need} pages "
+                f"({len(req.prompt)} prompt + {req.max_new_tokens} new "
+                f"tokens at page_size={self.spec.page_size}) but the pool "
+                f"only has {self.pool.num_pages}; raise --num-pages")
+        self.queue.append(req)
+
+    def admissions(self, free_slots: List[int]
+                   ) -> Iterator[Tuple[int, Request, np.ndarray]]:
+        """Yield ``(slot, request, page_table_row)`` while the queue head
+        fits.  Strictly FIFO: when the head's reservation does not fit,
+        later (smaller) requests do NOT jump it — head-of-line
+        backpressure keeps admission order fair."""
+        free_slots = list(free_slots)
+        while self.queue and free_slots:
+            req = self.queue[0]
+            need = self.spec.blocks_needed(len(req.prompt),
+                                           req.max_new_tokens)
+            pages = self.pool.alloc(need)
+            if pages is None:
+                return                       # wait for an eviction
+            self.queue.pop(0)
+            slot = free_slots.pop(0)
+            self._leases[slot] = pages
+            row = np.full((self.spec.max_blocks,), self.pool.trash, np.int32)
+            row[:len(pages)] = pages
+            yield slot, req, row
+
+    # ----------------------------------------------------------- eviction
+    def release(self, slot: int) -> None:
+        """Return a finished slot's pages to the free list."""
+        self.pool.free(self._leases.pop(slot, []))
+
+    def can_progress(self, live_slots: int) -> bool:
+        """False when the engine is wedged: nothing is running and the
+        queue head still cannot be admitted (should be impossible given
+        the submit() capacity check — a guard, not a policy)."""
+        if not self.queue or live_slots:
+            return True
+        need = self.spec.blocks_needed(len(self.queue[0].prompt),
+                                       self.queue[0].max_new_tokens)
+        return need <= self.pool.free_pages
+
+    # ---------------------------------------------------------- telemetry
+    @property
+    def pages_in_use(self) -> int:
+        return self.pool.in_use
+
+    @property
+    def peak_pages_in_use(self) -> int:
+        return self.pool.peak_in_use

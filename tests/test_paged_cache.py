@@ -1,0 +1,254 @@
+"""Paged decode-cache subsystem: CacheSpec layout, page-table splice,
+slot lifecycle (eviction / re-admission / FIFO fairness), page-pool
+backpressure, long-output capacity beyond the dense max_len ceiling, and
+data-axis sharding specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.models import forward_dense_logits, model_defs
+from repro.models import module as m
+from repro.models.attention import ring_token_positions, ring_valid
+from repro.parallel import sharding as sh
+from repro.serve.cache import PAGED_KV, STATE, CacheSpec
+from repro.serve.engine import Engine, Request
+from repro.serve.scheduler import PagePool, PagePoolExhausted, Scheduler
+
+
+def _model(arch, **kw):
+    cfg = reduced(get_config(arch), **kw)
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# CacheSpec construction
+# ---------------------------------------------------------------------------
+
+def test_cachespec_kinds_per_layer():
+    cfg, _ = _model("zamba2-7b")    # mamba2 backbone + shared attention
+    spec = CacheSpec.from_config(cfg, slots=2, max_len=64, page_size=8)
+    kinds = [ls.kind for ls in spec.layers]
+    assert PAGED_KV in kinds and STATE in kinds
+    assert spec.has_paged
+    # equal-memory default pool: slots x max_len tokens
+    assert spec.num_pages * spec.page_size == 2 * 64
+    assert spec.trash_page == spec.num_pages
+    assert spec.pool_shape[0] == spec.num_pages + 1
+
+
+def test_cachespec_windowed_ring_blocks():
+    cfg, _ = _model("gemma2-2b")    # alternating window=16 / global layers
+    spec = CacheSpec.from_config(cfg, slots=1, max_len=64, page_size=8)
+    rings = {ls.window: ls.ring_blocks for ls in spec.layers
+             if ls is not None and ls.kind == PAGED_KV}
+    assert rings[16] == 2           # ceil(16/8): windowed layers ring early
+    assert rings[None] == 8         # ceil(64/8): full layers span max_len
+    assert spec.max_blocks == 8
+
+
+def test_cachespec_rejects_cross_attention():
+    """The old empty_batch_cache silently pop()-ed enc_kv; now the spec
+    refuses the structure outright with an actionable error."""
+    cfg, _ = _model("whisper-medium")
+    with pytest.raises(ValueError, match="cross-attention"):
+        CacheSpec.from_config(cfg, slots=2, max_len=32)
+
+
+def test_cachespec_blocks_needed_caps_at_table_width():
+    cfg, _ = _model("rwkv6-7b")
+    spec = CacheSpec.from_config(cfg, 2, 64)
+    assert not spec.has_paged and spec.blocks_needed(100, 100) == 0
+    cfg2, _ = _model("internlm2-1.8b")
+    spec2 = CacheSpec.from_config(cfg2, 2, 64, page_size=8)
+    assert spec2.blocks_needed(3, 4) == 1
+    assert spec2.blocks_needed(0, 1) == 1          # empty prompt still pages
+    assert spec2.blocks_needed(60, 1000) == spec2.max_blocks
+
+
+# ---------------------------------------------------------------------------
+# Ring position math (shared by splice and paged decode attention)
+# ---------------------------------------------------------------------------
+
+def test_ring_token_positions_and_validity():
+    # ring of 8, current token t=10 (cache_len=11): slots hold tokens 3..10
+    u = np.asarray(ring_token_positions(jnp.asarray([11]), 8))[0]
+    assert sorted(u.tolist()) == list(range(3, 11))
+    assert u[10 % 8] == 10
+    # before wrap (t=2): slots 3.. were never written -> negative
+    u2 = np.asarray(ring_token_positions(jnp.asarray([3]), 8))[0]
+    assert (u2[:3] == [0, 1, 2]).all() and (u2[3:] < 0).all()
+    # window mask hides ring-retained tokens older than the window
+    v = np.asarray(ring_valid(jnp.asarray([11]), 8, window=4))[0]
+    assert v.sum() == 4
+    u = np.asarray(ring_token_positions(jnp.asarray([11]), 8))[0]
+    assert (u[v] > 10 - 4).all()
+
+
+# ---------------------------------------------------------------------------
+# Slot lifecycle
+# ---------------------------------------------------------------------------
+
+def test_eviction_returns_pages_to_pool():
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, page_size=8)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=4))
+    assert eng.scheduler.pages_in_use == 0
+    done = eng.run()
+    assert len(done) == 3
+    # every lease was released on finish; peak shows the pool was used
+    assert eng.scheduler.pages_in_use == 0
+    assert eng.scheduler.peak_pages_in_use >= 2
+    stats = eng.memory_stats()
+    assert stats["pages_in_use"] == 0 and stats["num_pages"] == 16
+
+
+def test_readmission_into_freed_slot_mid_run():
+    """A short request finishes, its slot and pages are re-leased to a
+    queued request mid-run, and the long-running neighbour is unaffected
+    (its tokens match a solo run) — freed pages were not corrupted."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, page_size=8)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=20))  # long
+    eng.submit(Request(rid=1, prompt=[4, 5], max_new_tokens=3))      # short
+    eng.submit(Request(rid=2, prompt=[6, 7], max_new_tokens=3))      # reuses
+    done = {r.rid: r for r in eng.run()}
+    assert len(done) == 3
+    solo = Engine(cfg, params, slots=2, max_len=64, page_size=8)
+    solo.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=20))
+    (s,) = solo.run()
+    assert done[0].out_tokens == s.out_tokens
+
+
+def test_fifo_queue_fairness_no_jumping():
+    """Head-of-line backpressure: when the queue head's page reservation
+    does not fit, a smaller later request must NOT be admitted around it."""
+    cfg, _ = _model("internlm2-1.8b")
+    spec = CacheSpec.from_config(cfg, slots=2, max_len=64, page_size=8,
+                                 num_pages=8)
+    sched = Scheduler(spec)
+    r0 = Request(rid=0, prompt=[1] * 8, max_new_tokens=24)    # 4 pages
+    r1 = Request(rid=1, prompt=[1] * 8, max_new_tokens=40)    # 6 pages
+    r2 = Request(rid=2, prompt=[1], max_new_tokens=2)         # 1 page
+    for r in (r0, r1, r2):
+        sched.submit(r)
+    admitted = list(sched.admissions([0, 1]))
+    # r0 fits (4 <= 8); r1 needs 6 > 4 free -> head-of-line blocks r2 too
+    assert [req.rid for _, req, _ in admitted] == [0]
+    assert [r.rid for r in sched.queue] == [1, 2]
+    sched.release(admitted[0][0])
+    admitted2 = list(sched.admissions([0, 1]))
+    assert [req.rid for _, req, _ in admitted2] == [1, 2]
+
+
+def test_fifo_completion_order_end_to_end():
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=1, max_len=64, page_size=8,
+                 num_pages=8)
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=40))  # 6 pages
+    eng.submit(Request(rid=1, prompt=[3], max_new_tokens=2))
+    eng.submit(Request(rid=2, prompt=[4], max_new_tokens=2))
+    done = eng.run()
+    assert [r.rid for r in done] == [0, 1, 2]
+
+
+def test_page_pool_exhaustion_is_clean_backpressure():
+    """A request that can never fit raises PagePoolExhausted at submit();
+    nothing is admitted and in-flight neighbours are unharmed."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, page_size=8,
+                 num_pages=4)   # 32-token pool
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8))
+    with pytest.raises(PagePoolExhausted, match="pages"):
+        eng.submit(Request(rid=1, prompt=[1] * 30, max_new_tokens=16))
+    assert len(eng.queue) == 1
+    (r,) = eng.run()
+    assert r.rid == 0 and len(r.out_tokens) == 8
+    solo = Engine(cfg, params, slots=2, max_len=64, page_size=8)
+    solo.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8))
+    (s,) = solo.run()
+    assert r.out_tokens == s.out_tokens
+
+
+def test_page_pool_allocator_invariants():
+    pool = PagePool(4)
+    a = pool.alloc(3)
+    assert sorted(a) == [0, 1, 2] and pool.in_use == 3
+    assert pool.alloc(2) is None           # backpressure, not partial
+    assert pool.in_use == 3                # failed alloc leaks nothing
+    pool.free(a)
+    assert pool.free_pages == 4 and pool.peak_in_use == 3
+
+
+# ---------------------------------------------------------------------------
+# Capacity: paged lifts the per-slot dense ceiling at equal memory
+# ---------------------------------------------------------------------------
+
+def test_output_exceeds_dense_max_len_at_equal_memory():
+    """Old dense layout: 2 slots x 32 tokens.  Same total budget as pages
+    (8 pages x 8 tokens) serves ONE request of 56 tokens — longer than any
+    single dense slot could ever hold — and it still matches teacher
+    forcing.  The queued second request (3-page reservation vs 1 free)
+    back-pressures mid-run, then completes after the long one evicts."""
+    dense_max_len = 32
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, page_size=8,
+                 num_pages=2 * dense_max_len // 8)   # equal slots x max_len
+    n_new = 51                                        # 5 + 51 = 56 tokens
+    eng.submit(Request(rid=0, prompt=[3, 1, 4, 1, 5], max_new_tokens=n_new))
+    eng.submit(Request(rid=1, prompt=[2, 7], max_new_tokens=20))
+    eng.step()
+    # r0 reserved 7 of 8 pages; r1 needs 3 -> engine-level backpressure
+    assert [r.rid for r in eng.queue] == [1]
+    assert eng.scheduler.pages_in_use == 7
+    done = {r.rid: r for r in eng.run(max_steps=10_000)}
+    assert len(done) == 2
+    r = done[0]
+    assert len(r.prompt) + len(r.out_tokens) == 56 > dense_max_len
+    full = r.prompt + r.out_tokens
+    dense = jax.jit(lambda p, b: forward_dense_logits(p, cfg, b))(
+        params, {"tokens": jnp.asarray([full], jnp.int32)})
+    for i, tok in enumerate(r.out_tokens):
+        pos = len(r.prompt) - 1 + i
+        assert int(jnp.argmax(dense[0, pos])) == tok, f"diverged at {i}"
+    assert len(done[1].out_tokens) == 20
+
+
+# ---------------------------------------------------------------------------
+# Sharding: CacheSpec threads Rules onto the data mesh axis
+# ---------------------------------------------------------------------------
+
+def test_cachespec_data_axis_sharding_specs():
+    cfg, _ = _model("internlm2-1.8b")
+    spec = CacheSpec.from_config(cfg, slots=4, max_len=64, page_size=8)
+    rules = sh.Rules(table={sh.BATCH: "data", sh.PAGES: "data"})
+    # slot batch and page pool both shard over the data mesh axis
+    assert rules.spec_for(spec.TABLE_AXES) == P("data")
+    assert rules.spec_for(spec.POOL_AXES) == P("data")
+    struct = spec.structure()
+    assert struct["page_table"][0] == (4, spec.max_blocks)
+    assert struct["len"][1] == (sh.BATCH,)
+    # shardings() is a full-tree map; without a mesh it yields None leaves
+    shardings = spec.shardings(rules)
+    leaves = jax.tree.leaves(shardings)
+    assert leaves == []         # mesh-less Rules -> no NamedShardings
+
+
+def test_engine_accepts_rules_single_device():
+    """rules wiring is a no-op on one device but must not change tokens."""
+    mesh = jax.make_mesh((1,), ("data",))
+    rules = sh.Rules(table={sh.BATCH: "data", sh.PAGES: "data"}, mesh=mesh)
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, rules=rules)
+    eng.submit(Request(rid=0, prompt=[5, 6, 7], max_new_tokens=6))
+    (r,) = eng.run()
+    plain = Engine(cfg, params, slots=2, max_len=64)
+    plain.submit(Request(rid=0, prompt=[5, 6, 7], max_new_tokens=6))
+    (p,) = plain.run()
+    assert r.out_tokens == p.out_tokens

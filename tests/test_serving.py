@@ -100,9 +100,13 @@ def test_ragged_continuous_batching_staggered():
         assert all(0 <= t < cfg.vocab_size for t in by_rid[i].out_tokens)
 
 
-def test_engine_matches_reference_engine():
-    """Token-for-token parity with the pre-fast-path engine (greedy)."""
-    cfg, params = _model("gemma2-2b")
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "gemma2-2b", "rwkv6-7b",
+                                  "zamba2-7b"])
+def test_engine_matches_reference_engine(arch):
+    """Token-for-token parity with the pre-fast-path dense engine (greedy)
+    across all mixer families: full attention (internlm2), windowed rings
+    (gemma2), rwkv6 state, and the zamba2 mamba2+shared-attention hybrid."""
+    cfg, params = _model(arch)
     eng = Engine(cfg, params, slots=2, max_len=64)
     ref = ReferenceEngine(cfg, params, slots=2, max_len=64)
     for i in range(5):
