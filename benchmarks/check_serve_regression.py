@@ -61,12 +61,45 @@ def check(runs, threshold: float) -> int:
                         "chunk retraced "
                         f"({cand.get('new_decode_compiles')} compiles)")
 
+    # ---- prefix-sharing gates (shared-prefix workload in the same run).
+    # Correctness first: radix/CoW admission must be invisible in the
+    # tokens — shared-prefix outputs identical to exclusive ownership.
+    if "prefix_outputs_match_exclusive" in cand:
+        if not cand["prefix_outputs_match_exclusive"]:
+            failures.append(
+                "prefix-hit correctness regressed: shared-prefix outputs "
+                "diverged from exclusive-ownership outputs")
+        if not cand.get("prefix_hit_rate", 0.0) > 0.0:
+            failures.append(
+                "prefix sharing inert: hit rate is 0 on the shared-prefix "
+                "workload")
+        if not cand.get("prefix_pages_saved", 0) > 0:
+            failures.append(
+                "prefix sharing saved no pages vs exclusive ownership "
+                f"(peak {cand.get('prefix_peak_pages')} vs "
+                f"{cand.get('exclusive_peak_pages')})")
+        if not cand.get("prefix_decode_sync_free", True):
+            failures.append("shared-prefix decode chunk performed a "
+                            "device->host transfer")
+        if cand.get("prefix_decode_compiles", 1) != 1:
+            failures.append(
+                "shared-prefix workload retraced the decode chunk "
+                f"({cand.get('prefix_decode_compiles')} compiles)")
+        print(f"prefix sharing: "
+              f"hit_rate={cand.get('prefix_hit_rate', 0.0):.2f} "
+              f"pages_saved={cand.get('prefix_pages_saved')} "
+              f"tokens_skipped={cand.get('prefill_tokens_skipped')} "
+              f"match={cand.get('prefix_outputs_match_exclusive')}")
+    elif "prefix_outputs_match_exclusive" in base:
+        failures.append("candidate run dropped the shared-prefix workload "
+                        "(prefix_* fields missing)")
+
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
         return 1
     print("serve bench OK: sync-free, single decode executable, "
-          "tokens/sec within threshold")
+          "tokens/sec within threshold, prefix sharing correct")
     return 0
 
 

@@ -3,11 +3,21 @@
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke \
         --requests 6 --max-new 12
 
-``--warmup`` pre-compiles every prefill bucket, the jitted cache splice,
-and the fused decode chunk before the first request arrives, so the
-serving loop never pays a compile (the steady-state loop then runs one
-dispatch per ``--sync-interval`` decode steps with zero per-token host
-syncs — see docs/serving.md).
+``--warmup`` pre-compiles every full-prefill bucket, the jitted cache
+splice, and the fused decode chunk before the first request arrives, so
+the steady-state loop runs one dispatch per ``--sync-interval`` decode
+steps with zero per-token host syncs (see docs/serving.md).  Suffix-
+prefill executables (prefix hits) still compile lazily on the first hit
+per (suffix bucket, ctx bucket) shape — so with the default shared-
+prefix workload the first timed run includes one such compile; re-run or
+lengthen the workload for steady-state tok/s.
+
+Prefix sharing is on by default for sharing-capable archs (pure
+full-attention stacks): requests whose prompts share a cached prefix ride
+on refcounted shared pages and prefill only their suffix.  The default
+workload sends every request the same prompt head, so the effect shows up
+directly in the printed hit rate / pages summary; ``--no-prefix-sharing``
+restores exclusive page ownership for comparison.
 """
 
 import argparse
@@ -22,15 +32,23 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64,
-                    help="logical per-slot token cap (page-table width "
-                         "x page size)")
+                    help="logical per-slot token cap (widest page-table "
+                         "width x page size)")
     ap.add_argument("--page-size", type=int, default=8,
                     help="tokens per KV page (serve/cache.py paged pools)")
     ap.add_argument("--num-pages", type=int, default=None,
-                    help="shared KV page budget; default slots*max_len/"
-                         "page_size (the old dense cache's token capacity;"
-                         " windowed archs pay more bytes — see "
-                         "dense/paged ratio in the output)")
+                    help="page budget of the widest (full-attention) pool "
+                         "group; default slots*max_len/page_size (the old "
+                         "dense cache's token capacity).  Sliding-window "
+                         "groups are always window-sized: slots x "
+                         "ceil(window/page_size) pages each")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable radix prefix sharing / copy-on-write "
+                         "page reuse (exclusive page ownership)")
+    ap.add_argument("--shared-prefix", type=int, default=12,
+                    help="length of the prompt head shared by every "
+                         "request in the synthetic workload (0 = fully "
+                         "distinct prompts)")
     ap.add_argument("--sync-interval", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -51,6 +69,7 @@ def main() -> None:
                            jnp.float32)
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
                  page_size=args.page_size, num_pages=args.num_pages,
+                 prefix_sharing=not args.no_prefix_sharing,
                  temperature=args.temperature, top_k=args.top_k,
                  sync_interval=args.sync_interval)
     if args.warmup:
@@ -60,8 +79,9 @@ def main() -> None:
               f"{eng.buckets} + decode chunk compiled in "
               f"{time.perf_counter() - t0:.2f}s")
     t0 = time.perf_counter()
+    head = [1 + (3 * j) % 97 for j in range(max(args.shared_prefix, 0))]
     for i in range(args.requests):
-        eng.submit(Request(rid=i, prompt=[1 + i, 2, 3, 4 + i % 3],
+        eng.submit(Request(rid=i, prompt=head + [1 + i, 2, 3, 4 + i % 3],
                            max_new_tokens=args.max_new))
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -72,11 +92,25 @@ def main() -> None:
           f"({toks/dt:.1f} tok/s, {eng.steps} engine steps, "
           f"{eng.host_syncs} host syncs, "
           f"{eng.prefill_compiles} prefill compiles / "
+          f"{eng.suffix_prefill_compiles} suffix compiles / "
           f"{eng.decode_compiles} decode compiles)")
     ms = eng.memory_stats()
-    print(f"paged KV: page_size={ms['page_size']} num_pages={ms['num_pages']} "
+    groups = ", ".join(
+        f"{k}:{v['num_pages']}p{'w' if v['windowed'] else ''}"
+        for k, v in ms["pool_groups"].items())
+    print(f"paged KV: page_size={ms['page_size']} pools=[{groups}] "
           f"peak_pages_in_use={ms['peak_pages_in_use']} "
-          f"dense/paged capacity ratio={ms['dense_vs_paged_capacity_ratio']:.2f}")
+          f"dense/paged capacity ratio="
+          f"{ms['dense_vs_paged_capacity_ratio']:.2f}")
+    ps = eng.prefix_stats()
+    if ps["prefix_sharing"]:
+        print(f"prefix sharing: hit_rate={ps['prefix_hit_rate']:.2f} "
+              f"({ps['prefix_hits']}/{ps['admissions']} admissions), "
+              f"{ps['prefill_tokens_skipped']} prefill tokens skipped, "
+              f"{ps['shared_page_attaches']} shared attaches, "
+              f"{ps['cow_copies']} CoW copies, "
+              f"{ps['radix_evictions']} evictions, "
+              f"{ps['radix_pages']} pages indexed")
 
 
 if __name__ == "__main__":

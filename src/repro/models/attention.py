@@ -239,6 +239,58 @@ def paged_ring_blocks(window: Optional[int], max_blocks: int,
     return min(max_blocks, -(-window // page_size))
 
 
+def page_group_key(ring_blocks: int) -> str:
+    """Stable pytree key of the pool group with the given ring width.
+
+    Paged layers are grouped by ring width into independently-budgeted
+    pools (``serve/cache.PoolGroup``); the decode path recovers each
+    layer's group from its ring width alone, so the key must be a pure
+    function of it."""
+    return f"ring{ring_blocks}"
+
+
+def prefix_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             ck: jax.Array, cv: jax.Array, off: jax.Array,
+                             *, softcap: Optional[float] = None
+                             ) -> jax.Array:
+    """Suffix-prefill attention against a shared-prefix KV context.
+
+    q/k/v [B,S,H(kv),dh] carry the *suffix* tokens at absolute positions
+    ``off + i`` (rope already applied); ck/cv [B,C,Hkv,dh] are the prefix
+    KV gathered from the paged pool in block order, so ctx token ``j``
+    sits at absolute position ``j`` and is valid iff ``j < off`` (the
+    tail of the gathered ctx is trash-page padding).  Used by the prefix-
+    sharing admission path: prefill runs only on the suffix, attending to
+    the prefix through pages it never recomputes."""
+    b, s, h, dh = q.shape
+    c = ck.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    if g > 1:
+        # constrain once after each repeat, like chunked_attention: GSPMD
+        # otherwise reshards the partially-sharded kv on every constraint
+        k = sh.shard(jnp.repeat(k, g, axis=2), sh.BATCH, None, sh.HEADS, None)
+        v = sh.shard(jnp.repeat(v, g, axis=2), sh.BATCH, None, sh.HEADS, None)
+        ck = sh.shard(jnp.repeat(ck, g, axis=2),
+                      sh.BATCH, None, sh.HEADS, None)
+        cv = sh.shard(jnp.repeat(cv, g, axis=2),
+                      sh.BATCH, None, sh.HEADS, None)
+    kall = jnp.concatenate([ck.astype(q.dtype), k], axis=1)
+    vall = jnp.concatenate([cv.astype(q.dtype), v], axis=1)
+    scale = dh ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kall)
+    scores = scores.astype(jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    qpos = off + jnp.arange(s)[:, None]                     # [S,1]
+    kpos = jnp.concatenate([jnp.arange(c), off + jnp.arange(s)])
+    kvalid = jnp.concatenate([jnp.arange(c) < off,
+                              jnp.ones((s,), bool)])
+    mask = (kpos[None, :] <= qpos) & kvalid[None, :]        # [S,C+S]
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(vall.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vall)
+
+
 def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
                       cache: Dict, cache_len: jax.Array, *,
                       window: Optional[int],
@@ -246,11 +298,19 @@ def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
                       ) -> Tuple[jax.Array, Dict]:
     """One-token attention against a block-paged KV pool.
 
-    cache: {"pk","pv": [num_pages+1, P, Hkv, dh], "pt": [B, max_blocks]}.
-    Writes the new KV through the page table (write-then-gather, so the
-    current token attends to itself), gathers the slot's logical ring, and
-    masks by ring validity.  All shapes are static: the compiled decode
-    chunk only indexes the table the host populated at admission."""
+    cache: {"pk","pv": [num_pages+1, P, Hkv, dh], "pt": [B, max_blocks],
+    optional "wm": [B] bool write mask}.  Writes the new KV through the
+    page table (write-then-gather, so the current token attends to
+    itself), gathers the slot's logical ring, and masks by ring validity.
+    All shapes are static: the compiled decode chunk only indexes the
+    table the host populated at admission.
+
+    ``wm`` (the engine passes its ``active`` slot mask) redirects the
+    writes of finished/idle slots to the trash page.  A slot that
+    finishes mid-chunk keeps "decoding" until the next drain with its
+    position still advancing — without the mask those dead writes would
+    ring-wrap past the table into real pages, which under prefix sharing
+    may be pages other slots (or the radix index) still read."""
     pool_k, pool_v, pt = cache["pk"], cache["pv"], cache["pt"]
     b = q.shape[0]
     page_size = pool_k.shape[1]
@@ -259,10 +319,14 @@ def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
     t = cache_len - 1                                   # [B] current position
     lb = (t // page_size) % blocks                      # logical block
     phys = jnp.take_along_axis(pt[:, :blocks], lb[:, None], axis=1)[:, 0]
+    wm = cache.get("wm")
+    if wm is not None:
+        phys = jnp.where(wm, phys, pool_k.shape[0] - 1)   # dead -> trash
     off = t % page_size
     k_new = kk[:, 0]                                    # [B, Hkv, dh]
     v_new = vv[:, 0]
-    # distinct slots own distinct pages (host invariant); idle slots map to
+    # distinct live slots own every page they write (host invariant:
+    # shared pages go copy-on-write at admission); idle/dead slots map to
     # the shared trash page where last-write-wins races are harmless
     pool_k = pool_k.at[phys, off].set(k_new.astype(pool_k.dtype))
     pool_v = pool_v.at[phys, off].set(v_new.astype(pool_v.dtype))
@@ -292,12 +356,19 @@ def apply(params: Dict, x: jax.Array, *, cfg: ModelConfig,
           mode: str, cache: Optional[Dict] = None,
           cache_len: Optional[jax.Array] = None,
           causal: bool = True,
-          q_chunk: Optional[int] = None
+          q_chunk: Optional[int] = None,
+          ctx: Optional[Dict] = None
           ) -> Tuple[jax.Array, Optional[Dict]]:
     """x [B,S,d] -> (y [B,S,d], new_cache | None).
 
     mode: "dense" (train / encoder: no cache), "prefill" (returns cache),
     "decode" (S==1; reads+updates cache; cache_len includes current token).
+
+    ``ctx`` (prefill only): shared-prefix context for a *suffix* prefill —
+    ``{"pk","pv": pool, "row": [Cb] page ids, "off": scalar}``.  The
+    layer's queries sit at absolute positions ``off + i`` (``positions``
+    must already carry the offset) and attend to the ``off`` prefix
+    tokens gathered from the paged pool without recomputing them.
     """
     dt = x.dtype
     rules = sh.current_rules()
@@ -323,6 +394,24 @@ def apply(params: Dict, x: jax.Array, *, cfg: ModelConfig,
     kk = rope(kk, positions, cfg.rope_theta)
 
     new_cache = None
+    if mode == "prefill" and ctx is not None:
+        # prefix sharing: gather the matched prefix KV from the paged pool
+        # (block order == position order for the non-wrapping full-
+        # attention group) and prefill only the suffix against it.
+        gk = ctx["pk"][ctx["row"]]              # [Cb, P, Hkv, dh]
+        gv = ctx["pv"][ctx["row"]]
+        cb, psz = gk.shape[0], gk.shape[1]
+        ck = gk.reshape(1, cb * psz, *gk.shape[2:])
+        cv = gv.reshape(1, cb * psz, *gv.shape[2:])
+        out = prefix_prefill_attention(q, kk, vv, ck, cv, ctx["off"],
+                                       softcap=cfg.attn_softcap)
+        ck_new = sh.shard(jnp.swapaxes(kk, 1, 2),
+                          sh.BATCH, None, sh.KV_SEQ, None)
+        cv_new = sh.shard(jnp.swapaxes(vv, 1, 2),
+                          sh.BATCH, None, sh.KV_SEQ, None)
+        new_cache = {"k": ck_new, "v": cv_new}
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+        return sh.shard(y, sh.BATCH, sh.SEQ, sh.EMBED), new_cache
     if mode == "decode" and cache is not None and "pk" in cache:
         # block-paged KV (serve/cache.py): pool + page-table indirection
         out, new_cache = paged_decode_step(

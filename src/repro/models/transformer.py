@@ -112,14 +112,20 @@ def _apply_block(lp: Dict, shared_params: Optional[List[Dict]], h: jax.Array,
                  mode: str, positions: jax.Array,
                  cache: Optional[Dict], cache_len: Optional[jax.Array],
                  enc_kv: Optional[Dict], q_chunk: Optional[int],
-                 length: Optional[jax.Array] = None
+                 length: Optional[jax.Array] = None,
+                 ctx: Optional[Dict] = None
                  ) -> Tuple[jax.Array, Optional[Dict], Dict]:
     """One decoder layer. Returns (h, new_cache, aux).
 
     ``length`` [B]: true lengths of right-padded prefill inputs (bucketed
     prefill).  Attention needs no masking for right padding (causality
     already hides later positions); the recurrent mixers use it to carry
-    state as of the last valid token."""
+    state as of the last valid token.
+
+    ``ctx``: shared-prefix context for a suffix prefill (prefix sharing);
+    only full-attention layers can consume it — the capability gate in
+    ``serve/cache.CacheSpec.share_group_key`` guarantees no other layer
+    kind is present when it is set."""
     aux: Dict[str, jax.Array] = {}
     new_cache: Optional[Dict] = None
 
@@ -139,12 +145,16 @@ def _apply_block(lp: Dict, shared_params: Optional[List[Dict]], h: jax.Array,
                                           cfg.norm_eps))
         return h + x, new_cache, aux
 
+    if ctx is not None and block.mixer != ATTN:
+        raise ValueError(
+            f"prefix-sharing suffix prefill reached a {block.mixer} layer; "
+            "only pure full-attention stacks are sharing-capable")
     xn = layers.rmsnorm(lp["ln1"], sh.sp_boundary(h), cfg.norm_eps)
     if block.mixer == ATTN:
         y, new_cache = attention.apply(
             lp["mixer"], xn, cfg=cfg, window=block.window,
             positions=positions, mode=mode, cache=cache, cache_len=cache_len,
-            q_chunk=q_chunk)
+            q_chunk=q_chunk, ctx=ctx)
     elif block.mixer == MAMBA2:
         y, new_cache = mamba2.apply(lp["mixer"], xn, cfg, mode=mode,
                                     state=cache, length=length)
@@ -185,7 +195,8 @@ def _decoder(params, cfg: ModelConfig, h: jax.Array, *, mode: str,
              positions: jax.Array, caches: Optional[List],
              cache_len: Optional[jax.Array], enc_kv_list: Optional[List],
              q_chunk: Optional[int], remat: bool = False,
-             length: Optional[jax.Array] = None
+             length: Optional[jax.Array] = None,
+             ctx_list: Optional[List] = None
              ) -> Tuple[jax.Array, Optional[List], Dict]:
     h0 = h
     shared = params.get("shared")
@@ -193,6 +204,7 @@ def _decoder(params, cfg: ModelConfig, h: jax.Array, *, mode: str,
     aux_all: Dict[str, jax.Array] = {}
     for i, block in enumerate(cfg.blocks):
         cache_i = caches[i] if caches is not None else None
+        ctx_i = ctx_list[i] if ctx_list is not None else None
         enc_kv = enc_kv_list[i] if enc_kv_list is not None else None
         if remat and mode == "dense":
             def blockfn(lp_, shared_, h_, h0_, enc_kv_, pos_, _block=block):
@@ -206,7 +218,7 @@ def _decoder(params, cfg: ModelConfig, h: jax.Array, *, mode: str,
             h, nc, aux = _apply_block(
                 params["layers"][i], shared, h, h0, cfg, block, mode=mode,
                 positions=positions, cache=cache_i, cache_len=cache_len,
-                enc_kv=enc_kv, q_chunk=q_chunk, length=length)
+                enc_kv=enc_kv, q_chunk=q_chunk, length=length, ctx=ctx_i)
         new_caches.append(nc)
         for k_, v_ in aux.items():
             aux_all[k_] = aux_all.get(k_, 0.0) + v_ / cfg.num_layers
@@ -298,7 +310,8 @@ def forward_dense_logits(params, cfg: ModelConfig, batch: Dict, *,
 
 def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
                     q_chunk: Optional[int] = None,
-                    length: Optional[jax.Array] = None
+                    length: Optional[jax.Array] = None,
+                    ctx: Optional[Dict] = None
                     ) -> Tuple[jax.Array, Dict]:
     """Returns (last-token logits [B,vocab], cache pytree).
 
@@ -306,9 +319,24 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
     right-padded to a shape bucket.  Logits are taken at position
     ``length - 1`` and the cache records ``length`` valid tokens, so a
     small fixed set of padded shapes serves every prompt length with no
-    retrace (serve/engine.py's bucketed prefill)."""
+    retrace (serve/engine.py's bucketed prefill).
+
+    ``ctx`` turns this into a *suffix* prefill for prefix sharing:
+    ``{"off": scalar int32, "row": [Cb] int32, "layers": [per-layer
+    {"pk","pv"} pools]}``.  ``tokens`` then holds only the suffix (at
+    absolute positions ``off + i``); each attention layer attends to the
+    ``off`` matched prefix tokens by gathering the shared pages named in
+    ``row`` from its pool.  The returned cache carries suffix KV only —
+    the caller splices it at token offset ``off``."""
     tokens = batch["tokens"]
     positions = jnp.arange(tokens.shape[1])
+    ctx_list = None
+    if ctx is not None:
+        positions = ctx["off"] + positions
+        ctx_list = [None if lc is None else
+                    {"pk": lc["pk"], "pv": lc["pv"],
+                     "row": ctx["row"], "off": ctx["off"]}
+                    for lc in ctx["layers"]]
     enc_kv_list = None
     if cfg.family == "audio":
         enc_out = _encoder(params, cfg, batch["frames"], q_chunk)
@@ -317,7 +345,7 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
     h, caches, _ = _decoder(params, cfg, h, mode="prefill",
                             positions=positions, caches=None, cache_len=None,
                             enc_kv_list=enc_kv_list, q_chunk=q_chunk,
-                            length=length)
+                            length=length, ctx_list=ctx_list)
     if length is None:
         h_last = h[:, -1:]
         clen = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
@@ -332,23 +360,41 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
 
 
 def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
-                   cache: Dict) -> Tuple[jax.Array, Dict]:
+                   cache: Dict, write_mask: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, Dict]:
     """tokens [B,1]; cache from prefill (or abstract).  cache["len"] is the
     number of tokens already in the cache (excluding this one).
 
-    A cache carrying a ``page_table`` uses the block-paged KV layout from
-    ``serve/cache.py``: the shared table is threaded into every paged
-    layer's cache view (``pt``) on the way in and owned once at the top
-    level on the way out, so the scan-carry structure stays stable."""
+    A cache carrying ``page_tables`` uses the block-paged KV layout from
+    ``serve/cache.py``: one table per pool group, keyed by ring width
+    (``attention.page_group_key``).  Each paged layer's table is threaded
+    into its cache view (``pt``) on the way in — the layer's group is
+    recovered from its window and the widest table's width — and the
+    tables are owned once at the top level on the way out, so the
+    scan-carry structure stays stable.
+
+    ``write_mask`` [B] bool (paged path only): rows that may write KV
+    this step; the serving engine passes its ``active`` slot mask so the
+    dead tail of a fused chunk (finished slots keep stepping until the
+    drain) lands on the trash page instead of wrapping into pages that
+    may now be shared with other slots or the radix prefix index."""
     b = tokens.shape[0]
     cache_len = cache["len"] + 1         # including current token
     positions = cache["len"][:, None]    # 0-based position of current token
-    page_table = cache.get("page_table")
+    page_tables = cache.get("page_tables")
     layer_caches = cache["layers"]
-    if page_table is not None:
-        layer_caches = [dict(c, pt=page_table)
-                        if (c is not None and "pk" in c) else c
-                        for c in layer_caches]
+    if page_tables:
+        widest = max(t.shape[1] for t in page_tables.values())
+        threaded = []
+        for block, c in zip(cfg.blocks, layer_caches):
+            if c is not None and "pk" in c:
+                ring = attention.paged_ring_blocks(
+                    block.window, widest, c["pk"].shape[1])
+                c = dict(c, pt=page_tables[attention.page_group_key(ring)])
+                if write_mask is not None:
+                    c["wm"] = write_mask
+            threaded.append(c)
+        layer_caches = threaded
     h = layers.embed(params["embed"], cfg, tokens)
     h, new_caches, _ = _decoder(params, cfg, h, mode="decode",
                                 positions=positions, caches=layer_caches,
@@ -357,8 +403,8 @@ def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
     lg = layers.logits(params["embed"], cfg, h)
     new_cache = {"layers": new_caches, "enc_kv": cache.get("enc_kv"),
                  "len": cache_len}
-    if page_table is not None:
-        new_cache["page_table"] = page_table
+    if page_tables is not None:   # {} for stateless archs: keep structure
+        new_cache["page_tables"] = page_tables
     return lg[:, 0], new_cache
 
 

@@ -31,7 +31,12 @@ from jax.sharding import PartitionSpec as P
 BATCH = "batch"
 SEQ = "seq"          # sequence (activations)
 KV_SEQ = "kv_seq"    # kv-cache sequence dim (decode: sharded on model)
-PAGES = "pages"      # paged-KV pool page dim (serving: sharded on data)
+# paged-KV pool page dim (serving: sharded on data).  One logical axis
+# covers every pool group (serve/cache.PoolGroup): each group's pool and
+# page-id space shard independently along their own dim-0, and the
+# divisibility fallback below drops the rule per-pool where a group's
+# (num_pages + trash) row count does not divide the mesh axis.
+PAGES = "pages"
 EMBED = "act_embed"  # activation d_model dim
 HEADS = "act_heads"
 MLP = "act_mlp"

@@ -1,4 +1,4 @@
-"""Unified decode-cache subsystem: CacheSpec + block-paged KV pools.
+"""Unified decode-cache subsystem: CacheSpec + refcounted block-paged pools.
 
 Before this module, every serving slot preallocated a dense ``max_len`` KV
 row per attention layer (``models/transformer.cache_structure``), so total
@@ -8,31 +8,47 @@ naive-setting trap (§2.2.3).  ``CacheSpec`` replaces that plumbing with a
 per-layer *kind* derived from ``ModelConfig``:
 
 * ``PAGED_KV`` (attention / zamba2 shared-attention layers): keys and
-  values live in a block-paged pool ``[num_pages + 1, page_size, kv_heads,
-  head_dim]`` shared by all slots.  A per-slot **page table**
-  ``[slots, max_blocks]`` maps logical blocks to physical pages; windowed
-  layers ring over their first ``ceil(window / page_size)`` table entries
-  (token ``t`` lives at ring index ``t % ring``), so one mapping serves
-  full attention, sliding windows, and wrap-around.  The last pool row is
-  a **trash page**: unreserved table entries point at it, so a slot whose
-  budget ran out (or that finished mid-chunk) writes garbage there instead
-  of into a neighbour's pages.
+  values live in block-paged pools.  Layers are grouped into **pool
+  groups** by their logical ring width (``ceil(min(max_len, window) /
+  page_size)`` pages); each group owns an independent pool
+  ``[group.num_pages + 1, page_size, kv_heads, head_dim]``, an
+  independent page budget, and an independent per-slot page table
+  ``[slots, ring_blocks]``.  Sliding-window layers therefore size their
+  pool to the *window* (``slots x ring_blocks`` pages) instead of the
+  shared ``num_pages`` budget — the per-layer page-id remapping that
+  removes the old flat-pool byte overhead for windowed archs.  Windowed
+  groups ring over their table (token ``t`` lives at ring index ``t %
+  ring``), so one mapping serves full attention, sliding windows, and
+  wrap-around.  The last pool row of each group is a **trash page**:
+  unreserved table entries point at it, so a slot whose budget ran out
+  (or that finished mid-chunk) writes garbage there instead of into a
+  neighbour's pages.
 * ``STATE`` (mamba2 / rwkv6 layers): O(1) recurrent state stays dense
   ``[slots, ...]`` exactly as before — paging constant-size state buys
   nothing.
 
-Total tokens per slot are bounded by the shared page budget (``num_pages x
-page_size``), not a per-slot preallocation, which lifts the ``max_len``
-ceiling: one request can run past the old dense per-slot limit as long as
-pages are free.
+Pages are **refcounted** (``serve/scheduler.PagePool``): a physical page
+may back the same logical block of several slots at once (prefix sharing
+across requests with a common prompt, indexed by the scheduler's radix
+tree) and stays allocated until every table reference *and* the radix
+index drop it.  A slot that would write into a shared page gets a private
+copy first (``copy_shared_page`` — the jitted copy-on-write path); the
+compiled decode chunk itself never needs to know, because the host
+guarantees at admission time that every page a slot will write is
+exclusively owned or trash.
 
-Physical page ids are allocated host-side (``serve/scheduler.PagePool``)
-at admission, so the fused decode chunk stays a single shape-stable
+Total tokens per slot are bounded by the widest group's page budget, not
+a per-slot preallocation, which lifts the ``max_len`` ceiling: one
+request can run past the old dense per-slot limit as long as pages are
+free.
+
+Physical page ids are allocated host-side (``serve/scheduler``) at
+admission, so the fused decode chunk stays a single shape-stable
 executable with zero host synchronization: the compiled code only ever
-*indexes* the table, never grows it.
+*indexes* the tables, never grows them.
 
 Sharding: the spec carries logical axes for every buffer (slot-batched
-state on ``sh.BATCH``, the page pool on ``sh.PAGES``), so a
+state on ``sh.BATCH``, every group's page pool on ``sh.PAGES``), so a
 ``parallel/sharding.Rules`` table mapping both to the data mesh axis
 shards the serving state over the data axis of ``launch/mesh.py`` meshes.
 """
@@ -47,6 +63,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ATTN, MAMBA2, RWKV6, SHARED_ATTN, ModelConfig
 from repro.models import attention, mamba2, rwkv6
+from repro.models.attention import page_group_key
 from repro.parallel import sharding as sh
 
 PAGED_KV = "paged_kv"    # block-paged KV ring (attention mixers)
@@ -58,6 +75,22 @@ def _ceil_div(a: int, b: int) -> int:
 
 
 @dataclasses.dataclass(frozen=True)
+class PoolGroup:
+    """One independently-budgeted page pool shared by every paged layer
+    with the same logical ring width."""
+
+    key: str            # "ring{R}" — stable pytree key for tables/pools
+    ring_blocks: int    # page-table width (pages per slot)
+    num_pages: int      # pool budget (physical pages, excl. trash)
+    windowed: bool      # True when every member layer is sliding-window
+
+    @property
+    def trash_page(self) -> int:
+        """Physical id of this group's write-discard page."""
+        return self.num_pages
+
+
+@dataclasses.dataclass(frozen=True)
 class LayerCacheSpec:
     """Cache layout of one decoder layer."""
 
@@ -65,6 +98,7 @@ class LayerCacheSpec:
     # PAGED_KV: logical ring width in pages (ceil(min(max_len, window)/P))
     ring_blocks: int = 0
     window: Optional[int] = None
+    group: int = -1     # index into CacheSpec.groups
     # STATE: {name: (shape, logical_axes)} at batch == slots
     state: Optional[Dict[str, Tuple]] = None
 
@@ -76,10 +110,11 @@ class CacheSpec:
 
     cfg: ModelConfig
     slots: int
-    max_len: int          # logical per-slot token cap (page-table width * P)
+    max_len: int          # logical per-slot token cap (widest table * P)
     page_size: int
-    num_pages: int
+    num_pages: int        # widest (full-attention) group's page budget
     layers: List[Optional[LayerCacheSpec]]
+    groups: List[PoolGroup]
 
     # ------------------------------------------------------------ factory
     @classmethod
@@ -94,17 +129,6 @@ class CacheSpec:
                 "via examples/whisper_transcribe.py's direct loop.")
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
-        if num_pages is None:
-            # equal-token-capacity default: slots x max_len tokens, like
-            # the old dense preallocation.  NOTE: every paged layer's pool
-            # is sized to the shared page budget, so windowed layers (old
-            # dense rows: `window` tokens) allocate MORE bytes than dense
-            # under this default — `memory_stats()['dense_vs_paged_
-            # capacity_ratio']` reports the truth (< 1.0 for windowed
-            # archs); pass num_pages explicitly to trade capacity for
-            # bytes.  Per-layer page-id remapping to reclaim the windowed
-            # overhead is a ROADMAP follow-up.
-            num_pages = slots * _ceil_div(max_len, page_size)
         layers: List[Optional[LayerCacheSpec]] = []
         for block in cfg.blocks:
             if block.mixer in (ATTN, SHARED_ATTN):
@@ -120,13 +144,39 @@ class CacheSpec:
                     STATE, state=rwkv6.state_shapes(cfg, slots)))
             else:  # pragma: no cover - config validation forbids this
                 raise ValueError(block.mixer)
+        # ---- pool groups: one per distinct ring width.  The widest group
+        # takes the shared ``num_pages`` budget knob (default: the old
+        # dense layout's slots x max_len token capacity); every narrower
+        # (windowed) group is sized to its window — slots x ring pages —
+        # because a slot can never reference more than ``ring`` pages of
+        # it.  This is what removes the old flat-pool byte overhead for
+        # sliding-window layers.
+        rings = sorted({ls.ring_blocks for ls in layers
+                        if ls is not None and ls.kind == PAGED_KV})
+        widest = rings[-1] if rings else 1
+        if num_pages is None:
+            num_pages = slots * widest
+        groups: List[PoolGroup] = []
+        for r in rings:
+            windowed = all(ls.window is not None for ls in layers
+                           if ls is not None and ls.kind == PAGED_KV
+                           and ls.ring_blocks == r)
+            budget = num_pages if r == widest else slots * r
+            groups.append(PoolGroup(key=page_group_key(r), ring_blocks=r,
+                                    num_pages=budget, windowed=windowed))
+        gidx = {g.ring_blocks: i for i, g in enumerate(groups)}
+        layers = [dataclasses.replace(ls, group=gidx[ls.ring_blocks])
+                  if ls is not None and ls.kind == PAGED_KV else ls
+                  for ls in layers]
         spec = cls(cfg=cfg, slots=slots, max_len=max_len,
-                   page_size=page_size, num_pages=num_pages, layers=layers)
+                   page_size=page_size, num_pages=num_pages, layers=layers,
+                   groups=groups)
         # the compiled decode path re-derives each layer's ring width from
-        # (window, table width, page size) — attention.paged_ring_blocks.
-        # Verify the two formulas agree HERE so any future layout change
-        # fails loudly at spec construction instead of silently spliced
-        # and decoded with different ring widths (wrong attention output).
+        # (window, widest table width, page size) — attention.
+        # paged_ring_blocks.  Verify the two formulas agree HERE so any
+        # future layout change fails loudly at spec construction instead
+        # of silently spliced and decoded with different ring widths
+        # (wrong attention output).
         for block, ls in zip(cfg.blocks, spec.layers):
             if ls is not None and ls.kind == PAGED_KV:
                 derived = attention.paged_ring_blocks(
@@ -143,46 +193,87 @@ class CacheSpec:
 
     @property
     def max_blocks(self) -> int:
-        """Page-table width: the widest logical ring of any paged layer."""
+        """Widest page-table: the widest logical ring of any paged layer."""
         widths = [ls.ring_blocks for ls in self.layers
                   if ls is not None and ls.kind == PAGED_KV]
         return max(widths) if widths else 1
 
+    def group_of(self, key: str) -> PoolGroup:
+        for g in self.groups:
+            if g.key == key:
+                return g
+        raise KeyError(key)
+
+    @property
+    def widest_group(self) -> PoolGroup:
+        return max(self.groups, key=lambda g: g.ring_blocks)
+
+    @property
+    def share_group_key(self) -> Optional[str]:
+        """Pool group eligible for cross-request prefix sharing, or None.
+
+        Sharing reuses prompt-prefix KV pages across slots, which is only
+        sound when (a) every layer's prefix state lives in pages (no
+        recurrent STATE layers — their prefix state is a dense per-slot
+        tensor) and (b) no layer ever ring-wraps a decode write back into
+        a prefix page (no sliding windows), and (c) token KV depends only
+        on the token prefix (no modality frontend prefix, no zamba2
+        shared-block h0 concat).  Under those conditions there is exactly
+        one pool group and prompt pages are immutable once prefilled."""
+        if not self.has_paged or self.cfg.frontend \
+                or self.cfg.num_shared_groups:
+            return None
+        for ls in self.layers:
+            if ls is None or ls.kind != PAGED_KV or ls.window is not None:
+                return None
+        assert len(self.groups) == 1
+        return self.groups[0].key
+
+    @property
+    def prefix_sharing_capable(self) -> bool:
+        return self.share_group_key is not None
+
     @property
     def trash_page(self) -> int:
-        """Physical id of the write-discard page (last pool row)."""
-        return self.num_pages
+        """Physical id of the widest group's write-discard page."""
+        return self.widest_group.trash_page
+
+    def pool_shape_for(self, group: PoolGroup) -> Tuple[int, int, int, int]:
+        return (group.num_pages + 1, self.page_size,
+                self.cfg.num_kv_heads, self.cfg.resolved_head_dim)
 
     @property
     def pool_shape(self) -> Tuple[int, int, int, int]:
-        return (self.num_pages + 1, self.page_size,
-                self.cfg.num_kv_heads, self.cfg.resolved_head_dim)
+        return self.pool_shape_for(self.widest_group)
 
     POOL_AXES = (sh.PAGES, None, None, None)
     TABLE_AXES = (sh.BATCH, None)
 
-    def blocks_needed(self, plen: int, max_new: int) -> int:
-        """Worst-case page-table entries a request ever touches: tokens
-        0..plen+max_new-1, ring-wrapped at the table width.  Reserving this
-        up-front at admission makes mid-run pool exhaustion impossible for
-        admitted requests."""
+    def blocks_needed(self, plen: int, max_new: int) -> Dict[str, int]:
+        """Worst-case page-table entries a request ever touches, per pool
+        group: tokens 0..plen+max_new-1, ring-wrapped at each group's
+        table width.  Reserving this up-front at admission makes mid-run
+        pool exhaustion impossible for admitted requests."""
         if not self.has_paged:
-            return 0
+            return {}
         total = max(plen + max_new, 1)
-        return min(_ceil_div(total, self.page_size), self.max_blocks)
+        blocks = _ceil_div(total, self.page_size)
+        return {g.key: min(blocks, g.ring_blocks) for g in self.groups}
 
     # -------------------------------------------------------------- inits
     def init_paged_cache(self, dtype=jnp.float32) -> Dict[str, Any]:
-        """Zeroed paged decode cache.  Page-table entries start at the
-        trash page, so an unadmitted slot's decode writes are discarded."""
+        """Zeroed paged decode cache.  Page-table entries start at each
+        group's trash page, so an unadmitted slot's decode writes are
+        discarded."""
         layer_caches: List[Optional[Dict]] = []
         for ls in self.layers:
             if ls is None:
                 layer_caches.append(None)
             elif ls.kind == PAGED_KV:
+                shape = self.pool_shape_for(self.groups[ls.group])
                 layer_caches.append({
-                    "pk": jnp.zeros(self.pool_shape, dtype),
-                    "pv": jnp.zeros(self.pool_shape, dtype),
+                    "pk": jnp.zeros(shape, dtype),
+                    "pv": jnp.zeros(shape, dtype),
                 })
             else:
                 layer_caches.append({
@@ -190,8 +281,10 @@ class CacheSpec:
                     for k, (shp, _axes) in ls.state.items()})
         return {
             "layers": layer_caches,
-            "page_table": jnp.full((self.slots, self.max_blocks),
-                                   self.trash_page, jnp.int32),
+            "page_tables": {
+                g.key: jnp.full((self.slots, g.ring_blocks),
+                                g.trash_page, jnp.int32)
+                for g in self.groups} if self.has_paged else {},
             "len": jnp.zeros((self.slots,), jnp.int32),
         }
 
@@ -226,13 +319,16 @@ class CacheSpec:
             if ls is None:
                 per_layer.append(None)
             elif ls.kind == PAGED_KV:
-                per_layer.append({"pk": (self.pool_shape, self.POOL_AXES),
-                                  "pv": (self.pool_shape, self.POOL_AXES)})
+                shape = self.pool_shape_for(self.groups[ls.group])
+                per_layer.append({"pk": (shape, self.POOL_AXES),
+                                  "pv": (shape, self.POOL_AXES)})
             else:
                 per_layer.append(dict(ls.state))
         return {
             "layers": per_layer,
-            "page_table": ((self.slots, self.max_blocks), self.TABLE_AXES),
+            "page_tables": {
+                g.key: ((self.slots, g.ring_blocks), self.TABLE_AXES)
+                for g in self.groups} if self.has_paged else {},
             "len": ((self.slots,), (sh.BATCH,)),
         }
 
@@ -247,14 +343,16 @@ class CacheSpec:
             self.structure(), is_leaf=is_leaf)
 
     # ------------------------------------------------------- memory stats
-    def page_bytes(self, dtype_bytes: int = 4) -> int:
-        """HBM bytes one physical page costs across every paged layer
-        (each page id backs a K and a V block in each paged layer)."""
-        n_paged = sum(1 for ls in self.layers
-                      if ls is not None and ls.kind == PAGED_KV)
+    def group_page_bytes(self, group: PoolGroup,
+                         dtype_bytes: int = 4) -> int:
+        """HBM bytes one physical page of ``group`` costs across every
+        member layer (each page id backs a K and a V block per layer)."""
+        n = sum(1 for ls in self.layers
+                if ls is not None and ls.kind == PAGED_KV
+                and self.groups[ls.group] is group)
         per_layer = (2 * self.page_size * self.cfg.num_kv_heads
                      * self.cfg.resolved_head_dim * dtype_bytes)
-        return n_paged * per_layer
+        return n * per_layer
 
     def dense_kv_bytes(self, dtype_bytes: int = 4) -> int:
         """What the old dense layout preallocated for attention KV."""
@@ -268,24 +366,39 @@ class CacheSpec:
         return total
 
     def paged_kv_bytes(self, dtype_bytes: int = 4) -> int:
-        return self.num_pages * self.page_bytes(dtype_bytes)
+        return sum(g.num_pages * self.group_page_bytes(g, dtype_bytes)
+                   for g in self.groups)
 
-    def memory_stats(self, pages_in_use: int,
+    def total_pages(self) -> int:
+        return sum(g.num_pages for g in self.groups)
+
+    def memory_stats(self, pages_in_use: Dict[str, int],
                      live_tokens: int) -> Dict[str, Any]:
-        """Paged-cache memory telemetry for the BENCH_serve.json schema."""
-        in_use_bytes = pages_in_use * self.page_bytes()
+        """Paged-cache memory telemetry for the BENCH_serve.json schema.
+
+        ``pages_in_use`` maps group key -> leased pages (``{}`` for
+        stateless archs)."""
+        in_use_bytes = sum(pages_in_use.get(g.key, 0)
+                           * self.group_page_bytes(g) for g in self.groups)
         dense = self.dense_kv_bytes()
         paged = self.paged_kv_bytes()
         return {
             "page_size": self.page_size,
-            "num_pages": self.num_pages,
-            "pages_in_use": pages_in_use,
+            "num_pages": self.total_pages(),
+            "pages_in_use": sum(pages_in_use.values()),
             "hbm_bytes_per_live_token": (
                 in_use_bytes / live_tokens if live_tokens else 0.0),
             "dense_vs_paged_capacity_ratio": (
                 dense / paged if paged else 1.0),
             "paged_kv_bytes": paged,
             "dense_kv_bytes": dense,
+            "pool_groups": {
+                g.key: {
+                    "ring_blocks": g.ring_blocks,
+                    "num_pages": g.num_pages,
+                    "windowed": g.windowed,
+                    "pages_in_use": pages_in_use.get(g.key, 0),
+                } for g in self.groups},
         }
 
 
@@ -295,34 +408,38 @@ class CacheSpec:
 
 def splice_paged_layer(pool_k: jax.Array, pool_v: jax.Array,
                        pre_k: jax.Array, pre_v: jax.Array,
-                       pages_row: jax.Array, plen: jax.Array,
-                       ring_blocks: int, page_size: int
+                       pages_row: jax.Array, start: jax.Array,
+                       valid_len: jax.Array, ring_blocks: int,
+                       page_size: int, trash_page: int
                        ) -> Tuple[jax.Array, jax.Array]:
-    """Write a batch-1 prefill KV ``[1, Hkv, bucket, dh]`` into the pool,
-    one page-granular read-modify-write per logical block.
+    """Write a batch-1 prefill KV ``[1, Hkv, bucket, dh]`` into the pool
+    as one token-granular scatter.
 
-    Token ``t`` lands at page ``pages_row[(t // P) % ring_blocks]``, offset
-    ``t % P`` — i.e. ring index ``t % (ring_blocks * P)``, the same write
-    rule decode uses.  Pad positions (``t >= plen``, bucketed prefill) are
-    masked out of the merge, so they can neither clobber wrapped-around
-    valid tokens nor leak garbage into pages another slot may later attend
-    to.  The block loop is static (one compile per prefill bucket)."""
+    Local token ``i`` holds global position ``g = start + i``; it lands at
+    page ``pages_row[(g // P) % ring_blocks]``, offset ``g % P`` — the
+    same write rule decode uses.  ``start`` is 0 for a full prefill and
+    the prefix-match length for a suffix prefill (prefix sharing), and
+    need not be page-aligned: the scatter touches exactly the written
+    offsets, so a copy-on-write page keeps its earlier tokens.  Masked
+    tokens are redirected to the trash page instead of merged: pad
+    positions (``i >= valid_len``, bucketed prefill) and — for windowed
+    rings that wrap *within* one prefill — every token that is not the
+    newest occupant of its ring slot, which keeps the scatter free of
+    conflicting valid writes."""
     k = jnp.swapaxes(pre_k[0], 0, 1)   # [bucket, Hkv, dh]
     v = jnp.swapaxes(pre_v[0], 0, 1)
     bucket = k.shape[0]
-    nblocks = _ceil_div(bucket, page_size)
-    pad = nblocks * page_size - bucket
-    if pad:
-        k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
-    kb = k.reshape(nblocks, page_size, *k.shape[1:]).astype(pool_k.dtype)
-    vb = v.reshape(nblocks, page_size, *v.shape[1:]).astype(pool_v.dtype)
-    for j in range(nblocks):           # static: exact HLO, no dynamic loop
-        dest = pages_row[j % ring_blocks]
-        colmask = (j * page_size + jnp.arange(page_size)) < plen
-        cm = colmask[:, None, None]
-        pool_k = pool_k.at[dest].set(jnp.where(cm, kb[j], pool_k[dest]))
-        pool_v = pool_v.at[dest].set(jnp.where(cm, vb[j], pool_v[dest]))
+    idx = jnp.arange(bucket)
+    g = start + idx
+    keep = idx < valid_len
+    ring = ring_blocks * page_size
+    if bucket > ring:   # static: only wrap-capable shapes pay the mask
+        keep &= g >= start + valid_len - ring
+    phys = jnp.where(keep, pages_row[(g // page_size) % ring_blocks],
+                     trash_page)
+    off = g % page_size
+    pool_k = pool_k.at[phys, off].set(k.astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, off].set(v.astype(pool_v.dtype))
     return pool_k, pool_v
 
 
@@ -336,45 +453,80 @@ def _splice_state_leaf(big: Optional[jax.Array], small: Optional[jax.Array],
 
 
 def admit_cache(spec: CacheSpec, cache: Dict, one_cache: Dict,
-                slot: jax.Array, plen: jax.Array,
-                pages_row: jax.Array) -> Dict:
+                slot: jax.Array, start: jax.Array, plen: jax.Array,
+                rows: Dict[str, jax.Array]) -> Dict:
     """Jit-traceable admission: splice a batch-1 prefill cache into
-    ``slot`` and install its page-table row (reserved pages padded with
-    the trash id, so writes past the reservation are discarded, never
-    aliased into a neighbour's pages)."""
+    ``slot`` starting at global token position ``start`` (0 for a full
+    prefill; the prefix-match length for a suffix prefill whose first
+    ``start`` tokens ride on shared pages) and install its page-table
+    rows (one per pool group; reserved pages padded with the trash id, so
+    writes past the reservation are discarded, never aliased into a
+    neighbour's pages).  ``plen`` is the request's full logical prompt
+    length — the slot's ``len`` after admission regardless of how much
+    prefill was skipped."""
+    valid = plen - start
     new_layers: List[Optional[Dict]] = []
     for ls, big, small in zip(spec.layers, cache["layers"],
                               one_cache["layers"]):
         if ls is None:
             new_layers.append(big)
         elif ls.kind == PAGED_KV:
+            group = spec.groups[ls.group]
             pk, pv = splice_paged_layer(
                 big["pk"], big["pv"], small["k"], small["v"],
-                pages_row, plen, ls.ring_blocks, spec.page_size)
+                rows[group.key], start, valid, ls.ring_blocks,
+                spec.page_size, group.trash_page)
             new_layers.append({"pk": pk, "pv": pv})
         else:
             new_layers.append({
                 k: _splice_state_leaf(big[k], small[k], slot)
                 for k in big})
-    page_table = jax.lax.dynamic_update_slice(
-        cache["page_table"], pages_row[None].astype(jnp.int32), (slot, 0))
+    page_tables = {
+        k: jax.lax.dynamic_update_slice(
+            cache["page_tables"][k], rows[k][None].astype(jnp.int32),
+            (slot, 0))
+        for k in cache["page_tables"]}
     length = jax.lax.dynamic_update_slice_in_dim(
         cache["len"], plen[None].astype(jnp.int32), slot, axis=0)
-    return {"layers": new_layers, "page_table": page_table, "len": length}
+    return {"layers": new_layers, "page_tables": page_tables, "len": length}
+
+
+def copy_shared_page(spec: CacheSpec, cache: Dict, group_key: str,
+                     src: jax.Array, dst: jax.Array) -> Dict:
+    """Jit-traceable copy-on-write: duplicate physical page ``src`` into
+    ``dst`` in every layer pool of ``group_key``.  The scheduler invokes
+    this at admission for a slot about to write into a shared page (e.g.
+    a partially-matched prefix page, or the final page of a fully-matched
+    prompt); the slot's table then points at the private copy, so the
+    compiled decode path never observes sharing."""
+    new_layers: List[Optional[Dict]] = []
+    for ls, big in zip(spec.layers, cache["layers"]):
+        if (ls is not None and ls.kind == PAGED_KV
+                and spec.groups[ls.group].key == group_key):
+            new_layers.append({
+                "pk": big["pk"].at[dst].set(big["pk"][src]),
+                "pv": big["pv"].at[dst].set(big["pv"][src]),
+            })
+        else:
+            new_layers.append(big)
+    return dict(cache, layers=new_layers)
 
 
 def free_slot_cache(spec: CacheSpec, cache: Dict, slot: jax.Array) -> Dict:
-    """Jit-traceable eviction: point the freed slot's page-table row at the
-    trash page and zero its length.  Its physical pages go back to the
-    host-side free list (``scheduler.PagePool``); after this update the
-    idle slot's dead decode writes land on the trash page, so those pages
-    can be re-leased immediately without corruption."""
-    row = jnp.full((1, spec.max_blocks), spec.trash_page, jnp.int32)
-    page_table = jax.lax.dynamic_update_slice(
-        cache["page_table"], row, (slot, 0))
+    """Jit-traceable eviction: point the freed slot's page-table rows at
+    each group's trash page and zero its length.  Its physical pages go
+    back to the host-side refcounted pools (``serve/scheduler``); after
+    this update the idle slot's dead decode writes land on trash pages,
+    so exclusively-owned pages can be re-leased immediately without
+    corruption — and shared pages stay valid for their other referents."""
+    page_tables = {}
+    for g in spec.groups:
+        row = jnp.full((1, g.ring_blocks), g.trash_page, jnp.int32)
+        page_tables[g.key] = jax.lax.dynamic_update_slice(
+            cache["page_tables"][g.key], row, (slot, 0))
     length = jax.lax.dynamic_update_slice_in_dim(
         cache["len"], jnp.zeros((1,), jnp.int32), slot, axis=0)
-    return dict(cache, page_table=page_table, len=length)
+    return dict(cache, page_tables=page_tables, len=length)
 
 
 def empty_batch_cache(cfg: ModelConfig, slots: int, max_len: int):

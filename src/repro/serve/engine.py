@@ -6,23 +6,28 @@ once the math is tuned.  The runtime is split into three layers so each
 overhead has exactly one owner:
 
 * **Scheduler** (``serve/scheduler.Scheduler``) — host-side policy: FIFO
-  queue, slot admission, page-budget reservation, eviction.  Continuous
+  queue, slot admission, per-group page-budget reservation, refcounted
+  prefix sharing over a radix index, LRU prefix eviction.  Continuous
   batching: slots free and re-admit at chunk boundaries without
   recompiling anything.
 * **Executor** (``Executor`` below) — the compiled layer: bucketed
-  prefill, the page-granular admission splice, and the fused decode chunk
-  (``sync_interval`` decode steps + on-device sampling + slot bookkeeping
-  in ONE ``lax.scan`` executable, zero host<->device syncs inside).
+  prefill (full and shared-prefix *suffix* variants), the page-granular
+  admission splice, the copy-on-write page duplication, and the fused
+  decode chunk (``sync_interval`` decode steps + on-device sampling +
+  slot bookkeeping in ONE ``lax.scan`` executable, zero host<->device
+  syncs inside).
 * **Driver** (``Engine``) — glues them: one batched device->host token
   drain per chunk, finish reporting, admission application.
 
-The decode cache is the block-paged subsystem from ``serve/cache.py``:
-attention KV lives in shared page pools behind per-slot page tables
-(capacity bounded by the page budget, not ``slots x max_len``), while
-mamba2/rwkv6 recurrent state stays dense.  ``CacheSpec`` carries logical
-sharding axes for every buffer, so a ``parallel/sharding.Rules`` table
-mapping ``BATCH``/``PAGES`` to the data mesh axis serves multi-device via
-the existing ``launch/mesh.py`` machinery.
+The decode cache is the refcounted block-paged subsystem from
+``serve/cache.py``: attention KV lives in per-ring-width page pools with
+independent budgets behind per-slot page tables (sliding-window layers
+pay window-sized pools, capacity bounded by the page budgets, not
+``slots x max_len``), while mamba2/rwkv6 recurrent state stays dense.
+``CacheSpec`` carries logical sharding axes for every buffer, so a
+``parallel/sharding.Rules`` table mapping ``BATCH``/``PAGES`` to the data
+mesh axis serves multi-device via the existing ``launch/mesh.py``
+machinery.
 
 ``ReferenceEngine`` in ``repro.serve.reference`` preserves the dense
 per-token-sync loop as the measurement baseline and equivalence oracle for
@@ -36,6 +41,7 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import forward_decode, forward_prefill
@@ -43,8 +49,8 @@ from repro.parallel import sharding as sh
 from repro.serve import cache as cache_mod
 from repro.serve import sampling
 from repro.serve.cache import CacheSpec, empty_batch_cache  # noqa: F401
-from repro.serve.scheduler import (PagePoolExhausted, Request,  # noqa: F401
-                                   Scheduler)
+from repro.serve.scheduler import (Admission, PagePoolExhausted,  # noqa: F401
+                                   Request, Scheduler)
 
 
 def _next_pow2(n: int) -> int:
@@ -53,9 +59,10 @@ def _next_pow2(n: int) -> int:
 
 class Executor:
     """Compiled serving layer: every function here is a jit with stable
-    shapes (one executable per prefill bucket; exactly one decode chunk).
-    The cache and slot state are donated through the chunk and the splice
-    on backends that implement donation (not CPU)."""
+    shapes (one executable per prefill bucket — plus one per (suffix
+    bucket, ctx-block bucket) pair on the prefix-sharing path; exactly
+    one decode chunk).  The cache and slot state are donated through the
+    chunk and the splice on backends that implement donation (not CPU)."""
 
     def __init__(self, cfg: ModelConfig, spec: CacheSpec, *, top_k: int,
                  sync_interval: int, donate: bool,
@@ -66,14 +73,20 @@ class Executor:
         self.sync_interval = int(sync_interval)
         self._rules = rules
         self._prefill_fn = jax.jit(self._prefill_impl)
+        # suffix prefill READS the live pools (shared-prefix gather), so
+        # its cache argument is never donated
+        self._suffix_fn = jax.jit(self._prefill_suffix_impl)
         if donate:
             self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(0, 1))
             self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1, 2))
             self._free_fn = jax.jit(self._free_impl, donate_argnums=(0,))
+            self._copy_fn = jax.jit(self._copy_impl, donate_argnums=(0,),
+                                    static_argnums=(3,))
         else:
             self._admit_fn = jax.jit(self._admit_impl)
             self._chunk_fn = jax.jit(self._chunk_impl)
             self._free_fn = jax.jit(self._free_impl)
+            self._copy_fn = jax.jit(self._copy_impl, static_argnums=(3,))
 
     def _ctx(self):
         """Sharding rules are a tracing-time thread-local; enter them for
@@ -98,13 +111,30 @@ class Executor:
                               top_k=self.top_k)
         return tok, cache
 
-    def _admit_impl(self, cache, state, one_cache, slot, plen,
-                    pages_row, first_tok, max_new, eos, temp, active):
-        """Jitted admission: page-granular splice of the prefill cache into
-        ``slot`` (serve/cache.admit_cache) + device-side bookkeeping init.
-        One compile per prefill bucket; everything else is traced."""
+    def _prefill_suffix_impl(self, params, tokens, length, off, ctx_row,
+                             layer_pools, key, temp):
+        """Shared-prefix suffix prefill: tokens [1, bucket] hold only the
+        un-matched prompt tail at absolute positions ``off + i``; the
+        matched prefix is attended through the pool pages named in
+        ``ctx_row`` (the new slot's own table row — shared pages plus any
+        copy-on-write duplicate) without being recomputed.  One compile
+        per (suffix bucket, ctx-block bucket) shape pair."""
+        ctx = {"off": off, "row": ctx_row, "layers": layer_pools}
+        logits, cache = forward_prefill(params, self.cfg,
+                                        {"tokens": tokens},
+                                        length=length, ctx=ctx)
+        tok = sampling.sample(logits, key, temperature=temp,
+                              top_k=self.top_k)
+        return tok, cache
+
+    def _admit_impl(self, cache, state, one_cache, slot, start, plen,
+                    rows, first_tok, max_new, eos, temp, active):
+        """Jitted admission: page-granular splice of the (full or suffix)
+        prefill cache into ``slot`` from token offset ``start``
+        (serve/cache.admit_cache) + device-side bookkeeping init.  One
+        compile per prefill bucket; everything else is traced."""
         new_cache = cache_mod.admit_cache(self.spec, cache, one_cache,
-                                          slot, plen, pages_row)
+                                          slot, start, plen, rows)
         st = dict(state)
         st["tokens"] = state["tokens"].at[slot].set(first_tok)
         st["out_len"] = state["out_len"].at[slot].set(1)
@@ -121,8 +151,12 @@ class Executor:
         thing the host ever reads."""
         def body(carry, _):
             cache, state = carry
+            # active as write mask: a finished slot's dead-tail steps must
+            # not wrap KV writes into pages now shared with other slots
+            # or the radix prefix index
             logits, cache = forward_decode(
-                params, self.cfg, state["tokens"][:, None], cache)
+                params, self.cfg, state["tokens"][:, None], cache,
+                write_mask=state["active"])
             cache.pop("enc_kv", None)   # decoder-only: keep carry structure
             key, sub = jax.random.split(state["key"])
             nxt = sampling.sample(logits, sub, temperature=state["temp"],
@@ -137,14 +171,30 @@ class Executor:
     def _free_impl(self, cache, slot):
         return cache_mod.free_slot_cache(self.spec, cache, slot)
 
+    def _copy_impl(self, cache, src, dst, group_key):
+        """Copy-on-write: duplicate page ``src`` into ``dst`` across the
+        sharing group's layer pools before the owner slot writes."""
+        return cache_mod.copy_shared_page(self.spec, cache, group_key,
+                                          src, dst)
+
     # -------------------------------------------------------- public calls
     def prefill(self, params, tokens, length, key, temp):
         with self._ctx():
             return self._prefill_fn(params, tokens, length, key, temp)
 
+    def prefill_suffix(self, params, tokens, length, off, ctx_row,
+                       layer_pools, key, temp):
+        with self._ctx():
+            return self._suffix_fn(params, tokens, length, off, ctx_row,
+                                   layer_pools, key, temp)
+
     def admit(self, cache, state, *args):
         with self._ctx():
             return self._admit_fn(cache, state, *args)
+
+    def copy_page(self, cache, src, dst, group_key):
+        with self._ctx():
+            return self._copy_fn(cache, src, dst, group_key)
 
     def chunk(self, params, cache, state):
         with self._ctx():
@@ -160,18 +210,26 @@ class Executor:
         return self._prefill_fn._cache_size()
 
     @property
+    def suffix_prefill_compiles(self) -> int:
+        return self._suffix_fn._cache_size()
+
+    @property
     def decode_compiles(self) -> int:
         return self._chunk_fn._cache_size()
 
 
 class Engine:
     """Host driver: composes Scheduler (policy) + Executor (compiled) over
-    the paged cache.  ``max_len`` is the *logical* per-slot token cap (the
-    page-table width x page_size); physical capacity is ``num_pages x
-    page_size`` tokens shared by all slots (default: the old dense
-    ``slots x max_len`` token capacity — equal KV bytes too for
-    full-attention archs; windowed layers cost more under the default,
-    see ``CacheSpec.from_config`` and ``memory_stats()``)."""
+    the refcounted paged cache.  ``max_len`` is the *logical* per-slot
+    token cap (the widest page-table width x page_size); physical
+    capacity is per pool group — ``num_pages x page_size`` tokens for the
+    widest (full-attention) group (default: the old dense ``slots x
+    max_len`` token capacity), ``slots x window`` tokens for each
+    sliding-window group (sized to the window, no flat-pool byte
+    overhead).  ``prefix_sharing`` (on by default, auto-disabled for
+    archs whose prefix state cannot live in pages) admits requests with a
+    cached prompt prefix onto shared pages and prefillls only the
+    suffix."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
@@ -179,6 +237,7 @@ class Engine:
                  sync_interval: int = 8, min_bucket: int = 8,
                  buckets: Optional[List[int]] = None,
                  page_size: int = 8, num_pages: Optional[int] = None,
+                 prefix_sharing: bool = True,
                  rules: Optional[sh.Rules] = None,
                  donate: Any = "auto"):
         if cfg.cross_attention:
@@ -211,7 +270,7 @@ class Engine:
         self.spec = CacheSpec.from_config(cfg, slots, max_len,
                                           page_size=page_size,
                                           num_pages=num_pages)
-        self.scheduler = Scheduler(self.spec)
+        self.scheduler = Scheduler(self.spec, prefix_sharing=prefix_sharing)
         self.executor = Executor(cfg, self.spec, top_k=self.top_k,
                                  sync_interval=self.sync_interval,
                                  donate=self._donate, rules=rules)
@@ -245,30 +304,44 @@ class Engine:
         return self.executor.prefill_compiles
 
     @property
+    def suffix_prefill_compiles(self) -> int:
+        return self.executor.suffix_prefill_compiles
+
+    @property
     def decode_compiles(self) -> int:
         return self.executor.decode_compiles
 
     def memory_stats(self) -> Dict[str, Any]:
-        """Paged-cache memory telemetry (peak page occupancy + HBM bytes
-        per live generated token at the current instant)."""
+        """Paged-cache memory telemetry (per-group page occupancy + HBM
+        bytes per live generated token at the current instant)."""
         live = sum(len(r.out_tokens) + len(r.prompt)
                    for r in self._slot_req if r is not None)
-        stats = self.spec.memory_stats(self.scheduler.pages_in_use, live)
+        stats = self.spec.memory_stats(
+            self.scheduler.pages_in_use_by_group, live)
         stats["peak_pages_in_use"] = self.scheduler.peak_pages_in_use
         return stats
+
+    def prefix_stats(self) -> Dict[str, Any]:
+        """Prefix-sharing telemetry (hit rate, skipped prefill tokens,
+        shared-page attaches, CoW copies, radix evictions)."""
+        return self.scheduler.prefix_stats()
 
     # ------------------------------------------------------------ serving
     def submit(self, req: Request) -> None:
         # validate HERE, where the caller can handle it: raising mid-run()
         # would drop the request and strand in-flight slots
-        if len(req.prompt) > self.max_len \
+        if len(req.prompt) + req.max_new_tokens > self.max_len \
                 and not self.cfg.supports_long_context:
-            # full-attention page tables cap at max_len tokens; splicing a
-            # longer prompt would silently mod-wrap it like a ring
+            # full-attention page tables cap at max_len tokens; a longer
+            # prompt (or a generation budget running past the table)
+            # would silently mod-wrap like a ring, overwriting the
+            # oldest KV — including prefix pages other slots or the
+            # radix index may reference
             raise ValueError(
-                f"prompt length {len(req.prompt)} exceeds "
-                f"max_len={self.max_len} and {self.cfg.name} has "
-                f"non-windowed attention; raise max_len")
+                f"prompt length {len(req.prompt)} + max_new_tokens "
+                f"{req.max_new_tokens} exceeds max_len={self.max_len} "
+                f"and {self.cfg.name} has non-windowed attention; raise "
+                "max_len or lower max_new_tokens")
         self.scheduler.submit(req)   # may raise PagePoolExhausted
 
     def bucket_for(self, plen: int) -> int:
@@ -280,15 +353,24 @@ class Engine:
         self.buckets.sort()
         return b
 
+    def _ctx_bucket(self, nblocks: int) -> int:
+        """Pad the shared-prefix ctx gather to a power-of-two block count
+        (capped at the sharing group's table width), so the suffix
+        prefill compiles O(log^2) executables, not one per match."""
+        ring = self.spec.group_of(self.scheduler.share_key).ring_blocks
+        return min(_next_pow2(max(nblocks, 1)), ring)
+
     def warmup(self) -> None:
         """Pre-compile every prefill bucket, the splice, and the decode
         chunk so serving never pays a compile inside the hot loop.
-        Semantically inert: admissions use the trash page table row and
+        Semantically inert: admissions use trash page-table rows and
         ``active=False``, and the PRNG key is restored afterwards, so
-        seeded sampled runs are identical with or without warmup."""
+        seeded sampled runs are identical with or without warmup.
+        (Suffix-prefill executables still compile lazily on the first
+        prefix hit per shape pair.)"""
         key_before = jnp.array(self.state["key"])   # copy: state is donated
-        trash_row = jnp.full((self.spec.max_blocks,), self.spec.trash_page,
-                             jnp.int32)
+        trash_rows = {g.key: jnp.full((g.ring_blocks,), g.trash_page,
+                                      jnp.int32) for g in self.spec.groups}
         for b in self.buckets:
             tokens = jnp.zeros((1, b), jnp.int32)
             length = jnp.zeros((1,), jnp.int32)
@@ -299,13 +381,13 @@ class Engine:
             # active=False: compiles the splice without touching live slots
             self.cache, self.state = self.executor.admit(
                 self.cache, self.state, one_cache, 0,
-                jnp.int32(0), trash_row, tok[0], jnp.int32(0),
-                jnp.int32(-1), jnp.float32(0.0), False)
+                jnp.int32(0), jnp.int32(0), trash_rows, tok[0],
+                jnp.int32(0), jnp.int32(-1), jnp.float32(0.0), False)
         _, self.cache, self.state = self.executor.chunk(
             self.params, self.cache, self.state)
         # eviction splice: compiling it here keeps the first request
         # completion from paying a trace inside the serving loop (slot 0
-        # is idle, so re-trashing its table row is inert)
+        # is idle, so re-trashing its table rows is inert)
         self.cache = self.executor.free_slot(self.cache, jnp.int32(0))
         self.state = dict(self.state, key=key_before)
 
@@ -316,20 +398,49 @@ class Engine:
 
     def _admit(self) -> None:
         free = [i for i in range(self.slots) if self._slot_req[i] is None]
-        for slot, req, pages_row in self.scheduler.admissions(free):
+        for adm in self.scheduler.admissions(free):
+            req, slot = adm.req, adm.slot
             plen = len(req.prompt)
-            bucket = self.bucket_for(plen)
-            padded = list(req.prompt) + [0] * (bucket - plen)
-            tokens = jnp.asarray([padded], jnp.int32)
-            length = jnp.asarray([plen], jnp.int32)
             self._key, sub = jax.random.split(self._key)
             temp = jnp.asarray([self._req_temp(req)], jnp.float32)
-            tok, one_cache = self.executor.prefill(
-                self.params, tokens, length, sub, temp)
+            if adm.cow is not None:
+                # the slot will write into a shared page (partial-page
+                # match, or last page of a fully-matched prompt): give it
+                # a private copy BEFORE any prefill gather or splice
+                _blk, src, dst = adm.cow
+                self.cache = self.executor.copy_page(
+                    self.cache, jnp.int32(src), jnp.int32(dst),
+                    self.scheduler.share_key)
+            s = adm.suffix_start
+            if s > 0:
+                # prefix hit: prefill only the un-matched suffix, reading
+                # the matched prefix from the slot's (shared) pages
+                gkey = self.scheduler.share_key
+                suffix = list(req.prompt[s:])
+                bucket = self.bucket_for(len(suffix))
+                padded = suffix + [0] * (bucket - len(suffix))
+                nctx = -(-s // self.spec.page_size)
+                cb = self._ctx_bucket(nctx)
+                trash = self.spec.group_of(gkey).trash_page
+                ctx_row = np.full((cb,), trash, np.int32)
+                ctx_row[:nctx] = adm.rows[gkey][:nctx]
+                pools = [c if (c is not None and "pk" in c) else None
+                         for c in self.cache["layers"]]
+                tok, one_cache = self.executor.prefill_suffix(
+                    self.params, jnp.asarray([padded], jnp.int32),
+                    jnp.asarray([len(suffix)], jnp.int32), jnp.int32(s),
+                    jnp.asarray(ctx_row), pools, sub, temp)
+            else:
+                bucket = self.bucket_for(plen)
+                padded = list(req.prompt) + [0] * (bucket - plen)
+                tok, one_cache = self.executor.prefill(
+                    self.params, jnp.asarray([padded], jnp.int32),
+                    jnp.asarray([plen], jnp.int32), sub, temp)
             eos = -1 if req.eos_id is None else int(req.eos_id)
+            rows = {k: jnp.asarray(v) for k, v in adm.rows.items()}
             self.cache, self.state = self.executor.admit(
                 self.cache, self.state, one_cache, slot,
-                jnp.int32(plen), jnp.asarray(pages_row), tok[0],
+                jnp.int32(s), jnp.int32(plen), rows, tok[0],
                 jnp.int32(req.max_new_tokens), jnp.int32(eos),
                 jnp.float32(self._req_temp(req)), True)
             self._slot_req[slot] = req
@@ -345,9 +456,11 @@ class Engine:
 
     def _drain(self, toks: jax.Array) -> None:
         """One batched device->host transfer: token history + slot state.
-        Finished slots are evicted: pages return to the scheduler's free
-        list and the slot's page-table row is pointed at the trash page,
-        so its dead tail writes cannot touch re-leased pages."""
+        Finished slots are evicted: page refcounts drop in the scheduler
+        (exclusive pages rejoin the free list; shared/radix-indexed pages
+        survive for their other referents) and the slot's page-table rows
+        are pointed at the trash pages, so its dead tail writes cannot
+        touch re-leased pages."""
         toks_np, out_len, active, firsts = jax.device_get(
             (toks, self.state["out_len"], self.state["active"],
              [self._slot_first_tok[i] for i in range(self.slots)]))

@@ -1,27 +1,49 @@
-"""Host-side serving policy layer: queue, admission, eviction, paging.
+"""Host-side serving policy layer: queue, admission, eviction, paging,
+prefix sharing.
 
 The serving runtime is layered (paper §2.2.3: scheduling and memory
 management, not math, bound serving throughput once kernels are tuned):
 
 * **Scheduler** (this module) — pure-Python policy: FIFO queue, slot
-  assignment, page-budget reservation, eviction.  No jax arrays, no
-  device work; decisions are made from state the host already knows, so
-  the policy layer adds zero device synchronization.
+  assignment, per-group page-budget reservation, refcounted page
+  sharing, radix-indexed prefix matching, LRU prefix eviction.  No jax
+  arrays, no device work; decisions are made from state the host already
+  knows, so the policy layer adds zero device synchronization.
 * **Executor** (``serve/engine.Executor``) — the compiled layer: bucketed
-  prefill, page-granular admission splice, the fused decode chunk.
+  full/suffix prefill, page-granular admission splice, copy-on-write
+  page duplication, the fused decode chunk.
 * **Driver** (``serve/engine.Engine``) — glues the two: drains tokens once
   per chunk, reports finishes to the scheduler, applies its admissions.
 
 Continuous batching falls out of the layering: at every chunk boundary the
-driver reports finished slots (eviction → pages back to the free list) and
-asks for admissions (a freed slot is re-leased to the queue head without
-recompiling anything — all compiled shapes are slot-count-stable).
+driver reports finished slots (release → refcounts drop, exclusive pages
+back to the free list) and asks for admissions (a freed slot is re-leased
+to the queue head without recompiling anything — all compiled shapes are
+slot-count-stable).
 
-Pages are reserved *worst-case at admission* (``CacheSpec.blocks_needed``),
-which makes mid-run pool exhaustion impossible for admitted requests: the
-failure mode surfaces as clean backpressure (the queue head waits for
-pages) or as ``PagePoolExhausted`` when a request can never fit, instead
-of as silent corruption of a neighbour's pages.
+Pages are reserved *worst-case at admission* (``CacheSpec.blocks_needed``,
+now a per-pool-group map), which makes mid-run pool exhaustion impossible
+for admitted requests: the failure mode surfaces as clean backpressure
+(the queue head waits for pages) or as ``PagePoolExhausted`` when a
+request can never fit, instead of as silent corruption of a neighbour's
+pages.
+
+**Prefix sharing** (sharing-capable specs only — pure full-attention
+stacks, see ``CacheSpec.share_group_key``): full prompt pages are indexed
+in a radix tree keyed by page content.  Admission walks the tree page-by-
+page over the incoming prompt; matched pages are attached to the new
+slot's table with a refcount bump and *prefill is skipped for those
+tokens* — the Executor prefillls only the suffix, attending to the prefix
+through the shared pages.  A slot about to write into a shared page (a
+partially-matched page, or the final page of a fully-matched prompt —
+the last prompt token is always re-prefilled to produce first-token
+logits) gets a private copy first: the admission carries a
+``cow=(block, src, dst)`` directive the Executor turns into a jitted
+page copy.  The tree itself holds one reference per indexed page, so
+popular prefixes survive their originating request; when allocation runs
+dry the scheduler evicts **only refcount-1 leaves** (pages no live slot
+references) in LRU order, cascading up the tree as parents become
+leaves.
 """
 
 from __future__ import annotations
@@ -51,16 +73,41 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class Admission:
+    """One scheduler admission decision, consumed by the Engine driver.
+
+    ``rows`` maps pool-group key -> page-table row (trash-padded).
+    ``suffix_start`` counts prompt tokens whose prefill is skipped (they
+    ride on shared pages); 0 means a plain full prefill.  ``cow`` names a
+    copy-on-write the Executor must perform *before* the splice:
+    ``(block, src_page, dst_page)`` in the sharing group."""
+
+    slot: int
+    req: Request
+    rows: Dict[str, np.ndarray]
+    suffix_start: int = 0
+    cow: Optional[Tuple[int, int, int]] = None
+    # pages this admission holds one reference to, per group (consumed by
+    # Scheduler.release when the slot finishes)
+    lease: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
+
+
 class PagePool:
-    """Free-list allocator over physical page ids ``0..num_pages-1``.
+    """Refcounted free-list allocator over physical page ids
+    ``0..num_pages-1``.
 
     Page ``num_pages`` is the trash page — never allocated; unreserved
-    page-table entries point at it so stray writes are discarded."""
+    page-table entries point at it so stray writes are discarded.  A page
+    may be referenced by several slot tables at once (prefix sharing) and
+    by the radix index; it returns to the free list only when the last
+    reference drops."""
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self.trash = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._rc: List[int] = [0] * num_pages
         self.peak_in_use = 0
 
     @property
@@ -71,80 +118,423 @@ class PagePool:
     def in_use(self) -> int:
         return self.num_pages - len(self._free)
 
+    def refcount(self, page: int) -> int:
+        return self._rc[page]
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Lease ``n`` pages, or None (backpressure) if not enough free."""
+        """Lease ``n`` fresh pages at refcount 1, or None (backpressure)
+        if not enough free."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._rc[p] = 1
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return pages
 
+    def retain(self, page: int) -> None:
+        """Add a reference to an already-leased page (sharing)."""
+        assert self._rc[page] > 0, f"retain of free page {page}"
+        self._rc[page] += 1
+
+    def release(self, page: int) -> bool:
+        """Drop one reference; returns True when the page was freed."""
+        assert self._rc[page] > 0, f"release of free page {page}"
+        self._rc[page] -= 1
+        if self._rc[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
     def free(self, pages: List[int]) -> None:
-        self._free.extend(pages)
+        """Drop one reference on each of ``pages``."""
+        for p in pages:
+            self.release(p)
+
+
+class _RadixNode:
+    __slots__ = ("tokens", "page", "children", "parent", "last_use")
+
+    def __init__(self, tokens: Tuple[int, ...], page: int,
+                 parent: Optional["_RadixNode"]):
+        self.tokens = tokens
+        self.page = page
+        self.children: Dict[Tuple[int, ...], "_RadixNode"] = {}
+        self.parent = parent
+        self.last_use = 0
+
+
+class RadixIndex:
+    """Page-granular radix tree over cached prompt prefixes.
+
+    Each node is one *full* physical page (``page_size`` prompt tokens)
+    keyed by its token content; a root-to-node path spells a cached
+    prompt prefix.  The tree holds one pool reference per node, so
+    indexed pages outlive the request that prefilled them; eviction
+    (LRU, leaves only, refcount-1 only) is how that memory comes back."""
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root = _RadixNode((), -1, None)
+        self._tick = 0
+        self.node_count = 0
+
+    def _touch(self, node: _RadixNode) -> None:
+        self._tick += 1
+        node.last_use = self._tick
+
+    # ------------------------------------------------------------- match
+    def match(self, prompt: List[int]) -> List[Tuple[int, int, int]]:
+        """Longest cached prefix of ``prompt``, page-by-page.
+
+        Returns ``[(block, page, matched_tokens)]``: every entry but the
+        last matches a full page (``matched_tokens == page_size``); the
+        last may be a *partial-page match* — a cached page whose first
+        ``matched_tokens < page_size`` tokens agree with the prompt's
+        remainder (its KV prefix is still exact, but the slot must
+        copy-on-write before writing its own divergent tokens into the
+        block)."""
+        P = self.page_size
+        out: List[Tuple[int, int, int]] = []
+        node = self.root
+        nblocks = -(-len(prompt) // P) if prompt else 0
+        for b in range(nblocks):
+            page_toks = tuple(prompt[b * P:(b + 1) * P])
+            child = (node.children.get(page_toks)
+                     if len(page_toks) == P else None)
+            if child is not None:
+                self._touch(child)
+                out.append((b, child.page, P))
+                node = child
+                continue
+            # partial match: the cached page with the longest common
+            # prefix against the prompt's remainder (most recent on ties)
+            best, best_n = None, 0
+            for key, cand in node.children.items():
+                n = 0
+                for a, c in zip(page_toks, key):
+                    if a != c:
+                        break
+                    n += 1
+                if n > best_n or (n == best_n and n and best is not None
+                                  and cand.last_use > best.last_use):
+                    best, best_n = cand, n
+            if best is not None and best_n > 0:
+                self._touch(best)
+                out.append((b, best.page, best_n))
+            break
+        return out
+
+    # ------------------------------------------------------------ insert
+    def insert(self, prompt: List[int], row: np.ndarray,
+               pool: PagePool) -> int:
+        """Index every *full* page of ``prompt`` (partial tail pages are
+        still written by their owner, so they are never shared).  New
+        nodes take a pool reference; existing nodes just refresh LRU.
+        Returns the number of nodes created."""
+        P = self.page_size
+        node, created = self.root, 0
+        for b in range(len(prompt) // P):
+            key = tuple(prompt[b * P:(b + 1) * P])
+            child = node.children.get(key)
+            if child is None:
+                child = _RadixNode(key, int(row[b]), node)
+                node.children[key] = child
+                pool.retain(child.page)
+                self.node_count += 1
+                created += 1
+            self._touch(child)
+            node = child
+        return created
+
+    # ---------------------------------------------------------- eviction
+    def _leaves(self) -> Iterator[_RadixNode]:
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            else:
+                yield n
+
+    def evict_one(self, pool: PagePool) -> Optional[int]:
+        """Drop the least-recently-used *leaf* whose page has no live
+        slot reference (refcount 1 — the tree's own).  Shared nodes are
+        denied until every borrowing slot releases.  Returns the freed
+        page id, or None when nothing is evictable."""
+        victim: Optional[_RadixNode] = None
+        for leaf in self._leaves():
+            if pool.refcount(leaf.page) != 1:
+                continue
+            if victim is None or leaf.last_use < victim.last_use:
+                victim = leaf
+        if victim is None:
+            return None
+        victim.parent.children.pop(victim.tokens)
+        self.node_count -= 1
+        pool.release(victim.page)
+        return victim.page
+
+    def reclaimable(self, pool: PagePool) -> int:
+        """Pages the eviction loop could recover right now (refcount-1
+        nodes; a chain of them frees leaf-by-leaf as parents become
+        leaves)."""
+        stack = list(self.root.children.values())
+        n = 0
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if pool.refcount(node.page) == 1:
+                n += 1
+        return n
 
 
 class Scheduler:
-    """FIFO continuous-batching policy over ``slots`` cache slots and a
-    shared page budget."""
+    """FIFO continuous-batching policy over ``slots`` cache slots and
+    per-pool-group page budgets, with radix-indexed prefix sharing."""
 
-    def __init__(self, spec: CacheSpec):
+    def __init__(self, spec: CacheSpec, *, prefix_sharing: bool = True):
         self.spec = spec
-        self.pool = PagePool(spec.num_pages if spec.has_paged else 0)
+        self.pools: Dict[str, PagePool] = {
+            g.key: PagePool(g.num_pages) for g in spec.groups
+        } if spec.has_paged else {}
+        self.share_key: Optional[str] = (
+            spec.share_group_key
+            if prefix_sharing and spec.prefix_sharing_capable else None)
+        self.radix: Optional[RadixIndex] = (
+            RadixIndex(spec.page_size) if self.share_key else None)
         self.queue: List[Request] = []
-        self._leases: Dict[int, List[int]] = {}
+        self._leases: Dict[int, Dict[str, List[int]]] = {}
+        # --- telemetry ---
+        self._peak_pages = 0
+        self.admissions_total = 0
+        self.prefix_hits = 0
+        self.prefix_tokens_skipped = 0
+        self.shared_page_attaches = 0
+        self.cow_copies = 0
+        self.radix_evictions = 0
+
+    # ------------------------------------------------------------ compat
+    @property
+    def pool(self) -> PagePool:
+        """The widest group's pool (the budget knob / backpressure
+        source)."""
+        return self.pools[self.spec.widest_group.key]
 
     # ---------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
         need = self.spec.blocks_needed(len(req.prompt), req.max_new_tokens)
-        if need > self.pool.num_pages and self.spec.has_paged:
-            raise PagePoolExhausted(
-                f"request rid={req.rid} needs {need} pages "
-                f"({len(req.prompt)} prompt + {req.max_new_tokens} new "
-                f"tokens at page_size={self.spec.page_size}) but the pool "
-                f"only has {self.pool.num_pages}; raise --num-pages")
+        for key, n in need.items():
+            budget = self.pools[key].num_pages
+            if n > budget:
+                raise PagePoolExhausted(
+                    f"request rid={req.rid} needs {n} pages of pool group "
+                    f"{key} ({len(req.prompt)} prompt + "
+                    f"{req.max_new_tokens} new tokens at page_size="
+                    f"{self.spec.page_size}) but that pool only has "
+                    f"{budget}; raise --num-pages")
         self.queue.append(req)
 
-    def admissions(self, free_slots: List[int]
-                   ) -> Iterator[Tuple[int, Request, np.ndarray]]:
-        """Yield ``(slot, request, page_table_row)`` while the queue head
-        fits.  Strictly FIFO: when the head's reservation does not fit,
-        later (smaller) requests do NOT jump it — head-of-line
-        backpressure keeps admission order fair."""
+    def _alloc(self, key: str, n: int) -> Optional[List[int]]:
+        """Group alloc with radix eviction pressure: when the sharing
+        group runs dry, evict LRU refcount-1 leaves until the request
+        fits or nothing more is evictable."""
+        pool = self.pools[key]
+        pages = pool.alloc(n)
+        while pages is None and self.radix is not None \
+                and key == self.share_key:
+            if self.radix.evict_one(pool) is None:
+                return None
+            self.radix_evictions += 1
+            pages = pool.alloc(n)
+        return pages
+
+    def _plan(self, req: Request) -> Optional[Admission]:
+        """Build the admission (match, retain, allocate, rows) for the
+        queue head, or None on backpressure.  On None every side effect
+        is rolled back.
+
+        The sharing attempt runs first; if the *fresh* allocation then
+        fails, the plan retries as a miss — the match's own retains can
+        pin exactly the refcount-1 radix pages eviction would need, so
+        insisting on the match could wedge an admission that plain
+        ownership (evicting the matched prefix) can still satisfy."""
+        adm = self._plan_once(req, use_sharing=True)
+        if adm is None and self.radix is not None:
+            adm = self._plan_once(req, use_sharing=False)
+        return adm
+
+    def _plan_once(self, req: Request,
+                   use_sharing: bool) -> Optional[Admission]:
+        plen = len(req.prompt)
+        need = self.spec.blocks_needed(plen, req.max_new_tokens)
+        P = self.spec.page_size
+
+        shared: List[Tuple[int, int]] = []      # (block, page) attach
+        cow_src: Optional[Tuple[int, int]] = None
+        s = 0
+        spool = self.pools.get(self.share_key) if self.share_key else None
+        if use_sharing and self.radix is not None \
+                and need.get(self.share_key):
+            matched = self.radix.match(req.prompt)
+            m = sum(nt for _, _, nt in matched)
+            # always re-prefill >= 1 token: first-token logits come from
+            # the suffix prefill, so a fully-matched prompt keeps its
+            # last token (and the shared page holding it goes CoW)
+            s = min(m, plen - 1) if m else 0
+            if s > 0:
+                wb = s // P                      # first block written
+                shared = [(b, p) for b, p, _ in matched if b < wb]
+                over = [(b, p) for b, p, _ in matched if b >= wb]
+                assert len(over) <= 1, over      # only the final page
+                if over and s % P:
+                    # the slot writes into the matched page mid-block, so
+                    # the copy's head tokens are genuinely reused
+                    cow_src = over[0]
+                # s page-aligned with a matched page at wb: the suffix
+                # rewrites that block from offset 0 and the ctx gather
+                # stops before it — a copy would never be read, so block
+                # wb just gets a fresh page instead
+                for _, p in shared:
+                    spool.retain(p)
+                if cow_src is not None:
+                    # pin the source across the copy; dropped after the
+                    # Executor has issued the page copy (post-yield)
+                    spool.retain(cow_src[1])
+            else:
+                shared, cow_src = [], None
+
+        allocs: Dict[str, List[int]] = {}
+        for key, n in need.items():
+            n_fresh = n - (len(shared) if key == self.share_key else 0)
+            pages = self._alloc(key, n_fresh)
+            if pages is None:                    # rollback, backpressure
+                for k2, ps in allocs.items():
+                    self.pools[k2].free(ps)
+                if spool is not None:
+                    for _, p in shared:
+                        spool.release(p)
+                    if cow_src is not None:
+                        spool.release(cow_src[1])
+                return None
+            allocs[key] = pages
+
+        rows: Dict[str, np.ndarray] = {}
+        cow: Optional[Tuple[int, int, int]] = None
+        lease: Dict[str, List[int]] = {}
+        for key, n in need.items():
+            g = self.spec.group_of(key)
+            row = np.full((g.ring_blocks,), g.trash_page, np.int32)
+            fresh = list(allocs[key])
+            if key == self.share_key and s > 0:
+                wb = s // P
+                for b, p in shared:
+                    row[b] = p
+                nxt = wb
+                if cow_src is not None:
+                    dst = fresh[0]
+                    row[wb] = dst
+                    cow = (wb, cow_src[1], dst)
+                    nxt = wb + 1
+                for i, p in enumerate(fresh[1 if cow_src else 0:]):
+                    row[nxt + i] = p
+                lease[key] = [p for _, p in shared] + fresh
+            else:
+                row[:len(fresh)] = fresh
+                lease[key] = fresh
+            rows[key] = row
+
+        if self.radix is not None and self.share_key in rows:
+            self.radix.insert(req.prompt, rows[self.share_key],
+                              self.pools[self.share_key])
+
+        self.admissions_total += 1
+        self._peak_pages = max(self._peak_pages, self.pages_in_use)
+        if s > 0:
+            self.prefix_hits += 1
+            self.prefix_tokens_skipped += s
+            self.shared_page_attaches += len(shared)
+            if cow is not None:
+                self.cow_copies += 1
+        return Admission(slot=-1, req=req, rows=rows, suffix_start=s,
+                         cow=cow, lease=lease)
+
+    def admissions(self, free_slots: List[int]) -> Iterator[Admission]:
+        """Yield admissions while the queue head fits.  Strictly FIFO:
+        when the head's reservation does not fit, later (smaller)
+        requests do NOT jump it — head-of-line backpressure keeps
+        admission order fair."""
         free_slots = list(free_slots)
         while self.queue and free_slots:
-            req = self.queue[0]
-            need = self.spec.blocks_needed(len(req.prompt),
-                                           req.max_new_tokens)
-            pages = self.pool.alloc(need)
-            if pages is None:
+            adm = self._plan(self.queue[0])
+            if adm is None:
                 return                       # wait for an eviction
             self.queue.pop(0)
-            slot = free_slots.pop(0)
-            self._leases[slot] = pages
-            row = np.full((self.spec.max_blocks,), self.pool.trash, np.int32)
-            row[:len(pages)] = pages
-            yield slot, req, row
+            adm.slot = free_slots.pop(0)
+            self._leases[adm.slot] = adm.lease
+            try:
+                yield adm
+            finally:
+                # the Engine has now issued the CoW page copy (device ops
+                # on the pool are program-ordered), so the source's
+                # admission pin can drop — the tree's own reference still
+                # protects it from re-lease unless evicted.
+                if adm.cow is not None and self.share_key is not None:
+                    self.pools[self.share_key].release(adm.cow[1])
 
     # ----------------------------------------------------------- eviction
     def release(self, slot: int) -> None:
-        """Return a finished slot's pages to the free list."""
-        self.pool.free(self._leases.pop(slot, []))
+        """Drop a finished slot's page references.  Exclusive pages go
+        straight back to the free list; shared/indexed pages survive
+        until their refcount drains (other slots, then the radix tree)."""
+        for key, pages in self._leases.pop(slot, {}).items():
+            self.pools[key].free(pages)
 
     def can_progress(self, live_slots: int) -> bool:
         """False when the engine is wedged: nothing is running and the
-        queue head still cannot be admitted (should be impossible given
-        the submit() capacity check — a guard, not a policy)."""
+        queue head still cannot be admitted even after draining every
+        evictable radix page (should be impossible given the submit()
+        capacity check — a guard, not a policy)."""
         if not self.queue or live_slots:
             return True
         need = self.spec.blocks_needed(len(self.queue[0].prompt),
                                        self.queue[0].max_new_tokens)
-        return need <= self.pool.free_pages
+        for key, n in need.items():
+            avail = self.pools[key].free_pages
+            if self.radix is not None and key == self.share_key:
+                avail += self.radix.reclaimable(self.pools[key])
+            if n > avail:
+                return False
+        return True
 
     # ---------------------------------------------------------- telemetry
     @property
     def pages_in_use(self) -> int:
-        return self.pool.in_use
+        return sum(p.in_use for p in self.pools.values())
+
+    @property
+    def pages_in_use_by_group(self) -> Dict[str, int]:
+        return {k: p.in_use for k, p in self.pools.items()}
 
     @property
     def peak_pages_in_use(self) -> int:
-        return self.pool.peak_in_use
+        """True global peak (sampled after every admission — occupancy
+        only rises there, so sampling per-pool peaks taken at different
+        instants would overstate multi-group archs)."""
+        return self._peak_pages
+
+    def prefix_stats(self) -> Dict[str, float]:
+        """Prefix-sharing telemetry for BENCH_serve.json / launch logs."""
+        return {
+            "prefix_sharing": self.radix is not None,
+            "admissions": self.admissions_total,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": (self.prefix_hits / self.admissions_total
+                                if self.admissions_total else 0.0),
+            "prefill_tokens_skipped": self.prefix_tokens_skipped,
+            "shared_page_attaches": self.shared_page_attaches,
+            "cow_copies": self.cow_copies,
+            "radix_evictions": self.radix_evictions,
+            "radix_pages": (self.radix.node_count
+                            if self.radix is not None else 0),
+        }

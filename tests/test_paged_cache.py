@@ -36,8 +36,11 @@ def test_cachespec_kinds_per_layer():
     kinds = [ls.kind for ls in spec.layers]
     assert PAGED_KV in kinds and STATE in kinds
     assert spec.has_paged
-    # equal-memory default pool: slots x max_len tokens
-    assert spec.num_pages * spec.page_size == 2 * 64
+    # the widest group's default budget covers slots x its ring tokens
+    # (zamba2's shared attention is windowed, so its only paged group is
+    # window-sized — no longer inflated to slots x max_len)
+    widest = spec.widest_group
+    assert spec.num_pages == 2 * widest.ring_blocks
     assert spec.trash_page == spec.num_pages
     assert spec.pool_shape[0] == spec.num_pages + 1
 
@@ -52,6 +55,32 @@ def test_cachespec_windowed_ring_blocks():
     assert spec.max_blocks == 8
 
 
+def test_cachespec_per_layer_pool_budgets():
+    """Windowed layers get their own window-sized pool (per-layer page-id
+    remapping) instead of paying the full-attention group's budget; the
+    dense-vs-paged byte ratio is therefore 1.0 for windowed archs."""
+    cfg, _ = _model("gemma2-2b")
+    spec = CacheSpec.from_config(cfg, slots=2, max_len=64, page_size=8)
+    by_key = {g.key: g for g in spec.groups}
+    assert set(by_key) == {"ring2", "ring8"}
+    assert by_key["ring2"].windowed and not by_key["ring8"].windowed
+    assert by_key["ring2"].num_pages == 2 * 2       # slots x ring (window)
+    assert by_key["ring8"].num_pages == 2 * 8       # slots x max_len / P
+    # every paged layer points at the group matching its ring
+    for ls in spec.layers:
+        if ls is not None and ls.kind == PAGED_KV:
+            assert spec.groups[ls.group].ring_blocks == ls.ring_blocks
+    stats = spec.memory_stats({k: 0 for k in by_key}, 0)
+    assert stats["dense_vs_paged_capacity_ratio"] == 1.0
+    assert stats["num_pages"] == 4 + 16
+    # tables are per group, trash ids are per group
+    cache = spec.init_paged_cache()
+    assert cache["page_tables"]["ring2"].shape == (2, 2)
+    assert cache["page_tables"]["ring8"].shape == (2, 8)
+    assert int(cache["page_tables"]["ring2"][0, 0]) == by_key["ring2"].num_pages
+    assert int(cache["page_tables"]["ring8"][0, 0]) == by_key["ring8"].num_pages
+
+
 def test_cachespec_rejects_cross_attention():
     """The old empty_batch_cache silently pop()-ed enc_kv; now the spec
     refuses the structure outright with an actionable error."""
@@ -63,12 +92,17 @@ def test_cachespec_rejects_cross_attention():
 def test_cachespec_blocks_needed_caps_at_table_width():
     cfg, _ = _model("rwkv6-7b")
     spec = CacheSpec.from_config(cfg, 2, 64)
-    assert not spec.has_paged and spec.blocks_needed(100, 100) == 0
+    assert not spec.has_paged and spec.blocks_needed(100, 100) == {}
     cfg2, _ = _model("internlm2-1.8b")
     spec2 = CacheSpec.from_config(cfg2, 2, 64, page_size=8)
-    assert spec2.blocks_needed(3, 4) == 1
-    assert spec2.blocks_needed(0, 1) == 1          # empty prompt still pages
-    assert spec2.blocks_needed(60, 1000) == spec2.max_blocks
+    key = spec2.widest_group.key
+    assert spec2.blocks_needed(3, 4) == {key: 1}
+    assert spec2.blocks_needed(0, 1) == {key: 1}   # empty prompt still pages
+    assert spec2.blocks_needed(60, 1000) == {key: spec2.max_blocks}
+    # per-group caps: windowed groups reserve at most their ring
+    cfg3, _ = _model("gemma2-2b")
+    spec3 = CacheSpec.from_config(cfg3, 2, 64, page_size=8)
+    assert spec3.blocks_needed(60, 1000) == {"ring2": 2, "ring8": 8}
 
 
 # ---------------------------------------------------------------------------
@@ -140,11 +174,11 @@ def test_fifo_queue_fairness_no_jumping():
         sched.submit(r)
     admitted = list(sched.admissions([0, 1]))
     # r0 fits (4 <= 8); r1 needs 6 > 4 free -> head-of-line blocks r2 too
-    assert [req.rid for _, req, _ in admitted] == [0]
+    assert [a.req.rid for a in admitted] == [0]
     assert [r.rid for r in sched.queue] == [1, 2]
-    sched.release(admitted[0][0])
+    sched.release(admitted[0].slot)
     admitted2 = list(sched.admissions([0, 1]))
-    assert [req.rid for _, req, _ in admitted2] == [1, 2]
+    assert [a.req.rid for a in admitted2] == [1, 2]
 
 
 def test_fifo_completion_order_end_to_end():
@@ -228,16 +262,23 @@ def test_cachespec_data_axis_sharding_specs():
     cfg, _ = _model("internlm2-1.8b")
     spec = CacheSpec.from_config(cfg, slots=4, max_len=64, page_size=8)
     rules = sh.Rules(table={sh.BATCH: "data", sh.PAGES: "data"})
-    # slot batch and page pool both shard over the data mesh axis
+    # slot batch and every group's page pool shard over the data mesh axis
     assert rules.spec_for(spec.TABLE_AXES) == P("data")
     assert rules.spec_for(spec.POOL_AXES) == P("data")
     struct = spec.structure()
-    assert struct["page_table"][0] == (4, spec.max_blocks)
+    key = spec.widest_group.key
+    assert struct["page_tables"][key][0] == (4, spec.max_blocks)
     assert struct["len"][1] == (sh.BATCH,)
     # shardings() is a full-tree map; without a mesh it yields None leaves
     shardings = spec.shardings(rules)
     leaves = jax.tree.leaves(shardings)
     assert leaves == []         # mesh-less Rules -> no NamedShardings
+    # multi-group spec: each group's table/pool carries its own shapes
+    cfg2, _ = _model("gemma2-2b")
+    spec2 = CacheSpec.from_config(cfg2, slots=4, max_len=64, page_size=8)
+    struct2 = spec2.structure()
+    assert struct2["page_tables"]["ring2"][0] == (4, 2)
+    assert struct2["page_tables"]["ring8"][0] == (4, 8)
 
 
 def test_engine_accepts_rules_single_device():

@@ -1,0 +1,261 @@
+"""Refcounted copy-on-write page pool + radix prefix sharing: match
+granularities (full page / partial page / full prompt), CoW triggers,
+refcount-guarded eviction, re-admission of evicted prefixes, and token
+parity against the dense ReferenceEngine under aggressive sharing."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model_defs
+from repro.models import module as m
+from repro.serve.cache import CacheSpec
+from repro.serve.engine import Engine, Request
+from repro.serve.reference import ReferenceEngine
+from repro.serve.scheduler import PagePool, RadixIndex, Scheduler
+
+
+def _model(arch="internlm2-1.8b", **kw):
+    cfg = reduced(get_config(arch), **kw)
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    return cfg, params
+
+
+PREFIX = [(3 * j) % 200 + 1 for j in range(16)]   # 2 full pages at P=8
+
+
+# ---------------------------------------------------------------------------
+# Capability gate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,capable", [
+    ("internlm2-1.8b", True),    # pure full attention
+    ("gemma2-2b", False),        # sliding windows ring-wrap into prefixes
+    ("rwkv6-7b", False),         # recurrent state is not paged
+    ("zamba2-7b", False),        # mamba2 backbone
+])
+def test_sharing_capability_gate(arch, capable):
+    cfg, _ = _model(arch)
+    spec = CacheSpec.from_config(cfg, slots=2, max_len=64, page_size=8)
+    assert spec.prefix_sharing_capable == capable
+    sched = Scheduler(spec)   # sharing on by default, self-gating
+    assert (sched.radix is not None) == capable
+
+
+# ---------------------------------------------------------------------------
+# Radix index unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_radix_match_insert_and_partial():
+    pool = PagePool(8)
+    idx = RadixIndex(page_size=4)
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8, 9]        # 2 full pages + 1 tail tok
+    pages = pool.alloc(3)
+    import numpy as np
+    idx.insert(prompt, np.asarray(pages), pool)
+    assert idx.node_count == 2                   # tail page never indexed
+    assert pool.refcount(pages[0]) == 2          # slot + tree
+    assert pool.refcount(pages[2]) == 1          # tail: slot only
+    # exact full-page walk
+    got = idx.match([1, 2, 3, 4, 5, 6, 7, 8, 11])
+    assert got == [(0, pages[0], 4), (1, pages[1], 4)]
+    # partial-page match: 2 of 4 tokens of page 1 agree
+    got = idx.match([1, 2, 3, 4, 5, 6, 99, 99])
+    assert got == [(0, pages[0], 4), (1, pages[1], 2)]
+    # first-page divergence: no match at all
+    assert idx.match([9, 9, 9, 9, 1]) == []
+
+
+def test_radix_eviction_denied_until_refcount_drops():
+    """A shared node (some slot still references its page) must survive
+    eviction pressure; it becomes evictable only after every borrower
+    releases."""
+    import numpy as np
+    pool = PagePool(4)
+    idx = RadixIndex(page_size=4)
+    pages = pool.alloc(2)
+    idx.insert([1, 2, 3, 4, 5, 6, 7, 8], np.asarray(pages), pool)
+    pool.free(pages)                       # originating slot released
+    pool.retain(pages[1])                  # a borrower attaches the leaf
+    assert idx.evict_one(pool) is None     # leaf rc=2: denied
+    assert idx.node_count == 2
+    pool.release(pages[1])                 # borrower finishes
+    assert idx.evict_one(pool) == pages[1]      # LRU leaf goes first
+    assert idx.evict_one(pool) == pages[0]      # parent became a leaf
+    assert idx.evict_one(pool) is None
+    assert pool.free_pages == 4 and idx.node_count == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end CoW edge cases (token parity is the oracle throughout)
+# ---------------------------------------------------------------------------
+
+def _load(eng, reqs):
+    for rid, prompt, mn in reqs:
+        eng.submit(Request(rid=rid, prompt=list(prompt), max_new_tokens=mn))
+    return {r.rid: r.out_tokens for r in eng.run()}
+
+
+def _parity(reqs, slots=2, **eng_kw):
+    cfg, params = _model()
+    eng = Engine(cfg, params, slots=slots, max_len=64, **eng_kw)
+    ref = ReferenceEngine(cfg, params, slots=slots, max_len=64)
+    got = _load(eng, reqs)
+    want = _load(ref, reqs)
+    assert got == want, (got, want)
+    return eng
+
+
+def test_full_page_prefix_match_skips_prefill():
+    """Clean page-aligned prefix reuse: shared pages attach with a
+    refcount bump, prefill runs only on the suffix, outputs identical."""
+    eng = _parity([(0, PREFIX + [7, 7], 6), (1, PREFIX + [9, 9, 9], 6)])
+    ps = eng.prefix_stats()
+    assert ps["prefix_hits"] == 1
+    assert ps["prefill_tokens_skipped"] == 16    # both full prefix pages
+    assert ps["shared_page_attaches"] == 2
+    assert ps["cow_copies"] == 0                 # first write block is fresh
+    assert eng.suffix_prefill_compiles >= 1
+
+
+def test_partial_page_prefix_match_triggers_cow():
+    """The second prompt diverges mid-page: the partially-matched page is
+    attached via a private CoW copy; its valid prefix tokens are reused,
+    the divergent tail is re-prefilled into the copy."""
+    eng = _parity([(0, PREFIX, 6), (1, PREFIX[:12] + [9, 9, 9], 6)])
+    ps = eng.prefix_stats()
+    assert ps["prefix_hits"] == 1
+    assert ps["cow_copies"] == 1
+    assert ps["prefill_tokens_skipped"] == 12    # page0 + half of page1
+    assert ps["shared_page_attaches"] == 1       # only page0 attaches shared
+
+
+def test_write_into_shared_final_page_goes_cow():
+    """An identical fully-matched prompt must still re-prefill its last
+    token (first-token logits); that write lands in the final shared page,
+    which therefore goes copy-on-write — and the original request's pages
+    are untouched (its re-run produces the same tokens)."""
+    reqs = [(0, PREFIX, 8), (1, PREFIX, 8), (2, PREFIX, 8)]
+    eng = _parity(reqs, slots=3)
+    ps = eng.prefix_stats()
+    assert ps["prefix_hits"] == 2
+    assert ps["cow_copies"] == 2                 # one per duplicate prompt
+    assert ps["prefill_tokens_skipped"] == 2 * 15
+
+
+def test_eviction_of_shared_prefix_denied_then_allowed_end_to_end():
+    """While a slot still references the tree-held prefix pages, an
+    unrelated request that needs the whole pool gets backpressure (shared
+    nodes are not evictable); once the slot releases, LRU eviction frees
+    the prefix and the big request admits."""
+    cfg, params = _model()
+    eng = Engine(cfg, params, slots=2, max_len=64, num_pages=8)
+    # rid 0 runs long; its 2 prefix pages are tree-indexed AND slot-held
+    eng.submit(Request(rid=0, prompt=list(PREFIX + [5]), max_new_tokens=24))
+    # rid 1 needs all 8 pages -> must wait for rid 0 AND evict the tree
+    eng.submit(Request(rid=1, prompt=[99] * 40, max_new_tokens=24))
+    eng.step()
+    assert [r.rid for r in eng.queue] == [1]     # denied while rc > 1
+    assert eng.prefix_stats()["radix_evictions"] == 0
+    done = {r.rid: r for r in eng.run(max_steps=10_000)}
+    assert len(done[0].out_tokens) == 24 and len(done[1].out_tokens) == 24
+    ps = eng.prefix_stats()
+    assert ps["radix_evictions"] >= 2            # both prefix pages fell
+    assert ps["radix_pages"] == 5                # rid 1's 5 prompt pages
+
+
+def test_readmission_of_evicted_prefix_rebuilds_index():
+    """After its pages are evicted, the same prompt admits as a miss,
+    re-prefills fully, and re-seeds the radix index."""
+    cfg, params = _model()
+    eng = Engine(cfg, params, slots=2, max_len=64, num_pages=8)
+    _load(eng, [(0, PREFIX + [5], 4)])
+    _load(eng, [(1, [99] * 40, 24)])             # 8-page need: evicts all
+    hits_before = eng.prefix_stats()["prefix_hits"]
+    _load(eng, [(2, PREFIX + [5], 4)])           # miss: full prefill
+    ps = eng.prefix_stats()
+    assert ps["prefix_hits"] == hits_before
+    _load(eng, [(3, PREFIX + [6], 4)])           # hit again: re-indexed
+    assert eng.prefix_stats()["prefix_hits"] == hits_before + 1
+
+
+def test_reference_parity_under_aggressive_sharing():
+    """Nested / interleaved shared prefixes across more requests than
+    slots: token-for-token parity with the dense reference engine, with a
+    nonzero hit rate and pages measurably saved vs exclusive ownership."""
+    reqs = []
+    for i in range(9):
+        cut = [16, 12, 8][i % 3]
+        tail = [(11 * i + j) % 150 + 1 for j in range(1 + i % 3)]
+        reqs.append((i, PREFIX[:cut] + tail, 4 + i % 3))
+    eng = _parity(reqs, slots=3)
+    ps = eng.prefix_stats()
+    assert ps["prefix_hit_rate"] > 0.5
+    assert ps["prefill_tokens_skipped"] > 40
+    cfg, params = _model()
+    excl = Engine(cfg, params, slots=3, max_len=64, prefix_sharing=False)
+    _load(excl, reqs)
+    assert (eng.scheduler.peak_pages_in_use
+            < excl.scheduler.peak_pages_in_use)
+
+
+def test_prefix_hit_falls_back_to_miss_when_match_pins_eviction():
+    """Degenerate pool: the only evictable pages are the very prefix the
+    match wants to attach.  Insisting on the match would livelock (its
+    retains pin the refcount-1 radix leaves eviction needs); the planner
+    must fall back to a plain miss, evict the prefix, and admit."""
+    cfg, params = _model()
+    eng = Engine(cfg, params, slots=1, max_len=32)    # 4-page pool
+    prompt = [(3 * j) % 200 + 1 for j in range(24)]   # 3 full pages
+    out0 = _load(eng, [(0, prompt, 4)])
+    assert eng.prefix_stats()["radix_pages"] == 3     # 1 page free
+    out1 = _load(eng, [(1, prompt, 4)])               # would pin 3 pages
+    assert out1[1] == out0[0]                         # same greedy tokens
+    ps = eng.prefix_stats()
+    assert ps["radix_evictions"] >= 2                 # admitted as a miss
+    assert ps["prefix_hits"] == 0
+
+
+def test_generation_budget_cannot_wrap_shared_pages():
+    """plen + max_new past the full-attention table would ring-wrap
+    decode writes back into indexed/shared prefix pages (corrupting
+    *other* requests); submit() must reject it up front."""
+    cfg, params = _model()
+    eng = Engine(cfg, params, slots=1, max_len=32)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(rid=0, prompt=[(3 * j) % 200 + 1
+                                          for j in range(24)],
+                           max_new_tokens=12))        # 36 > 32
+    assert not eng.queue
+
+
+def test_dead_tail_decode_cannot_wrap_into_shared_pages():
+    """A slot that exhausts plen + max_new == max_len and finishes
+    MID-CHUNK keeps stepping until the drain; its dead writes sit past
+    the table and would ring-wrap into block 0 — a shared prefix page.
+    The decode chunk's active-mask must route them to the trash page: the
+    long-running neighbour sharing that prefix must match its solo run."""
+    cfg, params = _model()
+    eng = Engine(cfg, params, slots=2, max_len=64)
+    long_req = (0, PREFIX + [3, 4], 30)          # shares blocks 0-1, lives
+    full_req = (1, PREFIX + [(11 * j) % 150 + 1 for j in range(33)], 15)
+    #           plen 49 + max_new 15 == max_len, done 2 steps before the
+    #           chunk boundary: dead positions 63 then 64 -> 64 wraps to
+    #           block 0 (a shared prefix page) without the write mask
+    got = _load(eng, [long_req, full_req])
+    assert len(got[1]) == 15
+    cfg2, params2 = _model()
+    solo = Engine(cfg2, params2, slots=2, max_len=64)
+    want = _load(solo, [long_req])
+    assert got[0] == want[0], "shared prefix corrupted by dead-tail write"
+
+
+def test_disabled_sharing_is_fully_exclusive():
+    cfg, params = _model()
+    eng = Engine(cfg, params, slots=2, max_len=64, prefix_sharing=False)
+    _load(eng, [(0, PREFIX, 4), (1, PREFIX, 4)])
+    ps = eng.prefix_stats()
+    assert not ps["prefix_sharing"] and ps["prefix_hits"] == 0
+    assert eng.suffix_prefill_compiles == 0

@@ -65,6 +65,24 @@ def test_engine_windowed_arch_long_generation():
         assert int(jnp.argmax(dense[0, pos])) == tok, f"diverged at {i}"
 
 
+def test_windowed_prompt_longer_than_window_wraps_in_splice():
+    """A prompt LONGER than the sliding window ring-wraps *within one
+    prefill splice*: only the newest occupant of each ring slot may land
+    (token-scatter mask), older wrapped tokens go to the trash page.
+    Teacher forcing is the oracle."""
+    cfg, params, eng = _engine("gemma2-2b", slots=1, max_len=96)
+    window = next(b.window for b in cfg.blocks if b.window)
+    prompt = [(5 * j) % 200 + 1 for j in range(window + 6)]
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=10))
+    (r,) = eng.run(max_steps=200)
+    full = r.prompt + r.out_tokens
+    dense = jax.jit(lambda p, b: forward_dense_logits(p, cfg, b))(
+        params, {"tokens": jnp.asarray([full], jnp.int32)})
+    for i, tok in enumerate(r.out_tokens):
+        pos = len(r.prompt) - 1 + i
+        assert int(jnp.argmax(dense[0, pos])) == tok, f"diverged at {i}"
+
+
 def test_eos_terminates():
     cfg, params, eng = _engine("internlm2-1.8b", slots=1)
     # discover greedy continuation, then set its 3rd token as eos
