@@ -1,0 +1,125 @@
+"""CI docs-consistency gate: docstring coverage + doc reference checks.
+
+Two grep-grade checks, no imports of the code under test:
+
+1. **Docstrings** — every Python module under ``src/repro/serve/`` and
+   ``src/repro/kernels/`` must open with a module docstring (packages'
+   ``__init__.py`` re-export stubs are exempt).  The kernel and serving
+   subsystems are the documented surface of the repo; an undocumented
+   module there is a docs regression.
+2. **References** — every backticked code reference in ``README.md`` and
+   ``docs/*.md`` that names a file (``serve/cache.py``,
+   ``benchmarks/check_docs.py``) or a dotted module path
+   (``repro.serve.engine.Engine``) must resolve to a real file in the
+   repo, so renames/moves can never silently strand the docs.  A
+   path-looking token that matches nothing fails the build with the doc
+   and token named.
+
+Usage:  python -m benchmarks.check_docs
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+
+from benchmarks.common import REPO_ROOT
+
+DOCSTRING_ROOTS = ("src/repro/serve", "src/repro/kernels")
+DOC_FILES = ("README.md", "docs")
+
+# `...` tokens that look like file or module references.  Deliberately
+# conservative: flags only things with a path separator + known suffix,
+# or a repro./benchmarks./tests. dotted prefix — shell flags, shapes,
+# and identifiers never match.
+_PATH_RE = re.compile(r"^[\w./-]+\.(?:py|md|json|yml)$")
+_DOTTED_RE = re.compile(r"^(?:repro|benchmarks|tests|examples)(?:\.\w+)+$")
+
+
+def check_docstrings() -> list:
+    failures = []
+    for root in DOCSTRING_ROOTS:
+        for path in sorted((REPO_ROOT / root).rglob("*.py")):
+            if path.name == "__init__.py":
+                continue
+            tree = ast.parse(path.read_text())
+            doc = ast.get_docstring(tree)
+            if not doc or not doc.strip():
+                failures.append(
+                    f"{path.relative_to(REPO_ROOT)}: missing module "
+                    "docstring")
+    return failures
+
+
+def _repo_files() -> list:
+    out = []
+    for p in REPO_ROOT.rglob("*"):
+        if p.is_file() and ".git" not in p.parts:
+            out.append(str(p.relative_to(REPO_ROOT)))
+    return out
+
+
+def _resolves(token: str, files: list) -> bool:
+    """Does ``token`` name a file in the repo?  Tries the token as a
+    repo-relative path, under src/, and as a suffix of any file (docs
+    often write ``serve/cache.py`` for ``src/repro/serve/cache.py``)."""
+    for cand in (token, f"src/{token}", f"src/repro/{token}"):
+        if cand in files:
+            return True
+    return any(f.endswith("/" + token) for f in files)
+
+
+def _module_resolves(token: str, files: list) -> bool:
+    """Dotted reference: strip trailing attribute segments until some
+    prefix resolves to a module file or package directory."""
+    parts = token.split(".")
+    while parts:
+        base = "/".join(parts)
+        for cand in (f"{base}.py", f"{base}/__init__.py",
+                     f"src/{base}.py", f"src/{base}/__init__.py"):
+            if cand in files:
+                return True
+        parts = parts[:-1]
+    return False
+
+
+def check_references() -> list:
+    files = _repo_files()
+    failures = []
+    doc_paths = [REPO_ROOT / "README.md"]
+    doc_paths += sorted((REPO_ROOT / "docs").glob("*.md"))
+    for doc in doc_paths:
+        if not doc.exists():
+            failures.append(f"{doc.name}: referenced doc page is missing")
+            continue
+        text = doc.read_text()
+        for token in re.findall(r"`([^`\n]+)`", text):
+            token = token.strip().rstrip(",.;:")
+            # drop call parens / CLI fragments / ::symbol suffixes
+            token = token.split("(")[0].split("::")[0].split(" ")[0]
+            if _PATH_RE.match(token):
+                if not _resolves(token, files):
+                    failures.append(
+                        f"{doc.relative_to(REPO_ROOT)}: `{token}` does "
+                        "not resolve to a repo file")
+            elif _DOTTED_RE.match(token):
+                if not _module_resolves(token, files):
+                    failures.append(
+                        f"{doc.relative_to(REPO_ROOT)}: `{token}` does "
+                        "not resolve to a module under src/")
+    return failures
+
+
+def main() -> None:
+    failures = check_docstrings() + check_references()
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        sys.exit(1)
+    print("docs OK: module docstrings present, all doc code references "
+          "resolve")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,12 @@ in the same CI job) against the committed baseline run and fails when:
 
 * ``decode_sync_free`` regressed — the fused decode chunk performed a
   device->host transfer, i.e. the paper-motivated sync-free property broke;
+* the paged-kernel comparison regressed — pool-direct decode outputs
+  diverged from the gather path / dense reference, the gathered ring
+  buffer reappeared in the paged decode executable's HLO, or pool-direct
+  tokens/sec fell more than ``--threshold`` below gather-then-attend on
+  the oversubscribed-pool workload (a same-machine comparison, so no
+  normalization is needed);
 * tokens/sec dropped more than ``--threshold`` (default 25%) vs the
   baseline.  CI machines differ from the machine that committed the
   baseline, so the comparison is machine-normalized: both runs also
@@ -94,12 +100,56 @@ def check(runs, threshold: float) -> int:
         failures.append("candidate run dropped the shared-prefix workload "
                         "(prefix_* fields missing)")
 
+    # ---- paged-kernel gates (gather-vs-pool-direct workload, same run).
+    # Correctness and structure first: pool-direct decode must be
+    # invisible in the tokens, and the gathered ring buffer must actually
+    # be gone from its decode executable.
+    if "paged_kernel_tokens_per_s" in cand:
+        if not cand.get("paged_kernel_outputs_match", False):
+            failures.append(
+                "paged-kernel correctness regressed: pool-direct outputs "
+                "diverged from the gather path / dense reference")
+        if not cand.get("paged_kernel_gather_free", False):
+            failures.append(
+                "paged decode executable still materializes the gathered "
+                "ring buffer (gather-then-attend shapes found in HLO)")
+        if not cand.get("gather_path_materializes_ring", True):
+            failures.append(
+                "gather-buffer HLO detection went vacuous: the reference "
+                "gather executable no longer shows the ring shapes the "
+                "check looks for")
+        if not cand.get("paged_kernel_decode_sync_free", True):
+            failures.append("paged-kernel decode chunk performed a "
+                            "device->host transfer")
+        if cand.get("paged_kernel_decode_compiles", 1) != 1:
+            failures.append(
+                "paged-kernel workload retraced the decode chunk "
+                f"({cand.get('paged_kernel_decode_compiles')} compiles)")
+        gather_tps = cand.get("paged_gather_tokens_per_s", 0.0)
+        floor = (1.0 - threshold) * gather_tps
+        if cand["paged_kernel_tokens_per_s"] < floor:
+            failures.append(
+                "paged-kernel decode slower than gather-then-attend on "
+                "the oversubscribed-pool workload: "
+                f"{cand['paged_kernel_tokens_per_s']:.0f} < floor "
+                f"{floor:.0f} (gather {gather_tps:.0f})")
+        print(f"paged kernel [{cand.get('paged_kernel_backend')}]: "
+              f"{cand['paged_kernel_tokens_per_s']:.0f} vs gather "
+              f"{gather_tps:.0f} tok/s "
+              f"(x{cand.get('paged_kernel_speedup', 0.0):.2f}) "
+              f"gather_free={cand.get('paged_kernel_gather_free')} "
+              f"match={cand.get('paged_kernel_outputs_match')}")
+    elif "paged_kernel_tokens_per_s" in base:
+        failures.append("candidate run dropped the paged-kernel workload "
+                        "(paged_kernel_* fields missing)")
+
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
         return 1
     print("serve bench OK: sync-free, single decode executable, "
-          "tokens/sec within threshold, prefix sharing correct")
+          "tokens/sec within threshold, prefix sharing correct, "
+          "paged-kernel decode gather-free and token-identical")
     return 0
 
 

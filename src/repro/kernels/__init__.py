@@ -5,7 +5,7 @@ ops.py (jit'd wrapper; interpret mode off-TPU), ref.py (pure-jnp oracle).
 """
 
 from repro.kernels import (flash_attention, fused_matmul, mamba2_scan,
-                           moe_gmm, rwkv6_wkv)
+                           moe_gmm, paged_attention, rwkv6_wkv)
 
 __all__ = ["flash_attention", "fused_matmul", "mamba2_scan", "moe_gmm",
-           "rwkv6_wkv"]
+           "paged_attention", "rwkv6_wkv"]

@@ -1,12 +1,35 @@
 """Pallas API version compatibility, shared by every kernel.
 
-pallas renamed ``TPUCompilerParams`` -> ``CompilerParams`` (jax>=0.5);
-alias once here so the same kernel source runs on both toolchains.
+Two renames are shimmed here so the same kernel source runs on every
+toolchain the repo supports:
+
+* ``TPUCompilerParams`` -> ``CompilerParams`` (jax>=0.5);
+* ``pltpu.PrefetchScalarGridSpec`` -> ``pl.GridSpec(...,
+  num_scalar_prefetch=...)`` (newer pallas folds scalar prefetch into the
+  generic grid spec).  The paged_attention kernel needs scalar prefetch —
+  its BlockSpec index maps read the page table to pick which physical
+  page to stream next.
+
+Kernels import these names instead of touching ``pltpu`` directly; tests
+self-gate on a runtime capability probe (see tests/test_kernels.py), so
+an API drift that this module misses shows up as a clean skip, not a
+wall of red.
 """
 
+from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 if not hasattr(pltpu, "CompilerParams"):  # pragma: no cover - version compat
     CompilerParams = pltpu.TPUCompilerParams
 else:
     CompilerParams = pltpu.CompilerParams
+
+if hasattr(pltpu, "PrefetchScalarGridSpec"):
+    PrefetchScalarGridSpec = pltpu.PrefetchScalarGridSpec
+else:  # pragma: no cover - version compat
+    def PrefetchScalarGridSpec(*, num_scalar_prefetch, grid, in_specs,
+                               out_specs, scratch_shapes=()):
+        return pl.GridSpec(grid=grid, in_specs=in_specs,
+                           out_specs=out_specs,
+                           num_scalar_prefetch=num_scalar_prefetch,
+                           scratch_shapes=scratch_shapes)

@@ -1,0 +1,139 @@
+"""Pallas TPU paged decode attention: gather-free pool reads.
+
+One decode token per slot attends to its block-paged KV ring
+(``serve/cache.py`` pool layout ``[num_pages+1, page_size, kv_heads,
+dh]`` behind a per-slot page table) *without* ever materializing the
+gathered ``[slots, ring, kv_heads, dh]`` buffer the XLA path builds.
+The page table and cache lengths ride in as **scalar prefetch**
+operands (``compat.PrefetchScalarGridSpec``), so the k/v BlockSpec
+index maps can pick the next physical page to DMA straight out of the
+pool in HBM — grid ``(slots, ring_blocks)`` with the page dimension
+sequential ("arbitrary"), streaming K/V page-by-page through VMEM with
+flash-style online softmax scratch carried across page steps.
+
+Per page the kernel recomputes the ring-validity mask from the same
+formula the XLA path uses (``models/attention.ring_token_positions``):
+ring offset ``r`` holds absolute token ``u = t - ((t - r) mod R)``,
+valid iff ``u >= 0`` (ever written) and, for sliding windows, ``u > t -
+window``.  The **trash page** (last pool row, where unreserved table
+entries point) contributes -inf scores: a table entry equal to the
+trash id masks its whole page, so a slot whose reservation ran out can
+never attend to the write-discard garbage.  A slot with *no* valid page
+(unadmitted / warmup rows) produces exactly 0 output — the denominator
+is clamped, matching ``ref.paged_attention_ref``.
+
+Grouped-query attention needs no KV repeat: queries arrive grouped
+``[slots, kv_heads, group, dh]`` and each kv head's page block is
+shared by its ``group`` query heads inside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams as _CompilerParams
+from repro.kernels.compat import PrefetchScalarGridSpec as _PrefetchGrid
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, page_size: int, nb: int, hkv: int, g: int,
+            trash: int, window: Optional[int], softcap: Optional[float],
+            scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    t = cl_ref[b] - 1                    # current absolute token position
+    phys = pt_ref[b, j]
+    ring = nb * page_size
+    r = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    u = t - ((t - r) % ring)             # latest token at each ring offset
+    valid = u >= 0
+    if window is not None:
+        valid = jnp.logical_and(valid, u > t - window)
+    live = jnp.logical_and(phys != trash, jnp.any(valid))
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                # [Hkv*G, dh]
+        for kh in range(hkv):       # static loop: one dot per kv head
+            k = k_ref[0, :, kh].astype(jnp.float32)     # [P, dh]
+            v = v_ref[0, :, kh].astype(jnp.float32)
+            sl = slice(kh * g, (kh + 1) * g)
+            s = jax.lax.dot_general(
+                q[sl], k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale   # [G, P]
+            if softcap is not None:
+                s = jnp.tanh(s / softcap) * softcap
+            s = jnp.where(valid, s, NEG_INF)
+            m_prev = m_ref[sl]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[sl] = l_ref[sl] * corr + jnp.sum(p, axis=1, keepdims=True)
+            acc_ref[sl] = acc_ref[sl] * corr + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_ref[sl] = m_new
+
+    @pl.when(j == nb - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, pool_k: jax.Array,
+                           pool_v: jax.Array, page_table: jax.Array,
+                           cache_len: jax.Array, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q [B,H,dh]; pools [num_pages+1,P,Hkv,dh]; page_table [B,nb] int32;
+    cache_len [B] int32 (valid tokens *including* the current one, whose
+    KV must already be written through the table) -> [B,H,dh]."""
+    b, h, dh = q.shape
+    npg, page_size, hkv, _ = pool_k.shape
+    nb = page_table.shape[1]
+    g = h // hkv
+    kern = functools.partial(
+        _kernel, page_size=page_size, nb=nb, hkv=hkv, g=g, trash=npg - 1,
+        window=window, softcap=softcap, scale=dh ** -0.5)
+    grid_spec = _PrefetchGrid(
+        num_scalar_prefetch=2,   # page_table + cache_len feed index maps
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda i, j, pt, cl: (i, 0, 0)),
+            pl.BlockSpec((1, page_size, hkv, dh),
+                         lambda i, j, pt, cl: (pt[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, hkv, dh),
+                         lambda i, j, pt, cl: (pt[i, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i, j, pt, cl: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),    # running max
+            pltpu.VMEM((h, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((h, dh), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), cache_len.astype(jnp.int32),
+      q, pool_k, pool_v)

@@ -1,0 +1,120 @@
+"""Public paged decode-attention op: pool-direct reads on every backend.
+
+``paged_attention`` is what ``models/attention.paged_decode_step`` calls
+on the serving fast path when the engine's ``paged_kernel`` flag is on.
+Dispatch:
+
+* **TPU** — the compiled Pallas kernel (``kernel.paged_decode_attention``):
+  scalar-prefetch page tables, one K/V page DMA'd per grid step, online
+  softmax in VMEM scratch.  No gathered ring buffer exists at any point.
+* **other backends** — ``pool_attention_xla`` below: score the query
+  against the *entire* pool and mask by a scattered table-membership
+  mask.  Still gather-free (the only scatter is a tiny ``[B, num_pages+1,
+  P]`` boolean mask; KV bytes are read in place), and on CPU it lowers to
+  two large einsums, which XLA runs faster than the per-page interpret
+  emulation of the kernel.  Its cost scales with the *physical pool*, not
+  the worst-case table width — cheaper than gather-then-attend whenever
+  the pool is oversubscribed (``num_pages < slots * ring_blocks``), which
+  is the configuration paging exists for.
+* ``interpret=True`` — force the Pallas kernel through interpret mode on
+  any backend: the parity-debugging path the kernel tests use on CPU.
+
+Correctness requires the scheduler invariant that already holds for the
+gather path: within one slot's table row every non-trash entry is a
+distinct physical page (pages shared *across* slots are fine — that is
+prefix sharing).  ``supported()`` is the capability probe engines and
+tests gate on: it runs the real kernel through the Pallas toolchain
+(interpret mode off-TPU) instead of sniffing versions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention
+
+NEG_INF = -1e30
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pool_attention_xla(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+                       page_table: jax.Array, cache_len: jax.Array, *,
+                       window: Optional[int] = None,
+                       softcap: Optional[float] = None) -> jax.Array:
+    """Gather-free XLA lowering: attend to the whole pool under a
+    scattered per-slot validity mask.
+
+    Ring validity (``u = t - ((t - r) mod R)``, window mask) is computed
+    in table space ``[B, nb, P]`` and scattered to pool space ``[B,
+    num_pages+1, P]`` through the page table; the trash row is then
+    force-masked, so duplicate trash entries cannot resurrect it.  Rows
+    with no valid position (unadmitted slots) return exactly 0, matching
+    the kernel's clamped denominator."""
+    b, h, dh = q.shape
+    npg, page_size, hkv, _ = pool_k.shape
+    nb = page_table.shape[1]
+    ring = nb * page_size
+    g = h // hkv
+    t = (cache_len - 1)[:, None, None]                         # [B,1,1]
+    r = (jnp.arange(nb)[:, None] * page_size
+         + jnp.arange(page_size)[None, :])[None]               # [1,nb,P]
+    u = t - ((t - r) % ring)
+    valid = u >= 0
+    if window is not None:
+        valid &= u > t - window
+    mask = jnp.zeros((b, npg, page_size), bool)
+    mask = mask.at[jnp.arange(b)[:, None], page_table].set(valid)
+    mask = mask.at[:, npg - 1].set(False)                      # trash row
+    q2 = q.reshape(b, hkv, g, dh)
+    scale = dh ** -0.5
+    s = jnp.einsum("bkgd,npkd->bkgnp", q2, pool_k)
+    s = s.astype(jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    w = jnp.exp(s - jnp.max(s, axis=(-2, -1), keepdims=True))
+    w = jnp.where(mask[:, None, None], w, 0.0)
+    l = jnp.maximum(jnp.sum(w, axis=(-2, -1), keepdims=True), 1e-30)
+    out = jnp.einsum("bkgnp,npkd->bkgd", (w / l).astype(pool_v.dtype),
+                     pool_v)
+    return out.reshape(b, h, dh)
+
+
+def paged_attention(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+                    page_table: jax.Array, cache_len: jax.Array, *,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    interpret: bool = False) -> jax.Array:
+    """Pool-direct decode attention; see module docstring for dispatch."""
+    if interpret or _on_tpu():
+        return paged_decode_attention(
+            q, pool_k, pool_v, page_table, cache_len, window=window,
+            softcap=softcap, interpret=interpret or not _on_tpu())
+    return pool_attention_xla(q, pool_k, pool_v, page_table, cache_len,
+                              window=window, softcap=softcap)
+
+
+@functools.lru_cache(maxsize=1)
+def supported() -> bool:
+    """Probe, don't version-sniff: run the smallest real paged-attention
+    kernel through the Pallas toolchain (interpret mode off-TPU).  API
+    drift (grid-spec / scalar-prefetch renames beyond what compat.py
+    shims) surfaces here as a clean False instead of a trace-time
+    crash."""
+    try:
+        q = jnp.zeros((1, 2, 8), jnp.float32)
+        pool = jnp.zeros((3, 4, 1, 8), jnp.float32)
+        pt = jnp.asarray([[0, 1]], jnp.int32)
+        cl = jnp.asarray([5], jnp.int32)
+        out = paged_decode_attention(q, pool, pool, pt, cl,
+                                     interpret=not _on_tpu())
+        return out.shape == (1, 2, 8)
+    except Exception:
+        return False

@@ -1,0 +1,60 @@
+"""Pure-jnp oracle: gather-then-attend over the paged pool.
+
+This is the semantics the kernel must reproduce — and exactly the data
+flow the kernel exists to kill: gather every table entry's page into a
+contiguous ``[B, ring, Hkv, dh]`` buffer, then run masked attention over
+it.  Validity is the ring formula from ``models/attention.ring_valid``
+(``u = t - ((t - r) mod R)``) plus the trash-page convention (a table
+entry equal to the trash id — the last pool row — masks its whole page).
+
+The softmax is the *masked-accumulate* form (weights zeroed where
+invalid, denominator clamped) rather than ``jax.nn.softmax`` over
+-inf-filled scores: the two agree wherever at least one position is
+valid, but a fully-dead row (unadmitted slot, all-trash table) comes out
+exactly 0 here — matching the kernel's clamped-denominator flush — where
+a plain softmax would average garbage uniformly.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+                        page_table: jax.Array, cache_len: jax.Array, *,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jax.Array:
+    """q [B,H,dh]; pools [num_pages+1,P,Hkv,dh]; page_table [B,nb];
+    cache_len [B] (incl. current token) -> [B,H,dh]."""
+    b, h, dh = q.shape
+    npg, page_size, hkv, _ = pool_k.shape
+    nb = page_table.shape[1]
+    ring = nb * page_size
+    g = h // hkv
+    gk = pool_k[page_table]                       # [B, nb, P, Hkv, dh]
+    gv = pool_v[page_table]
+    ck = jnp.moveaxis(gk.reshape(b, ring, hkv, dh), 1, 2)
+    cv = jnp.moveaxis(gv.reshape(b, ring, hkv, dh), 1, 2)
+    t = (cache_len - 1)[:, None]
+    r = jnp.arange(ring)[None, :]
+    u = t - ((t - r) % ring)
+    valid = u >= 0
+    if window is not None:
+        valid &= u > t - window
+    valid &= jnp.repeat(page_table != npg - 1, page_size, axis=1)
+    q2 = q.reshape(b, hkv, g, dh)
+    scale = dh ** -0.5
+    s = jnp.einsum("bkgd,bksd->bkgs", q2, ck).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = jnp.where(valid[:, None, None], w, 0.0)
+    l = jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgs,bksd->bkgd", (w / l).astype(cv.dtype), cv)
+    return out.reshape(b, h, dh)

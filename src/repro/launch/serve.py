@@ -45,6 +45,14 @@ def main() -> None:
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable radix prefix sharing / copy-on-write "
                          "page reuse (exclusive page ownership)")
+    ap.add_argument("--paged-kernel", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="decode-attention pool reads: 'on' forces the "
+                         "pool-direct path (Pallas kernel on TPU, "
+                         "pool-wide masked attention elsewhere), 'off' "
+                         "forces gather-then-attend (parity debugging), "
+                         "'auto' picks the kernel on a probe-passing "
+                         "TPU toolchain")
     ap.add_argument("--shared-prefix", type=int, default=12,
                     help="length of the prompt head shared by every "
                          "request in the synthetic workload (0 = fully "
@@ -70,6 +78,8 @@ def main() -> None:
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
                  page_size=args.page_size, num_pages=args.num_pages,
                  prefix_sharing=not args.no_prefix_sharing,
+                 paged_kernel={"auto": "auto", "on": True,
+                               "off": False}[args.paged_kernel],
                  temperature=args.temperature, top_k=args.top_k,
                  sync_interval=args.sync_interval)
     if args.warmup:
@@ -101,7 +111,9 @@ def main() -> None:
     print(f"paged KV: page_size={ms['page_size']} pools=[{groups}] "
           f"peak_pages_in_use={ms['peak_pages_in_use']} "
           f"dense/paged capacity ratio="
-          f"{ms['dense_vs_paged_capacity_ratio']:.2f}")
+          f"{ms['dense_vs_paged_capacity_ratio']:.2f} "
+          f"decode_attention="
+          f"{'pool-direct' if eng.paged_kernel else 'gather'}")
     ps = eng.prefix_stats()
     if ps["prefix_sharing"]:
         print(f"prefix sharing: hit_rate={ps['prefix_hit_rate']:.2f} "

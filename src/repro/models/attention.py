@@ -294,16 +294,21 @@ def prefix_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
                       cache: Dict, cache_len: jax.Array, *,
                       window: Optional[int],
-                      softcap: Optional[float]
+                      softcap: Optional[float],
+                      paged_kernel: bool = False
                       ) -> Tuple[jax.Array, Dict]:
     """One-token attention against a block-paged KV pool.
 
     cache: {"pk","pv": [num_pages+1, P, Hkv, dh], "pt": [B, max_blocks],
     optional "wm": [B] bool write mask}.  Writes the new KV through the
-    page table (write-then-gather, so the current token attends to
-    itself), gathers the slot's logical ring, and masks by ring validity.
-    All shapes are static: the compiled decode chunk only indexes the
-    table the host populated at admission.
+    page table (write-then-attend, so the current token attends to
+    itself), then either gathers the slot's logical ring and masks by
+    ring validity (default), or — with ``paged_kernel=True`` — reads the
+    pool *directly* through ``kernels/paged_attention`` (Pallas page
+    streaming on TPU, pool-wide masked attention elsewhere) so the
+    gathered ``[B, ring, Hkv, dh]`` buffer never exists.  All shapes are
+    static: the compiled decode chunk only indexes the table the host
+    populated at admission.
 
     ``wm`` (the engine passes its ``active`` slot mask) redirects the
     writes of finished/idle slots to the trash page.  A slot that
@@ -330,6 +335,11 @@ def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
     # the shared trash page where last-write-wins races are harmless
     pool_k = pool_k.at[phys, off].set(k_new.astype(pool_k.dtype))
     pool_v = pool_v.at[phys, off].set(v_new.astype(pool_v.dtype))
+    if paged_kernel:
+        from repro.kernels.paged_attention import paged_attention
+        out = paged_attention(q[:, 0], pool_k, pool_v, pt[:, :blocks],
+                              cache_len, window=window, softcap=softcap)
+        return out[:, None], {"pk": pool_k, "pv": pool_v}
     gk = pool_k[pt[:, :blocks]]        # [B, blocks, P, Hkv, dh]
     gv = pool_v[pt[:, :blocks]]
     ck = jnp.moveaxis(gk.reshape(b, ring, *gk.shape[3:]), 1, 2)
@@ -357,12 +367,16 @@ def apply(params: Dict, x: jax.Array, *, cfg: ModelConfig,
           cache_len: Optional[jax.Array] = None,
           causal: bool = True,
           q_chunk: Optional[int] = None,
-          ctx: Optional[Dict] = None
+          ctx: Optional[Dict] = None,
+          paged_kernel: bool = False
           ) -> Tuple[jax.Array, Optional[Dict]]:
     """x [B,S,d] -> (y [B,S,d], new_cache | None).
 
     mode: "dense" (train / encoder: no cache), "prefill" (returns cache),
     "decode" (S==1; reads+updates cache; cache_len includes current token).
+
+    ``paged_kernel`` (paged decode only): read KV straight from the page
+    pool via ``kernels/paged_attention`` instead of gather-then-attend.
 
     ``ctx`` (prefill only): shared-prefix context for a *suffix* prefill —
     ``{"pk","pv": pool, "row": [Cb] page ids, "off": scalar}``.  The
@@ -416,7 +430,7 @@ def apply(params: Dict, x: jax.Array, *, cfg: ModelConfig,
         # block-paged KV (serve/cache.py): pool + page-table indirection
         out, new_cache = paged_decode_step(
             q, kk, vv, cache, cache_len, window=window,
-            softcap=cfg.attn_softcap)
+            softcap=cfg.attn_softcap, paged_kernel=paged_kernel)
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
         return sh.shard(y, sh.BATCH, sh.SEQ, sh.EMBED), new_cache
     if mode == "decode":

@@ -113,7 +113,8 @@ def _apply_block(lp: Dict, shared_params: Optional[List[Dict]], h: jax.Array,
                  cache: Optional[Dict], cache_len: Optional[jax.Array],
                  enc_kv: Optional[Dict], q_chunk: Optional[int],
                  length: Optional[jax.Array] = None,
-                 ctx: Optional[Dict] = None
+                 ctx: Optional[Dict] = None,
+                 paged_kernel: bool = False
                  ) -> Tuple[jax.Array, Optional[Dict], Dict]:
     """One decoder layer. Returns (h, new_cache, aux).
 
@@ -138,7 +139,8 @@ def _apply_block(lp: Dict, shared_params: Optional[List[Dict]], h: jax.Array,
             sp["attn"], layers.rmsnorm(sp["ln_attn"], sh.sp_boundary(x),
                                        cfg.norm_eps),
             cfg=cfg, window=block.window, positions=positions, mode=mode,
-            cache=cache, cache_len=cache_len, q_chunk=q_chunk)
+            cache=cache, cache_len=cache_len, q_chunk=q_chunk,
+            paged_kernel=paged_kernel)
         x = x + y
         x = x + layers.mlp(sp["mlp"],
                            layers.rmsnorm(sp["ln_mlp"], sh.sp_boundary(x),
@@ -154,7 +156,7 @@ def _apply_block(lp: Dict, shared_params: Optional[List[Dict]], h: jax.Array,
         y, new_cache = attention.apply(
             lp["mixer"], xn, cfg=cfg, window=block.window,
             positions=positions, mode=mode, cache=cache, cache_len=cache_len,
-            q_chunk=q_chunk, ctx=ctx)
+            q_chunk=q_chunk, ctx=ctx, paged_kernel=paged_kernel)
     elif block.mixer == MAMBA2:
         y, new_cache = mamba2.apply(lp["mixer"], xn, cfg, mode=mode,
                                     state=cache, length=length)
@@ -196,7 +198,8 @@ def _decoder(params, cfg: ModelConfig, h: jax.Array, *, mode: str,
              cache_len: Optional[jax.Array], enc_kv_list: Optional[List],
              q_chunk: Optional[int], remat: bool = False,
              length: Optional[jax.Array] = None,
-             ctx_list: Optional[List] = None
+             ctx_list: Optional[List] = None,
+             paged_kernel: bool = False
              ) -> Tuple[jax.Array, Optional[List], Dict]:
     h0 = h
     shared = params.get("shared")
@@ -218,7 +221,8 @@ def _decoder(params, cfg: ModelConfig, h: jax.Array, *, mode: str,
             h, nc, aux = _apply_block(
                 params["layers"][i], shared, h, h0, cfg, block, mode=mode,
                 positions=positions, cache=cache_i, cache_len=cache_len,
-                enc_kv=enc_kv, q_chunk=q_chunk, length=length, ctx=ctx_i)
+                enc_kv=enc_kv, q_chunk=q_chunk, length=length, ctx=ctx_i,
+                paged_kernel=paged_kernel)
         new_caches.append(nc)
         for k_, v_ in aux.items():
             aux_all[k_] = aux_all.get(k_, 0.0) + v_ / cfg.num_layers
@@ -360,7 +364,8 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
 
 
 def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
-                   cache: Dict, write_mask: Optional[jax.Array] = None
+                   cache: Dict, write_mask: Optional[jax.Array] = None,
+                   paged_kernel: bool = False
                    ) -> Tuple[jax.Array, Dict]:
     """tokens [B,1]; cache from prefill (or abstract).  cache["len"] is the
     number of tokens already in the cache (excluding this one).
@@ -377,7 +382,12 @@ def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
     this step; the serving engine passes its ``active`` slot mask so the
     dead tail of a fused chunk (finished slots keep stepping until the
     drain) lands on the trash page instead of wrapping into pages that
-    may now be shared with other slots or the radix prefix index."""
+    may now be shared with other slots or the radix prefix index.
+
+    ``paged_kernel`` (paged caches only): attention layers read KV
+    straight from the page pools via ``kernels/paged_attention`` —
+    Pallas page streaming on TPU, pool-wide masked attention elsewhere —
+    instead of gathering each slot's ring into a contiguous buffer."""
     b = tokens.shape[0]
     cache_len = cache["len"] + 1         # including current token
     positions = cache["len"][:, None]    # 0-based position of current token
@@ -399,7 +409,8 @@ def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
     h, new_caches, _ = _decoder(params, cfg, h, mode="decode",
                                 positions=positions, caches=layer_caches,
                                 cache_len=cache_len,
-                                enc_kv_list=cache.get("enc_kv"), q_chunk=None)
+                                enc_kv_list=cache.get("enc_kv"), q_chunk=None,
+                                paged_kernel=paged_kernel)
     lg = layers.logits(params["embed"], cfg, h)
     new_cache = {"layers": new_caches, "enc_kv": cache.get("enc_kv"),
                  "len": cache_len}

@@ -129,10 +129,26 @@ class CacheSpec:
                 "via examples/whisper_transcribe.py's direct loop.")
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if page_size & (page_size - 1):
+            # fail HERE with an actionable message: a non-power-of-two
+            # page used to survive until the paged-attention kernel's
+            # block spec tried to tile it and died inside Pallas at
+            # trace time (and the bucketed splice assumed pow2 rings)
+            raise ValueError(
+                f"page_size must be a power of two (kernel block specs "
+                f"tile pages into the VMEM grid), got {page_size}")
         layers: List[Optional[LayerCacheSpec]] = []
         for block in cfg.blocks:
             if block.mixer in (ATTN, SHARED_ATTN):
                 cap = min(max_len, block.window or max_len)
+                if page_size > cap:
+                    raise ValueError(
+                        f"page_size={page_size} exceeds a paged layer's "
+                        f"ring width {cap} (min(max_len={max_len}, "
+                        f"window={block.window})): one page would span "
+                        "more tokens than the layer can ever hold and "
+                        "the kernel block spec cannot tile it; lower "
+                        "page_size or raise max_len")
                 layers.append(LayerCacheSpec(
                     PAGED_KV, ring_blocks=_ceil_div(cap, page_size),
                     window=block.window))

@@ -66,11 +66,13 @@ class Executor:
 
     def __init__(self, cfg: ModelConfig, spec: CacheSpec, *, top_k: int,
                  sync_interval: int, donate: bool,
-                 rules: Optional[sh.Rules] = None):
+                 rules: Optional[sh.Rules] = None,
+                 paged_kernel: bool = False):
         self.cfg = cfg
         self.spec = spec
         self.top_k = int(top_k)
         self.sync_interval = int(sync_interval)
+        self.paged_kernel = bool(paged_kernel)
         self._rules = rules
         self._prefill_fn = jax.jit(self._prefill_impl)
         # suffix prefill READS the live pools (shared-prefix gather), so
@@ -156,7 +158,8 @@ class Executor:
             # or the radix prefix index
             logits, cache = forward_decode(
                 params, self.cfg, state["tokens"][:, None], cache,
-                write_mask=state["active"])
+                write_mask=state["active"],
+                paged_kernel=self.paged_kernel)
             cache.pop("enc_kv", None)   # decoder-only: keep carry structure
             key, sub = jax.random.split(state["key"])
             nxt = sampling.sample(logits, sub, temperature=state["temp"],
@@ -229,7 +232,12 @@ class Engine:
     overhead).  ``prefix_sharing`` (on by default, auto-disabled for
     archs whose prefix state cannot live in pages) admits requests with a
     cached prompt prefix onto shared pages and prefillls only the
-    suffix."""
+    suffix.  ``paged_kernel`` selects how decode attention reads the
+    pools: ``True`` = pool-direct (``kernels/paged_attention``: Pallas
+    page streaming on TPU, pool-wide masked attention elsewhere — the
+    gather buffer never exists), ``False`` = gather-then-attend, and
+    ``"auto"`` = kernel on a probe-passing TPU toolchain, gather
+    elsewhere."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
@@ -238,6 +246,7 @@ class Engine:
                  buckets: Optional[List[int]] = None,
                  page_size: int = 8, num_pages: Optional[int] = None,
                  prefix_sharing: bool = True,
+                 paged_kernel: Any = "auto",
                  rules: Optional[sh.Rules] = None,
                  donate: Any = "auto"):
         if cfg.cross_attention:
@@ -270,10 +279,23 @@ class Engine:
         self.spec = CacheSpec.from_config(cfg, slots, max_len,
                                           page_size=page_size,
                                           num_pages=num_pages)
+        if paged_kernel == "auto":
+            # pool-direct attention is the TPU hot path (compiled Pallas
+            # kernel, gated on the runtime toolchain probe).  Off-TPU the
+            # default stays gather-then-attend: at smoke scale XLA's
+            # fused gather+softmax wins, and the pool-wide lowering only
+            # pays off once the pool is oversubscribed — opt in with
+            # paged_kernel=True (fig14 measures both).
+            from repro.kernels import paged_attention as paged_ops
+            paged_kernel = (self.spec.has_paged
+                            and jax.default_backend() == "tpu"
+                            and paged_ops.supported())
+        self.paged_kernel = bool(paged_kernel) and self.spec.has_paged
         self.scheduler = Scheduler(self.spec, prefix_sharing=prefix_sharing)
         self.executor = Executor(cfg, self.spec, top_k=self.top_k,
                                  sync_interval=self.sync_interval,
-                                 donate=self._donate, rules=rules)
+                                 donate=self._donate, rules=rules,
+                                 paged_kernel=self.paged_kernel)
 
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._slot_first_tok: List[Optional[jax.Array]] = [None] * slots
