@@ -5,6 +5,14 @@ in the same CI job) against the committed baseline run and fails when:
 
 * ``decode_sync_free`` regressed — the fused decode chunk performed a
   device->host transfer, i.e. the paper-motivated sync-free property broke;
+* the batched-admission splice retraced (``new_admit_compiles != 1``) —
+  a chunk boundary's admissions are meant to land in ONE executable;
+* the speculative workload regressed — drafted outputs diverged from the
+  non-speculative engine / dense reference at temperature 0, the n-gram
+  acceptance rate fell to <= 0.5 on the repetitive-text workload, the
+  speculative decode throughput fell below 1.2x the non-speculative
+  baseline (same machine, same run), the chunk stopped being sync-free,
+  or an executable retraced;
 * the paged-kernel comparison regressed — pool-direct decode outputs
   diverged from the gather path / dense reference, the gathered ring
   buffer reappeared in the paged decode executable's HLO, or pool-direct
@@ -66,6 +74,16 @@ def check(runs, threshold: float) -> int:
         failures.append("decode executable count != 1: the shape-stable "
                         "chunk retraced "
                         f"({cand.get('new_decode_compiles')} compiles)")
+
+    if "new_admit_compiles" in cand and cand["new_admit_compiles"] != 1:
+        failures.append(
+            "batched admission executable count != 1: the chunk-boundary "
+            "splice retraced "
+            f"({cand.get('new_admit_compiles')} compiles)")
+    elif "new_admit_compiles" not in cand \
+            and "new_admit_compiles" in base:
+        failures.append("candidate run dropped the batched-admission "
+                        "telemetry (new_admit_compiles missing)")
 
     # ---- prefix-sharing gates (shared-prefix workload in the same run).
     # Correctness first: radix/CoW admission must be invisible in the
@@ -143,13 +161,61 @@ def check(runs, threshold: float) -> int:
         failures.append("candidate run dropped the paged-kernel workload "
                         "(paged_kernel_* fields missing)")
 
+    # ---- speculative-decoding gates (repetitive-text workload, same
+    # run).  Correctness first: drafted/verified decoding must be
+    # invisible in the tokens at temperature 0.
+    if "spec_decode_tokens_per_s" in cand:
+        if not cand.get("spec_outputs_match", False):
+            failures.append(
+                "speculative correctness regressed: drafted outputs "
+                "diverged from the non-speculative engine / dense "
+                "reference at temperature 0")
+        if not cand.get("spec_acceptance_rate", 0.0) > 0.5:
+            failures.append(
+                "speculative acceptance rate <= 0.5 on the repetitive "
+                f"workload ({cand.get('spec_acceptance_rate', 0.0):.3f}) "
+                "— the n-gram drafter stopped earning its verify cost")
+        base_d = cand.get("spec_baseline_decode_tokens_per_s", 0.0)
+        if not base_d > 0.0:
+            failures.append(
+                "speculative baseline decode throughput missing or zero "
+                "(spec_baseline_decode_tokens_per_s) — the 1.2x gate "
+                "would be vacuous")
+        elif cand["spec_decode_tokens_per_s"] < 1.2 * base_d:
+            failures.append(
+                "speculative decode throughput < 1.2x the non-spec "
+                f"baseline: {cand['spec_decode_tokens_per_s']:.0f} vs "
+                f"{base_d:.0f} tok/s "
+                f"(x{cand.get('spec_decode_speedup', 0.0):.2f})")
+        if not cand.get("spec_decode_sync_free", True):
+            failures.append("speculative decode chunk performed a "
+                            "device->host transfer")
+        if cand.get("spec_decode_compiles", 1) != 1:
+            failures.append(
+                "speculative workload retraced the decode chunk "
+                f"({cand.get('spec_decode_compiles')} compiles)")
+        if cand.get("spec_admit_compiles", 1) != 1:
+            failures.append(
+                "speculative workload retraced the batched admission "
+                f"splice ({cand.get('spec_admit_compiles')} compiles)")
+        print(f"speculative [{cand.get('spec_drafter')}, "
+              f"k={cand.get('spec_k')}]: "
+              f"acceptance={cand.get('spec_acceptance_rate', 0.0):.2f} "
+              f"tokens/step={cand.get('spec_tokens_per_step', 0.0):.2f} "
+              f"decode x{cand.get('spec_decode_speedup', 0.0):.2f} "
+              f"match={cand.get('spec_outputs_match')}")
+    elif "spec_decode_tokens_per_s" in base:
+        failures.append("candidate run dropped the speculative workload "
+                        "(spec_* fields missing)")
+
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
         return 1
-    print("serve bench OK: sync-free, single decode executable, "
-          "tokens/sec within threshold, prefix sharing correct, "
-          "paged-kernel decode gather-free and token-identical")
+    print("serve bench OK: sync-free, single decode + admission "
+          "executables, tokens/sec within threshold, prefix sharing "
+          "correct, paged-kernel decode gather-free and token-identical, "
+          "speculative decode token-identical and >= 1.2x")
     return 0
 
 

@@ -20,6 +20,12 @@ decode against the pool-direct paged-attention path
 parity against both the gather engine and the dense reference, and
 checks — via the optimized decode-chunk HLO — that the gathered ring
 buffer is gone from the paged executable.
+
+``speculative_comparison`` runs the speculative engine (n-gram drafter,
+K=4 — ``serve/spec``) on a repetitive-text workload: greedy token parity
+vs the non-speculative engine and the dense reference, acceptance rate,
+committed tokens per verify step, and steady-state decode tokens/sec vs
+the plain engine (gated >= 1.2x by check_serve_regression).
 """
 
 import time
@@ -158,7 +164,8 @@ def _decode_executable(eng):
     """(optimized HLO text, temp bytes | None) of the fused decode chunk."""
     ex = eng.executor
     with ex._ctx():
-        lowered = ex._chunk_fn.lower(eng.params, eng.cache, eng.state)
+        lowered = ex._chunk_fn.lower(eng.params, eng.draft_params,
+                                     eng.cache, eng.state)
     comp = lowered.compile()
     txt = comp.as_text()
     try:
@@ -295,6 +302,135 @@ def paged_kernel_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     return rec
 
 
+def speculative_comparison(max_new: int = 48) -> dict:
+    """Speculative vs plain decoding on a repetitive-text workload.
+
+    The workload is eight constant-token prompts (the most repetitive
+    text there is): the reduced model's greedy continuations settle into
+    short cycles, which is exactly the regime the prompt-lookup n-gram
+    drafter exists for.  Measures and gates (check_serve_regression):
+
+    * greedy token parity — speculative output identical to the
+      non-speculative engine AND the dense ``ReferenceEngine``;
+    * acceptance rate > 0.5 and committed tokens per verify step;
+    * steady-state decode throughput at full slot occupancy: tokens
+      delivered per second of fused-chunk wall time, speculative vs
+      plain.  This is the decode-side speedup the subsystem buys
+      (>= 1.2x gated); end-to-end tokens/sec (including prefill and
+      admission overhead both engines share) is recorded alongside;
+    * sync-free chunk (transfer guard) and executable counts: ONE decode
+      chunk, ONE batched admission splice.
+    """
+    from repro.configs import get_config, reduced
+    from repro.models import model_defs
+    from repro.models import module as m
+    from repro.serve.engine import Engine, Request
+    from repro.serve.reference import ReferenceEngine
+    from repro.serve.spec import SpecConfig
+
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    # repetitive-text probes: greedy continuations of these constant
+    # prompts are strongly cyclic for the seeded reduced model
+    toks = [50, 80, 116, 176, 98, 128, 224, 194]
+    kw = dict(slots=4, max_len=256, page_size=8, sync_interval=8,
+              prefix_sharing=False)
+
+    def load(eng):
+        for i, t in enumerate(toks):
+            eng.submit(Request(rid=i, prompt=[t] * 20,
+                               max_new_tokens=max_new))
+        t0 = time.perf_counter()
+        done = eng.run(max_steps=100_000)
+        dt = time.perf_counter() - t0
+        assert len(done) == len(toks)
+        n = sum(len(r.out_tokens) for r in done)
+        out = {r.rid: r.out_tokens for r in done}
+        eng.finished = []
+        return out, n / dt
+
+    def decode_tps(eng, chunks: int = 4):
+        """Steady-state decode throughput: all slots live, no admissions
+        or drains inside the timed window — tokens committed per second
+        of chunk wall time.  The budget exceeds the maximum the window
+        can commit ((1+chunks) * sync_interval * (K+1) tokens), so no
+        slot can finish mid-measurement."""
+        for i, t in enumerate(toks[:kw["slots"]]):
+            eng.submit(Request(rid=100 + i, prompt=[t] * 20,
+                               max_new_tokens=kw["max_len"] - 24))
+        eng._admit()
+        jax.block_until_ready(eng.step_chunk())          # warm dispatch
+        start = jax.device_get(eng.state["out_len"]).sum()
+        t0 = time.perf_counter()
+        for _ in range(chunks):
+            toks_h = eng.step_chunk()
+        jax.block_until_ready(toks_h)
+        dt = time.perf_counter() - t0
+        emitted = jax.device_get(eng.state["out_len"]).sum() - start
+        assert bool(jax.device_get(eng.state["active"]).all()), \
+            "decode-throughput window must keep every slot live"
+        return float(emitted) / dt
+
+    base = Engine(cfg, params, **kw)
+    base.warmup()
+    load(base)
+    out_base, base_tps = load(base)
+
+    spec = Engine(cfg, params, spec=SpecConfig(draft="ngram", k=4,
+                                               ngram=3), **kw)
+    spec.warmup()
+    load(spec)
+    out_spec, spec_tps = load(spec)
+    stats = spec.spec_stats()
+
+    ref = ReferenceEngine(cfg, params, slots=4, max_len=256)
+    out_ref, _ = load(ref)
+    outputs_match = out_spec == out_base == out_ref
+
+    base_d = Engine(cfg, params, **kw)
+    base_d.warmup()
+    base_decode_tps = decode_tps(base_d)
+    spec_d = Engine(cfg, params, spec=SpecConfig(draft="ngram", k=4,
+                                                 ngram=3), **kw)
+    spec_d.warmup()
+    spec_decode_tps = decode_tps(spec_d)
+
+    sync_free = True
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            t = spec_d.step_chunk()
+        jax.block_until_ready(t)   # spec_d is discarded; no drain needed
+    except Exception as e:  # noqa: BLE001 - classify, don't swallow
+        if "transfer" not in str(e).lower():
+            raise
+        sync_free = False
+
+    rec = {
+        "spec_drafter": "ngram",
+        "spec_k": 4,
+        "spec_outputs_match": outputs_match,
+        "spec_acceptance_rate": stats["acceptance_rate"],
+        "spec_tokens_per_step": stats["tokens_per_step"],
+        "spec_steps": stats["spec_steps"],
+        "spec_tokens_per_s": spec_tps,
+        "spec_baseline_tokens_per_s": base_tps,
+        "spec_decode_tokens_per_s": spec_decode_tps,
+        "spec_baseline_decode_tokens_per_s": base_decode_tps,
+        "spec_decode_speedup": spec_decode_tps / base_decode_tps,
+        "spec_decode_sync_free": sync_free,
+        "spec_decode_compiles": spec.decode_compiles,
+        "spec_admit_compiles": spec.admit_compiles,
+    }
+    emit("fig14.spec_acceptance", rec["spec_acceptance_rate"],
+         f"tokens_per_step={rec['spec_tokens_per_step']:.2f},"
+         f"match={outputs_match}")
+    emit("fig14.spec_decode_speedup", rec["spec_decode_speedup"],
+         f"spec={spec_decode_tps:.0f}tok/s,base={base_decode_tps:.0f}tok/s,"
+         f"e2e={spec_tps:.0f}/{base_tps:.0f}")
+    return rec
+
+
 def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     from repro.configs import get_config, reduced
     from repro.models import model_defs
@@ -373,6 +509,9 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         "ref_prefill_compiles": ref.prefill_compiles,
         "new_prefill_compiles": eng.prefill_compiles,
         "new_decode_compiles": eng.decode_compiles,
+        # batched multi-slot admission: every chunk boundary's admissions
+        # land in ONE splice dispatch, and that executable compiles once
+        "new_admit_compiles": eng.admit_compiles,
         "buckets": list(eng.buckets),
         "sync_interval": eng.sync_interval,
         "decode_sync_free": sync_free,
@@ -440,6 +579,7 @@ def main() -> None:
     rec = serve_engine_comparison()
     rec.update(shared_prefix_comparison())
     rec.update(paged_kernel_comparison())
+    rec.update(speculative_comparison())
     path = write_bench_json("BENCH_serve.json", rec)
     print(f"# serve trajectory appended to {path}", flush=True)
 

@@ -1,6 +1,7 @@
 """Pallas TPU paged decode attention: gather-free pool reads.
 
-One decode token per slot attends to its block-paged KV ring
+Up to ``K+1`` decode tokens per slot (one for plain decode, several for a
+speculative verify step) attend to the slot's block-paged KV ring
 (``serve/cache.py`` pool layout ``[num_pages+1, page_size, kv_heads,
 dh]`` behind a per-slot page table) *without* ever materializing the
 gathered ``[slots, ring, kv_heads, dh]`` buffer the XLA path builds.
@@ -15,16 +16,20 @@ Per page the kernel recomputes the ring-validity mask from the same
 formula the XLA path uses (``models/attention.ring_token_positions``):
 ring offset ``r`` holds absolute token ``u = t - ((t - r) mod R)``,
 valid iff ``u >= 0`` (ever written) and, for sliding windows, ``u > t -
-window``.  The **trash page** (last pool row, where unreserved table
-entries point) contributes -inf scores: a table entry equal to the
-trash id masks its whole page, so a slot whose reservation ran out can
-never attend to the write-discard garbage.  A slot with *no* valid page
-(unadmitted / warmup rows) produces exactly 0 output — the denominator
-is clamped, matching ``ref.paged_attention_ref``.
+window``.  With ``q_len > 1`` query rows (speculative verify), query
+row ``i`` sits at absolute position ``t - (q_len-1) + i`` and the mask
+is evaluated *per row*, so a drafted query can attend to the drafted
+tokens before it but never to the ones after it.  The **trash page**
+(last pool row, where unreserved table entries point) contributes -inf
+scores: a table entry equal to the trash id masks its whole page, so a
+slot whose reservation ran out can never attend to the write-discard
+garbage.  A slot with *no* valid page (unadmitted / warmup rows)
+produces exactly 0 output — the denominator is clamped, matching
+``ref.paged_attention_ref``.
 
 Grouped-query attention needs no KV repeat: queries arrive grouped
-``[slots, kv_heads, group, dh]`` and each kv head's page block is
-shared by its ``group`` query heads inside the kernel.
+``[slots, kv_heads, q_len * group, dh]`` and each kv head's page block
+is shared by its ``q_len * group`` query rows inside the kernel.
 """
 
 from __future__ import annotations
@@ -45,8 +50,8 @@ NEG_INF = -1e30
 
 def _kernel(pt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
             acc_ref, *, page_size: int, nb: int, hkv: int, g: int,
-            trash: int, window: Optional[int], softcap: Optional[float],
-            scale: float):
+            q_len: int, trash: int, window: Optional[int],
+            softcap: Optional[float], scale: float):
     b = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -56,7 +61,7 @@ def _kernel(pt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    t = cl_ref[b] - 1                    # current absolute token position
+    t = cl_ref[b] - 1                    # newest query's absolute position
     phys = pt_ref[b, j]
     ring = nb * page_size
     r = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
@@ -64,18 +69,30 @@ def _kernel(pt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     valid = u >= 0
     if window is not None:
         valid = jnp.logical_and(valid, u > t - window)
+    rows = q_len * g                     # query rows per kv head
+    if q_len > 1:
+        # per-row causal mask: row i (of any kv head) is query q = i // g at
+        # absolute position t - (q_len - 1) + (i // g)
+        qpos = (t - (q_len - 1)
+                + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // g)
+        valid = jnp.logical_and(u >= 0, u <= qpos)       # [rows, P]
+        if window is not None:
+            valid = jnp.logical_and(valid, u > qpos - window)
+    # page-skip predicate AFTER the per-row recompute: a page whose
+    # tokens are stale for the newest row can still be in-window for an
+    # earlier draft row (its window starts q_len-1 positions earlier)
     live = jnp.logical_and(phys != trash, jnp.any(valid))
 
     @pl.when(live)
     def _step():
-        q = q_ref[0].astype(jnp.float32)                # [Hkv*G, dh]
+        q = q_ref[0].astype(jnp.float32)                # [Hkv*q_len*G, dh]
         for kh in range(hkv):       # static loop: one dot per kv head
             k = k_ref[0, :, kh].astype(jnp.float32)     # [P, dh]
             v = v_ref[0, :, kh].astype(jnp.float32)
-            sl = slice(kh * g, (kh + 1) * g)
+            sl = slice(kh * rows, (kh + 1) * rows)
             s = jax.lax.dot_general(
                 q[sl], k, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32) * scale   # [G, P]
+                preferred_element_type=jnp.float32) * scale   # [rows, P]
             if softcap is not None:
                 s = jnp.tanh(s / softcap) * softcap
             s = jnp.where(valid, s, NEG_INF)
@@ -101,39 +118,52 @@ def paged_decode_attention(q: jax.Array, pool_k: jax.Array,
                            window: Optional[int] = None,
                            softcap: Optional[float] = None,
                            interpret: bool = False) -> jax.Array:
-    """q [B,H,dh]; pools [num_pages+1,P,Hkv,dh]; page_table [B,nb] int32;
-    cache_len [B] int32 (valid tokens *including* the current one, whose
-    KV must already be written through the table) -> [B,H,dh]."""
-    b, h, dh = q.shape
+    """q [B,H,dh] (single decode token) or [B,S,H,dh] (S <= K+1 verify
+    rows, newest last); pools [num_pages+1,P,Hkv,dh]; page_table [B,nb]
+    int32; cache_len [B] int32 (valid tokens *including* the newest query
+    token, whose KV must already be written through the table) -> output
+    shaped like ``q``."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    b, s, h, dh = q.shape
     npg, page_size, hkv, _ = pool_k.shape
     nb = page_table.shape[1]
     g = h // hkv
+    # rows grouped by kv head: [B, Hkv, S, G, dh] -> [B, Hkv*S*G, dh]
+    qr = q.reshape(b, s, hkv, g, dh).transpose(0, 2, 1, 3, 4)
+    qr = qr.reshape(b, hkv * s * g, dh)
     kern = functools.partial(
-        _kernel, page_size=page_size, nb=nb, hkv=hkv, g=g, trash=npg - 1,
-        window=window, softcap=softcap, scale=dh ** -0.5)
+        _kernel, page_size=page_size, nb=nb, hkv=hkv, g=g, q_len=s,
+        trash=npg - 1, window=window, softcap=softcap, scale=dh ** -0.5)
+    rows = h * s
     grid_spec = _PrefetchGrid(
         num_scalar_prefetch=2,   # page_table + cache_len feed index maps
         grid=(b, nb),
         in_specs=[
-            pl.BlockSpec((1, h, dh), lambda i, j, pt, cl: (i, 0, 0)),
+            pl.BlockSpec((1, rows, dh), lambda i, j, pt, cl: (i, 0, 0)),
             pl.BlockSpec((1, page_size, hkv, dh),
                          lambda i, j, pt, cl: (pt[i, j], 0, 0, 0)),
             pl.BlockSpec((1, page_size, hkv, dh),
                          lambda i, j, pt, cl: (pt[i, j], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, h, dh), lambda i, j, pt, cl: (i, 0, 0)),
+        out_specs=pl.BlockSpec((1, rows, dh),
+                               lambda i, j, pt, cl: (i, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((h, 1), jnp.float32),    # running max
-            pltpu.VMEM((h, 1), jnp.float32),    # running denominator
-            pltpu.VMEM((h, dh), jnp.float32),   # output accumulator
+            pltpu.VMEM((rows, 1), jnp.float32),    # running max
+            pltpu.VMEM((rows, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((rows, dh), jnp.float32),   # output accumulator
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, rows, dh), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(page_table.astype(jnp.int32), cache_len.astype(jnp.int32),
-      q, pool_k, pool_v)
+      qr, pool_k, pool_v)
+    out = out.reshape(b, hkv, s, g, dh).transpose(0, 2, 1, 3, 4)
+    out = out.reshape(b, s, h, dh)
+    return out[:, 0] if squeeze else out

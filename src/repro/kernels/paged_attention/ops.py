@@ -56,35 +56,64 @@ def pool_attention_xla(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
     num_pages+1, P]`` through the page table; the trash row is then
     force-masked, so duplicate trash entries cannot resurrect it.  Rows
     with no valid position (unadmitted slots) return exactly 0, matching
-    the kernel's clamped denominator."""
-    b, h, dh = q.shape
+    the kernel's clamped denominator.  ``q`` may carry ``S`` query rows
+    per slot ([B,S,H,dh], the speculative verify step); query row ``i``
+    sits at absolute position ``cache_len - S + i`` and the mask is
+    evaluated per row, so a drafted query never attends past itself."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    b, sq, h, dh = q.shape
     npg, page_size, hkv, _ = pool_k.shape
     nb = page_table.shape[1]
     ring = nb * page_size
     g = h // hkv
+    scale = dh ** -0.5
     t = (cache_len - 1)[:, None, None]                         # [B,1,1]
     r = (jnp.arange(nb)[:, None] * page_size
          + jnp.arange(page_size)[None, :])[None]               # [1,nb,P]
-    u = t - ((t - r) % ring)
-    valid = u >= 0
+    u = t - ((t - r) % ring)                                   # [B,nb,P]
+    if sq == 1:              # plain decode: keep the PR-4 lowering exactly
+        valid = u >= 0
+        if window is not None:
+            valid &= u > t - window
+        mask = jnp.zeros((b, npg, page_size), bool)
+        mask = mask.at[jnp.arange(b)[:, None], page_table].set(valid)
+        mask = mask.at[:, npg - 1].set(False)                  # trash row
+        q2 = q[:, 0].reshape(b, hkv, g, dh)
+        s = jnp.einsum("bkgd,npkd->bkgnp", q2, pool_k)
+        s = s.astype(jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        w = jnp.exp(s - jnp.max(s, axis=(-2, -1), keepdims=True))
+        w = jnp.where(mask[:, None, None], w, 0.0)
+        l = jnp.maximum(jnp.sum(w, axis=(-2, -1), keepdims=True), 1e-30)
+        out = jnp.einsum("bkgnp,npkd->bkgd", (w / l).astype(pool_v.dtype),
+                         pool_v)
+        out = out.reshape(b, 1, h, dh)
+        return out[:, 0] if squeeze else out
+    qpos = (cache_len - sq)[:, None] + jnp.arange(sq)[None, :]  # [B,S]
+    valid = (u >= 0)[:, None] & (u[:, None] <= qpos[:, :, None, None])
     if window is not None:
-        valid &= u > t - window
-    mask = jnp.zeros((b, npg, page_size), bool)
-    mask = mask.at[jnp.arange(b)[:, None], page_table].set(valid)
+        valid &= u[:, None] > qpos[:, :, None, None] - window
+    mask = jnp.zeros((b, npg, page_size, sq), bool)
+    mask = mask.at[jnp.arange(b)[:, None], page_table].set(
+        jnp.moveaxis(valid, 1, -1))
     mask = mask.at[:, npg - 1].set(False)                      # trash row
-    q2 = q.reshape(b, hkv, g, dh)
-    scale = dh ** -0.5
-    s = jnp.einsum("bkgd,npkd->bkgnp", q2, pool_k)
+    mask = jnp.moveaxis(mask, 3, 1)[:, None, None]             # [B,1,1,S,n,P]
+    q2 = q.reshape(b, sq, hkv, g, dh)
+    s = jnp.einsum("bqkgd,npkd->bkgqnp", q2, pool_k)
     s = s.astype(jnp.float32) * scale
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
-    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    s = jnp.where(mask, s, NEG_INF)
     w = jnp.exp(s - jnp.max(s, axis=(-2, -1), keepdims=True))
-    w = jnp.where(mask[:, None, None], w, 0.0)
+    w = jnp.where(mask, w, 0.0)
     l = jnp.maximum(jnp.sum(w, axis=(-2, -1), keepdims=True), 1e-30)
-    out = jnp.einsum("bkgnp,npkd->bkgd", (w / l).astype(pool_v.dtype),
+    out = jnp.einsum("bkgqnp,npkd->bqkgd", (w / l).astype(pool_v.dtype),
                      pool_v)
-    return out.reshape(b, h, dh)
+    return out.reshape(b, sq, h, dh)
 
 
 def paged_attention(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
@@ -92,7 +121,8 @@ def paged_attention(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     interpret: bool = False) -> jax.Array:
-    """Pool-direct decode attention; see module docstring for dispatch."""
+    """Pool-direct decode attention for 1..K+1 query rows per slot
+    (``q`` [B,H,dh] or [B,S,H,dh]); see module docstring for dispatch."""
     if interpret or _on_tpu():
         return paged_decode_attention(
             q, pool_k, pool_v, page_table, cache_len, window=window,

@@ -29,9 +29,13 @@ def paged_attention_ref(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
                         page_table: jax.Array, cache_len: jax.Array, *,
                         window: Optional[int] = None,
                         softcap: Optional[float] = None) -> jax.Array:
-    """q [B,H,dh]; pools [num_pages+1,P,Hkv,dh]; page_table [B,nb];
-    cache_len [B] (incl. current token) -> [B,H,dh]."""
-    b, h, dh = q.shape
+    """q [B,H,dh] or [B,S,H,dh] (S query rows, newest last); pools
+    [num_pages+1,P,Hkv,dh]; page_table [B,nb]; cache_len [B] (incl. the
+    newest query token) -> output shaped like ``q``."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    b, sq, h, dh = q.shape
     npg, page_size, hkv, _ = pool_k.shape
     nb = page_table.shape[1]
     ring = nb * page_size
@@ -42,19 +46,23 @@ def paged_attention_ref(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
     cv = jnp.moveaxis(gv.reshape(b, ring, hkv, dh), 1, 2)
     t = (cache_len - 1)[:, None]
     r = jnp.arange(ring)[None, :]
-    u = t - ((t - r) % ring)
-    valid = u >= 0
+    u = t - ((t - r) % ring)                                    # [B, ring]
+    qpos = (cache_len - sq)[:, None] + jnp.arange(sq)[None, :]  # [B, S]
+    valid = (u >= 0)[:, None, :] & (u[:, None, :] <= qpos[:, :, None])
     if window is not None:
-        valid &= u > t - window
-    valid &= jnp.repeat(page_table != npg - 1, page_size, axis=1)
-    q2 = q.reshape(b, hkv, g, dh)
+        valid &= u[:, None, :] > qpos[:, :, None] - window
+    not_trash = jnp.repeat(page_table != npg - 1, page_size, axis=1)
+    valid &= not_trash[:, None, :]
+    q2 = q.reshape(b, sq, hkv, g, dh)
     scale = dh ** -0.5
-    s = jnp.einsum("bkgd,bksd->bkgs", q2, ck).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgd,bksd->bkgqs", q2, ck).astype(jnp.float32) * scale
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
-    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    mask = valid[:, None, None]                   # [B,1,1,S,ring]
+    s = jnp.where(mask, s, NEG_INF)
     w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
-    w = jnp.where(valid[:, None, None], w, 0.0)
+    w = jnp.where(mask, w, 0.0)
     l = jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
-    out = jnp.einsum("bkgs,bksd->bkgd", (w / l).astype(cv.dtype), cv)
-    return out.reshape(b, h, dh)
+    out = jnp.einsum("bkgqs,bksd->bqkgd", (w / l).astype(cv.dtype), cv)
+    out = out.reshape(b, sq, h, dh)
+    return out[:, 0] if squeeze else out

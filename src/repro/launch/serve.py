@@ -18,6 +18,15 @@ on refcounted shared pages and prefill only their suffix.  The default
 workload sends every request the same prompt head, so the effect shows up
 directly in the printed hit rate / pages summary; ``--no-prefix-sharing``
 restores exclusive page ownership for comparison.
+
+``--spec-draft ngram --spec-k 4`` turns on speculative decoding
+(serve/spec): each fused chunk step drafts K tokens per slot (prompt-
+lookup n-gram drafter, or a reduced draft model when an arch name is
+given), verifies all K+1 positions in one multi-query paged dispatch,
+and commits a variable number via on-device rejection sampling — output
+tokens are identical to the non-speculative engine at temperature 0.
+The summary prints the measured acceptance rate and tokens per verify
+step.
 """
 
 import argparse
@@ -53,6 +62,14 @@ def main() -> None:
                          "forces gather-then-attend (parity debugging), "
                          "'auto' picks the kernel on a probe-passing "
                          "TPU toolchain")
+    ap.add_argument("--spec-draft", default="off",
+                    help="speculative decoding drafter: 'off' (default), "
+                         "'ngram' (prompt-lookup, no second model), or a "
+                         "configs/ arch name served reduced as the draft "
+                         "model (attention-only archs only)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify step (the fused chunk "
+                         "verifies K+1 positions per slot per dispatch)")
     ap.add_argument("--shared-prefix", type=int, default=12,
                     help="length of the prompt head shared by every "
                          "request in the synthetic workload (0 = fully "
@@ -72,14 +89,20 @@ def main() -> None:
     from repro.models import module as m
     from repro.serve.engine import Engine, Request
 
+    from repro.serve.spec import SpecConfig
+
     cfg = reduced(get_config(args.arch))
     params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
+    spec = None
+    if args.spec_draft != "off":
+        spec = SpecConfig(draft=args.spec_draft, k=args.spec_k)
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
                  page_size=args.page_size, num_pages=args.num_pages,
                  prefix_sharing=not args.no_prefix_sharing,
                  paged_kernel={"auto": "auto", "on": True,
                                "off": False}[args.paged_kernel],
+                 spec=spec,
                  temperature=args.temperature, top_k=args.top_k,
                  sync_interval=args.sync_interval)
     if args.warmup:
@@ -114,6 +137,13 @@ def main() -> None:
           f"{ms['dense_vs_paged_capacity_ratio']:.2f} "
           f"decode_attention="
           f"{'pool-direct' if eng.paged_kernel else 'gather'}")
+    ss = eng.spec_stats()
+    if ss["spec"]:
+        print(f"speculative [{ss['drafter']}, k={ss['spec_k']}]: "
+              f"acceptance={ss['acceptance_rate']:.2f} "
+              f"({ss['accepted_tokens']}/{ss['drafted_tokens']} drafts), "
+              f"{ss['tokens_per_step']:.2f} tokens/verify-step over "
+              f"{ss['spec_steps']} steps")
     ps = eng.prefix_stats()
     if ps["prefix_sharing"]:
         print(f"prefix sharing: hit_rate={ps['prefix_hit_rate']:.2f} "

@@ -3,9 +3,10 @@ from repro.models import (attention, layers, mamba2, module, moe, rwkv6,
 from repro.models.transformer import (cache_structure, forward_decode,
                                       forward_dense_logits,
                                       forward_prefill, forward_train,
-                                      model_defs, prepare_decode_cache)
+                                      forward_verify, model_defs,
+                                      prepare_decode_cache)
 
 __all__ = ["attention", "layers", "mamba2", "module", "moe", "rwkv6",
            "transformer", "model_defs", "forward_train", "forward_prefill",
-           "forward_decode", "forward_dense_logits", "cache_structure",
-           "prepare_decode_cache"]
+           "forward_decode", "forward_verify", "forward_dense_logits",
+           "cache_structure", "prepare_decode_cache"]

@@ -174,28 +174,42 @@ def decode_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
                      window: Optional[int] = None,
                      softcap: Optional[float] = None,
                      valid: Optional[jax.Array] = None) -> jax.Array:
-    """q [B,1,H,dh]; cache [B,Hkv,S,dh] (S model-sharded); cache_len counts
-    valid entries *including* the current token.
+    """q [B,Sq,H,dh]; cache [B,Hkv,S,dh] (S model-sharded); cache_len counts
+    valid entries *including* the newest query token.
 
     ``valid`` [B,S] overrides the default position-order mask — the paged
     path passes ``ring_valid`` because its KV rows are in ring order, not
-    absolute order."""
-    b, _, h, dh = q.shape
+    absolute order.  ``Sq > 1`` is the speculative-verify case (several
+    drafted query rows per slot in one dispatch); there ``valid`` must be
+    given per query row as [B,Sq,S], because each drafted query may only
+    attend to cache entries at or before its own position."""
+    b, sq, h, dh = q.shape
     _, hkv, s, _ = ck.shape
     g = h // hkv
-    q2 = q[:, 0].reshape(b, hkv, g, dh)
     scale = dh ** -0.5
-    scores = jnp.einsum("bkgd,bksd->bkgs", q2, ck).astype(jnp.float32) * scale
-    scores = _softcap(scores, softcap)
-    if valid is None:
-        pos = jnp.arange(s)
-        valid = pos[None, :] < cache_len[:, None]      # [B, S]
-        if window is not None:
-            valid &= pos[None, :] >= cache_len[:, None] - window
+    if sq == 1:
+        q2 = q[:, 0].reshape(b, hkv, g, dh)
+        scores = jnp.einsum("bkgd,bksd->bkgs", q2,
+                            ck).astype(jnp.float32) * scale
+        scores = _softcap(scores, softcap)
+        if valid is None:
+            pos = jnp.arange(s)
+            valid = pos[None, :] < cache_len[:, None]      # [B, S]
+            if window is not None:
+                valid &= pos[None, :] >= cache_len[:, None] - window
+        scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)  # GSPMD reduces
+        out = jnp.einsum("bkgs,bksd->bkgd", p, cv)
+        return out.reshape(b, 1, h, dh)
+    assert valid is not None and valid.ndim == 3, \
+        "multi-query decode attention needs a per-query [B,Sq,S] mask"
+    q2 = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bqkgd,bksd->bkgqs", q2, ck).astype(jnp.float32)
+    scores = _softcap(scores * scale, softcap)
     scores = jnp.where(valid[:, None, None], scores, NEG_INF)
-    p = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)  # GSPMD all-reduces
-    out = jnp.einsum("bkgs,bksd->bkgd", p, cv)
-    return out.reshape(b, 1, h, dh)
+    p = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgqs,bksd->bqkgd", p, cv)
+    return out.reshape(b, sq, h, dh)
 
 
 # ---------------------------------------------------------------------------
@@ -229,14 +243,20 @@ def ring_valid(cache_len: jax.Array, ring: int,
 
 
 def paged_ring_blocks(window: Optional[int], max_blocks: int,
-                      page_size: int) -> int:
+                      page_size: int, spec_slack: int = 0) -> int:
     """Logical ring width in pages for a paged attention layer — must match
     ``serve/cache.CacheSpec``'s per-layer ``ring_blocks`` (it does:
     ``ceil(min(max_len, window)/P) == min(ceil(max_len/P), ceil(window/P))``
-    and ``max_blocks == ceil(max_len/P)``)."""
+    and ``max_blocks == ceil(max_len/P)``).
+
+    ``spec_slack`` widens *windowed* rings by the speculative draft length
+    ``K`` (``serve/spec``): a verify step writes up to ``K`` tokens past
+    the newest committed one, and without the slack those writes would
+    ring-wrap onto tokens still inside the window of the earliest query
+    row.  Full-attention rings never wrap, so they take no slack."""
     if window is None:
         return max_blocks
-    return min(max_blocks, -(-window // page_size))
+    return min(max_blocks, -(-(window + spec_slack) // page_size))
 
 
 def page_group_key(ring_blocks: int) -> str:
@@ -297,54 +317,103 @@ def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
                       softcap: Optional[float],
                       paged_kernel: bool = False
                       ) -> Tuple[jax.Array, Dict]:
-    """One-token attention against a block-paged KV pool.
+    """``S``-token attention against a block-paged KV pool (``S == 1`` is
+    the plain decode step; ``S == K+1`` is the speculative verify step).
 
-    cache: {"pk","pv": [num_pages+1, P, Hkv, dh], "pt": [B, max_blocks],
+    cache: {"pk","pv": [num_pages+1, P, Hkv, dh], "pt": [B, ring_blocks],
     optional "wm": [B] bool write mask}.  Writes the new KV through the
-    page table (write-then-attend, so the current token attends to
-    itself), then either gathers the slot's logical ring and masks by
-    ring validity (default), or — with ``paged_kernel=True`` — reads the
-    pool *directly* through ``kernels/paged_attention`` (Pallas page
-    streaming on TPU, pool-wide masked attention elsewhere) so the
-    gathered ``[B, ring, Hkv, dh]`` buffer never exists.  All shapes are
-    static: the compiled decode chunk only indexes the table the host
-    populated at admission.
+    page table (write-then-attend, so every query token attends to
+    itself and the drafted tokens before it), then either gathers the
+    slot's logical ring and masks by ring validity (default), or — with
+    ``paged_kernel=True`` — reads the pool *directly* through
+    ``kernels/paged_attention`` (Pallas page streaming on TPU, pool-wide
+    masked attention elsewhere) so the gathered ``[B, ring, Hkv, dh]``
+    buffer never exists.  All shapes are static: the compiled decode
+    chunk only indexes the table the host populated at admission.
 
     ``wm`` (the engine passes its ``active`` slot mask) redirects the
     writes of finished/idle slots to the trash page.  A slot that
     finishes mid-chunk keeps "decoding" until the next drain with its
     position still advancing — without the mask those dead writes would
     ring-wrap past the table into real pages, which under prefix sharing
-    may be pages other slots (or the radix index) still read."""
+    may be pages other slots (or the radix index) still read.
+
+    Multi-token steps (``S > 1``) additionally trash-redirect any write
+    whose absolute position falls outside the ring *unless the ring
+    legitimately wraps* (``ring >= window + S - 1`` — the spec-slack
+    sizing from ``serve/cache.CacheSpec``): a full-attention ring never
+    wraps, so a draft written past the table must be discarded rather
+    than alias block 0 (which may be a shared prefix page), and an
+    under-sized windowed ring must likewise refuse the wrap because it
+    would overwrite tokens still inside an earlier query's window.
+    Rollback of rejected drafts is free: the accept step simply does not
+    advance ``len`` past them, the ring-validity mask hides positions
+    beyond ``len``, and the next step's writes land on the same (page,
+    offset) cells."""
     pool_k, pool_v, pt = cache["pk"], cache["pv"], cache["pt"]
-    b = q.shape[0]
+    b, s = q.shape[0], q.shape[1]
     page_size = pool_k.shape[1]
-    blocks = paged_ring_blocks(window, pt.shape[1], page_size)
+    if s == 1:
+        blocks = paged_ring_blocks(window, pt.shape[1], page_size)
+        ring = blocks * page_size
+        t = cache_len - 1                               # [B] current position
+        lb = (t // page_size) % blocks                  # logical block
+        phys = jnp.take_along_axis(pt[:, :blocks], lb[:, None], axis=1)[:, 0]
+        wm = cache.get("wm")
+        if wm is not None:
+            phys = jnp.where(wm, phys, pool_k.shape[0] - 1)   # dead -> trash
+        off = t % page_size
+        k_new = kk[:, 0]                                # [B, Hkv, dh]
+        v_new = vv[:, 0]
+        # distinct live slots own every page they write (host invariant:
+        # shared pages go copy-on-write at admission); idle/dead slots map
+        # to the shared trash page where last-write-wins races are harmless
+        pool_k = pool_k.at[phys, off].set(k_new.astype(pool_k.dtype))
+        pool_v = pool_v.at[phys, off].set(v_new.astype(pool_v.dtype))
+        if paged_kernel:
+            from repro.kernels.paged_attention import paged_attention
+            out = paged_attention(q[:, 0], pool_k, pool_v, pt[:, :blocks],
+                                  cache_len, window=window, softcap=softcap)
+            return out[:, None], {"pk": pool_k, "pv": pool_v}
+        gk = pool_k[pt[:, :blocks]]        # [B, blocks, P, Hkv, dh]
+        gv = pool_v[pt[:, :blocks]]
+        ck = jnp.moveaxis(gk.reshape(b, ring, *gk.shape[3:]), 1, 2)
+        cv = jnp.moveaxis(gv.reshape(b, ring, *gv.shape[3:]), 1, 2)
+        valid = ring_valid(cache_len, ring, window)
+        out = decode_attention(q, ck, cv, cache_len, softcap=softcap,
+                               valid=valid)
+        return out, {"pk": pool_k, "pv": pool_v}
+    # ---- multi-token verify step (speculative decoding); the table is
+    # the layer's own group table, so its width IS the ring width
+    blocks = pt.shape[1]
     ring = blocks * page_size
-    t = cache_len - 1                                   # [B] current position
-    lb = (t // page_size) % blocks                      # logical block
-    phys = jnp.take_along_axis(pt[:, :blocks], lb[:, None], axis=1)[:, 0]
+    trash = pool_k.shape[0] - 1
+    g_pos = (cache_len - s)[:, None] + jnp.arange(s)[None, :]   # [B,S] abs
+    lb = (g_pos // page_size) % blocks
+    phys = jnp.take_along_axis(pt, lb, axis=1)                  # [B,S]
+    ok = jnp.ones(g_pos.shape, bool)
+    if not (window is not None and ring >= window + s - 1):
+        ok &= g_pos < ring              # non-wrapping ring: no write aliasing
     wm = cache.get("wm")
     if wm is not None:
-        phys = jnp.where(wm, phys, pool_k.shape[0] - 1)   # dead -> trash
-    off = t % page_size
-    k_new = kk[:, 0]                                    # [B, Hkv, dh]
-    v_new = vv[:, 0]
-    # distinct live slots own every page they write (host invariant:
-    # shared pages go copy-on-write at admission); idle/dead slots map to
-    # the shared trash page where last-write-wins races are harmless
-    pool_k = pool_k.at[phys, off].set(k_new.astype(pool_k.dtype))
-    pool_v = pool_v.at[phys, off].set(v_new.astype(pool_v.dtype))
+        ok &= wm[:, None]
+    phys = jnp.where(ok, phys, trash)
+    off = g_pos % page_size
+    pool_k = pool_k.at[phys, off].set(kk.astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, off].set(vv.astype(pool_v.dtype))
     if paged_kernel:
         from repro.kernels.paged_attention import paged_attention
-        out = paged_attention(q[:, 0], pool_k, pool_v, pt[:, :blocks],
-                              cache_len, window=window, softcap=softcap)
-        return out[:, None], {"pk": pool_k, "pv": pool_v}
-    gk = pool_k[pt[:, :blocks]]        # [B, blocks, P, Hkv, dh]
-    gv = pool_v[pt[:, :blocks]]
+        out = paged_attention(q, pool_k, pool_v, pt, cache_len,
+                              window=window, softcap=softcap)
+        return out, {"pk": pool_k, "pv": pool_v}
+    gk = pool_k[pt]                    # [B, blocks, P, Hkv, dh]
+    gv = pool_v[pt]
     ck = jnp.moveaxis(gk.reshape(b, ring, *gk.shape[3:]), 1, 2)
     cv = jnp.moveaxis(gv.reshape(b, ring, *gv.shape[3:]), 1, 2)
-    valid = ring_valid(cache_len, ring, window)
+    u = ring_token_positions(cache_len, ring)                   # [B, ring]
+    valid = (u >= 0)[:, None, :] & (u[:, None, :] <= g_pos[:, :, None])
+    if window is not None:
+        valid &= u[:, None, :] > g_pos[:, :, None] - window
     out = decode_attention(q, ck, cv, cache_len, softcap=softcap,
                            valid=valid)
     return out, {"pk": pool_k, "pv": pool_v}
@@ -435,6 +504,10 @@ def apply(params: Dict, x: jax.Array, *, cfg: ModelConfig,
         return sh.shard(y, sh.BATCH, sh.SEQ, sh.EMBED), new_cache
     if mode == "decode":
         assert cache is not None and cache_len is not None
+        if x.shape[1] != 1:
+            raise NotImplementedError(
+                "multi-token decode (speculative verify) needs a paged "
+                "cache; the dense ring-buffer path is single-token only")
         k_new = jnp.swapaxes(kk, 1, 2)  # [B,Hkv,1,dh]
         v_new = jnp.swapaxes(vv, 1, 2)
         size = cache["k"].shape[2]

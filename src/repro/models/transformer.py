@@ -363,6 +363,31 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
     return lg[:, 0], cache
 
 
+def _thread_page_tables(cfg: ModelConfig, cache: Dict,
+                        write_mask: Optional[jax.Array],
+                        spec_slack: int = 0) -> List:
+    """Thread each paged layer's pool-group page table (keyed by ring
+    width — ``attention.page_group_key``) and the optional write mask
+    into its cache view.  ``spec_slack`` must match the ``spec_tokens``
+    the ``serve/cache.CacheSpec`` was built with, so the ring width
+    derived here agrees with the width the splice used."""
+    page_tables = cache.get("page_tables")
+    layer_caches = cache["layers"]
+    if not page_tables:
+        return layer_caches
+    widest = max(t.shape[1] for t in page_tables.values())
+    threaded = []
+    for block, c in zip(cfg.blocks, layer_caches):
+        if c is not None and "pk" in c:
+            ring = attention.paged_ring_blocks(
+                block.window, widest, c["pk"].shape[1], spec_slack)
+            c = dict(c, pt=page_tables[attention.page_group_key(ring)])
+            if write_mask is not None:
+                c["wm"] = write_mask
+        threaded.append(c)
+    return threaded
+
+
 def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
                    cache: Dict, write_mask: Optional[jax.Array] = None,
                    paged_kernel: bool = False
@@ -391,20 +416,7 @@ def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
     b = tokens.shape[0]
     cache_len = cache["len"] + 1         # including current token
     positions = cache["len"][:, None]    # 0-based position of current token
-    page_tables = cache.get("page_tables")
-    layer_caches = cache["layers"]
-    if page_tables:
-        widest = max(t.shape[1] for t in page_tables.values())
-        threaded = []
-        for block, c in zip(cfg.blocks, layer_caches):
-            if c is not None and "pk" in c:
-                ring = attention.paged_ring_blocks(
-                    block.window, widest, c["pk"].shape[1])
-                c = dict(c, pt=page_tables[attention.page_group_key(ring)])
-                if write_mask is not None:
-                    c["wm"] = write_mask
-            threaded.append(c)
-        layer_caches = threaded
+    layer_caches = _thread_page_tables(cfg, cache, write_mask)
     h = layers.embed(params["embed"], cfg, tokens)
     h, new_caches, _ = _decoder(params, cfg, h, mode="decode",
                                 positions=positions, caches=layer_caches,
@@ -414,9 +426,48 @@ def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
     lg = layers.logits(params["embed"], cfg, h)
     new_cache = {"layers": new_caches, "enc_kv": cache.get("enc_kv"),
                  "len": cache_len}
+    page_tables = cache.get("page_tables")
     if page_tables is not None:   # {} for stateless archs: keep structure
         new_cache["page_tables"] = page_tables
     return lg[:, 0], new_cache
+
+
+def forward_verify(params, cfg: ModelConfig, tokens: jax.Array,
+                   cache: Dict, write_mask: Optional[jax.Array] = None,
+                   paged_kernel: bool = False, spec_slack: int = 0
+                   ) -> Tuple[jax.Array, Dict]:
+    """Speculative verify: run the target model on ``S = K+1`` tokens per
+    slot — the current token plus ``K`` drafted continuations — in ONE
+    dispatch.  tokens [B,S]; token ``i`` sits at absolute position
+    ``cache["len"] + i`` and its KV is written through the page table
+    (write-then-attend with a per-query causal ring mask, see
+    ``models/attention.paged_decode_step``).  Returns logits for *all*
+    ``S`` positions ([B,S,V] — logits[i] is the target distribution of
+    the token after input ``i``) and the cache with ``len`` left
+    UNCHANGED: the accept/reject step (``serve/sampling.spec_accept``)
+    owns the length update, which is also how rejected drafts roll back
+    — positions past the accepted length are invisible to the ring
+    validity mask and are simply overwritten by later steps.
+
+    Only paged, attention-only stacks support this (``serve/spec``
+    gates): recurrent STATE layers cannot rewind a multi-token state
+    update without materializing every intermediate state.
+
+    ``spec_slack`` must equal the draft length ``K`` the serving
+    ``CacheSpec`` was built with (windowed rings carry ``K`` tokens of
+    slack so in-flight drafts never wrap onto in-window history)."""
+    b, s = tokens.shape
+    cache_len = cache["len"] + s         # including all s query tokens
+    positions = cache["len"][:, None] + jnp.arange(s)[None, :]
+    layer_caches = _thread_page_tables(cfg, cache, write_mask, spec_slack)
+    h = layers.embed(params["embed"], cfg, tokens)
+    h, new_caches, _ = _decoder(params, cfg, h, mode="decode",
+                                positions=positions, caches=layer_caches,
+                                cache_len=cache_len,
+                                enc_kv_list=cache.get("enc_kv"),
+                                q_chunk=None, paged_kernel=paged_kernel)
+    lg = layers.logits(params["embed"], cfg, h)
+    return lg, dict(cache, layers=new_caches)
 
 
 def prepare_decode_cache(cfg: ModelConfig, cache: Dict, max_len: int) -> Dict:

@@ -1,9 +1,10 @@
-from repro.serve import cache, engine, reference, sampling, scheduler
+from repro.serve import cache, engine, reference, sampling, scheduler, spec
 from repro.serve.cache import CacheSpec
 from repro.serve.engine import Engine, Request
 from repro.serve.reference import ReferenceEngine
 from repro.serve.scheduler import PagePool, PagePoolExhausted, Scheduler
+from repro.serve.spec import SpecConfig
 
-__all__ = ["cache", "engine", "reference", "sampling", "scheduler",
+__all__ = ["cache", "engine", "reference", "sampling", "scheduler", "spec",
            "CacheSpec", "Engine", "Request", "ReferenceEngine",
-           "PagePool", "PagePoolExhausted", "Scheduler"]
+           "PagePool", "PagePoolExhausted", "Scheduler", "SpecConfig"]

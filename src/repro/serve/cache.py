@@ -115,12 +115,17 @@ class CacheSpec:
     num_pages: int        # widest (full-attention) group's page budget
     layers: List[Optional[LayerCacheSpec]]
     groups: List[PoolGroup]
+    # speculative draft length K: windowed rings carry K tokens of slack
+    # so an in-flight verify step can never wrap a draft write onto a
+    # token still inside an earlier query's window (serve/spec)
+    spec_tokens: int = 0
 
     # ------------------------------------------------------------ factory
     @classmethod
     def from_config(cls, cfg: ModelConfig, slots: int, max_len: int, *,
                     page_size: int = 8,
-                    num_pages: Optional[int] = None) -> "CacheSpec":
+                    num_pages: Optional[int] = None,
+                    spec_tokens: int = 0) -> "CacheSpec":
         if cfg.cross_attention:
             raise ValueError(
                 f"{cfg.name}: cross-attention cache structures (enc_kv) are "
@@ -141,6 +146,14 @@ class CacheSpec:
         for block in cfg.blocks:
             if block.mixer in (ATTN, SHARED_ATTN):
                 cap = min(max_len, block.window or max_len)
+                if block.window is not None and spec_tokens:
+                    # speculative slack: a verify step writes up to K
+                    # drafted tokens past the newest committed one; the
+                    # ring must keep window + K tokens so those writes
+                    # never clobber in-window history (capped at max_len
+                    # — a ring that large never wraps within budget and
+                    # overlong draft writes are trash-redirected instead)
+                    cap = min(max_len, block.window + spec_tokens)
                 if page_size > cap:
                     raise ValueError(
                         f"page_size={page_size} exceeds a paged layer's "
@@ -186,9 +199,9 @@ class CacheSpec:
                   for ls in layers]
         spec = cls(cfg=cfg, slots=slots, max_len=max_len,
                    page_size=page_size, num_pages=num_pages, layers=layers,
-                   groups=groups)
+                   groups=groups, spec_tokens=spec_tokens)
         # the compiled decode path re-derives each layer's ring width from
-        # (window, widest table width, page size) — attention.
+        # (window, widest table width, page size, spec slack) — attention.
         # paged_ring_blocks.  Verify the two formulas agree HERE so any
         # future layout change fails loudly at spec construction instead
         # of silently spliced and decoded with different ring widths
@@ -196,7 +209,7 @@ class CacheSpec:
         for block, ls in zip(cfg.blocks, spec.layers):
             if ls is not None and ls.kind == PAGED_KV:
                 derived = attention.paged_ring_blocks(
-                    block.window, spec.max_blocks, page_size)
+                    block.window, spec.max_blocks, page_size, spec_tokens)
                 assert derived == ls.ring_blocks, (
                     block.window, derived, ls.ring_blocks)
         return spec
@@ -470,7 +483,8 @@ def _splice_state_leaf(big: Optional[jax.Array], small: Optional[jax.Array],
 
 def admit_cache(spec: CacheSpec, cache: Dict, one_cache: Dict,
                 slot: jax.Array, start: jax.Array, plen: jax.Array,
-                rows: Dict[str, jax.Array]) -> Dict:
+                rows: Dict[str, jax.Array],
+                enabled: Optional[jax.Array] = None) -> Dict:
     """Jit-traceable admission: splice a batch-1 prefill cache into
     ``slot`` starting at global token position ``start`` (0 for a full
     prefill; the prefix-match length for a suffix prefill whose first
@@ -479,8 +493,18 @@ def admit_cache(spec: CacheSpec, cache: Dict, one_cache: Dict,
     writes past the reservation are discarded, never aliased into a
     neighbour's pages).  ``plen`` is the request's full logical prompt
     length — the slot's ``len`` after admission regardless of how much
-    prefill was skipped."""
+    prefill was skipped.
+
+    ``enabled`` (scalar bool, optional) no-ops the whole admission when
+    False: pool writes are redirected to the trash pages (``valid_len``
+    forced to 0) and the table/len/state updates keep their prior values.
+    The batched multi-slot admission path uses it to pad a chunk
+    boundary's admissions to a fixed count, so ONE splice executable
+    serves any number of simultaneous admissions.  Extra cache keys (the
+    speculative draft cache) pass through untouched."""
     valid = plen - start
+    if enabled is not None:
+        valid = jnp.where(enabled, valid, 0)
     new_layers: List[Optional[Dict]] = []
     for ls, big, small in zip(spec.layers, cache["layers"],
                               one_cache["layers"]):
@@ -494,17 +518,33 @@ def admit_cache(spec: CacheSpec, cache: Dict, one_cache: Dict,
                 spec.page_size, group.trash_page)
             new_layers.append({"pk": pk, "pv": pv})
         else:
-            new_layers.append({
-                k: _splice_state_leaf(big[k], small[k], slot)
-                for k in big})
-    page_tables = {
-        k: jax.lax.dynamic_update_slice(
-            cache["page_tables"][k], rows[k][None].astype(jnp.int32),
-            (slot, 0))
-        for k in cache["page_tables"]}
+            entry = {}
+            for k in big:
+                small_k = small[k]
+                if enabled is not None and big[k] is not None \
+                        and small_k is not None:
+                    cur = jax.lax.dynamic_slice_in_dim(big[k], slot, 1, 0)
+                    small_k = jnp.where(enabled,
+                                        small_k.astype(big[k].dtype), cur)
+                entry[k] = _splice_state_leaf(big[k], small_k, slot)
+            new_layers.append(entry)
+    page_tables = {}
+    for k in cache["page_tables"]:
+        row = rows[k][None].astype(jnp.int32)
+        if enabled is not None:
+            cur = jax.lax.dynamic_slice(
+                cache["page_tables"][k], (slot, 0), (1, row.shape[1]))
+            row = jnp.where(enabled, row, cur)
+        page_tables[k] = jax.lax.dynamic_update_slice(
+            cache["page_tables"][k], row, (slot, 0))
+    new_len = plen[None].astype(jnp.int32)
+    if enabled is not None:
+        cur = jax.lax.dynamic_slice_in_dim(cache["len"], slot, 1, 0)
+        new_len = jnp.where(enabled, new_len, cur)
     length = jax.lax.dynamic_update_slice_in_dim(
-        cache["len"], plen[None].astype(jnp.int32), slot, axis=0)
-    return {"layers": new_layers, "page_tables": page_tables, "len": length}
+        cache["len"], new_len, slot, axis=0)
+    return dict(cache, layers=new_layers, page_tables=page_tables,
+                len=length)
 
 
 def copy_shared_page(spec: CacheSpec, cache: Dict, group_key: str,

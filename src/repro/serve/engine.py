@@ -11,11 +11,17 @@ overhead has exactly one owner:
   batching: slots free and re-admit at chunk boundaries without
   recompiling anything.
 * **Executor** (``Executor`` below) — the compiled layer: bucketed
-  prefill (full and shared-prefix *suffix* variants), the page-granular
-  admission splice, the copy-on-write page duplication, and the fused
-  decode chunk (``sync_interval`` decode steps + on-device sampling +
-  slot bookkeeping in ONE ``lax.scan`` executable, zero host<->device
-  syncs inside).
+  prefill (full and shared-prefix *suffix* variants; overlong prompts
+  run as several suffix segments), the batched page-granular admission
+  splice (every admission a chunk boundary produces lands in ONE
+  dispatch), the copy-on-write page duplication, and the fused decode
+  chunk (``sync_interval`` decode steps + on-device sampling + slot
+  bookkeeping in ONE ``lax.scan`` executable, zero host<->device syncs
+  inside).  With ``Engine(spec=...)`` each chunk step is a speculative
+  draft/verify/accept round (``serve/spec``, docs/speculative.md):
+  a drafter proposes K tokens per slot, one multi-query dispatch
+  verifies K+1 positions, and on-device rejection sampling commits a
+  variable number — token-identical at temperature 0.
 * **Driver** (``Engine``) — glues them: one batched device->host token
   drain per chunk, finish reporting, admission application.
 
@@ -44,13 +50,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import forward_decode, forward_prefill
+from repro.models import (forward_decode, forward_prefill, forward_verify,
+                          model_defs)
+from repro.models import module as m
 from repro.parallel import sharding as sh
 from repro.serve import cache as cache_mod
 from repro.serve import sampling
 from repro.serve.cache import CacheSpec, empty_batch_cache  # noqa: F401
 from repro.serve.scheduler import (Admission, PagePoolExhausted,  # noqa: F401
                                    Request, Scheduler)
+from repro.serve.spec import (ModelDrafter, NGramDrafter, SpecConfig,
+                              check_spec_capable)
 
 
 def _next_pow2(n: int) -> int:
@@ -61,31 +71,52 @@ class Executor:
     """Compiled serving layer: every function here is a jit with stable
     shapes (one executable per prefill bucket — plus one per (suffix
     bucket, ctx-block bucket) pair on the prefix-sharing path; exactly
-    one decode chunk).  The cache and slot state are donated through the
-    chunk and the splice on backends that implement donation (not CPU)."""
+    one batched admission splice; exactly one decode chunk).  The cache
+    and slot state are donated through the chunk and the splice on
+    backends that implement donation (not CPU).
+
+    With a speculative config (``spec_cfg`` + ``drafter``) the fused
+    chunk becomes ``sync_interval`` draft/verify/accept steps: the
+    drafter proposes ``K`` tokens per slot on device, the target model
+    verifies all ``K+1`` positions in one multi-query paged dispatch
+    (``models/transformer.forward_verify``), and the jitted rejection
+    sampler (``serve/sampling.spec_accept``) commits a variable number
+    of tokens per slot per step — still zero host syncs and one decode
+    executable."""
 
     def __init__(self, cfg: ModelConfig, spec: CacheSpec, *, top_k: int,
                  sync_interval: int, donate: bool,
                  rules: Optional[sh.Rules] = None,
-                 paged_kernel: bool = False):
+                 paged_kernel: bool = False,
+                 spec_cfg: Optional[SpecConfig] = None,
+                 drafter=None, hist_cap: int = 0):
         self.cfg = cfg
         self.spec = spec
         self.top_k = int(top_k)
         self.sync_interval = int(sync_interval)
         self.paged_kernel = bool(paged_kernel)
+        self.spec_cfg = spec_cfg
+        self.drafter = drafter
+        self.hist_cap = int(hist_cap)
         self._rules = rules
-        self._prefill_fn = jax.jit(self._prefill_impl)
+        self._prefill_fn = jax.jit(self._prefill_impl, static_argnums=(5,))
         # suffix prefill READS the live pools (shared-prefix gather), so
         # its cache argument is never donated
-        self._suffix_fn = jax.jit(self._prefill_suffix_impl)
+        self._suffix_fn = jax.jit(self._prefill_suffix_impl,
+                                  static_argnums=(8,))
+        self._draft_prefill_fn = jax.jit(self._draft_prefill_impl,
+                                         static_argnums=(3,))
         if donate:
             self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(0, 1))
-            self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1, 2))
+            self._splice_fn = jax.jit(self._splice_impl,
+                                      donate_argnums=(0,))
+            self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(2, 3))
             self._free_fn = jax.jit(self._free_impl, donate_argnums=(0,))
             self._copy_fn = jax.jit(self._copy_impl, donate_argnums=(0,),
                                     static_argnums=(3,))
         else:
             self._admit_fn = jax.jit(self._admit_impl)
+            self._splice_fn = jax.jit(self._splice_impl)
             self._chunk_fn = jax.jit(self._chunk_impl)
             self._free_fn = jax.jit(self._free_impl)
             self._copy_fn = jax.jit(self._copy_impl, static_argnums=(3,))
@@ -98,10 +129,38 @@ class Executor:
         return sh.axis_rules(self._rules)
 
     # ------------------------------------------------------ impls (traced)
-    def _prefill_impl(self, params, tokens, length, key, temp):
+    @staticmethod
+    def _pad_kv(entry, pad_to: int):
+        """Pad one {k, v} KV entry's seq axis (2) to ``pad_to``."""
+        e = dict(entry)
+        for k in ("k", "v"):
+            pad = pad_to - e[k].shape[2]
+            if pad > 0:
+                cfgp = [(0, 0)] * e[k].ndim
+                cfgp[2] = (0, pad)
+                e[k] = jnp.pad(e[k], cfgp)
+        return e
+
+    def _pad_prefill_cache(self, cache, pad_to: int):
+        """Pad every attention-KV seq axis to ``pad_to`` inside the
+        prefill executable, so admission sees ONE shape whatever bucket
+        produced the cache — that is what lets a chunk boundary's
+        admissions share a single batched splice executable."""
+        layers = []
+        for ls, entry in zip(self.spec.layers, cache["layers"]):
+            if ls is not None and ls.kind == cache_mod.PAGED_KV \
+                    and entry is not None and "k" in entry:
+                layers.append(self._pad_kv(entry, pad_to))
+            else:
+                layers.append(entry)
+        return dict(cache, layers=layers)
+
+    def _prefill_impl(self, params, tokens, length, key, temp, pad_to):
         """Padded prefill + on-device first-token sampling.
 
-        tokens [1, bucket], length [1].  One compile per bucket shape."""
+        tokens [1, bucket], length [1].  One compile per bucket shape;
+        the returned cache is padded to ``pad_to`` (the largest bucket)
+        so every bucket feeds the same admission executable."""
         batch = {"tokens": tokens}
         if self.cfg.frontend:
             k = "frames" if self.cfg.family == "audio" else "frontend"
@@ -111,64 +170,159 @@ class Executor:
                                         length=length)
         tok = sampling.sample(logits, key, temperature=temp,
                               top_k=self.top_k)
-        return tok, cache
+        return tok, self._pad_prefill_cache(cache, pad_to)
 
     def _prefill_suffix_impl(self, params, tokens, length, off, ctx_row,
-                             layer_pools, key, temp):
+                             layer_pools, key, temp, pad_to):
         """Shared-prefix suffix prefill: tokens [1, bucket] hold only the
         un-matched prompt tail at absolute positions ``off + i``; the
         matched prefix is attended through the pool pages named in
         ``ctx_row`` (the new slot's own table row — shared pages plus any
         copy-on-write duplicate) without being recomputed.  One compile
-        per (suffix bucket, ctx-block bucket) shape pair."""
+        per (suffix bucket, ctx-block bucket) shape pair.  Also the
+        chunked-prefill workhorse: a prompt longer than the largest
+        bucket runs as several suffix calls, each attending to the pages
+        the previous segments spliced."""
         ctx = {"off": off, "row": ctx_row, "layers": layer_pools}
         logits, cache = forward_prefill(params, self.cfg,
                                         {"tokens": tokens},
                                         length=length, ctx=ctx)
         tok = sampling.sample(logits, key, temperature=temp,
                               top_k=self.top_k)
-        return tok, cache
+        return tok, self._pad_prefill_cache(cache, pad_to)
 
-    def _admit_impl(self, cache, state, one_cache, slot, start, plen,
-                    rows, first_tok, max_new, eos, temp, active):
-        """Jitted admission: page-granular splice of the (full or suffix)
-        prefill cache into ``slot`` from token offset ``start``
-        (serve/cache.admit_cache) + device-side bookkeeping init.  One
-        compile per prefill bucket; everything else is traced."""
-        new_cache = cache_mod.admit_cache(self.spec, cache, one_cache,
-                                          slot, start, plen, rows)
+    def _draft_prefill_impl(self, draft_params, tokens, length, pad_to):
+        """Draft-model prefill for the model drafter: same bucketed
+        tokens, dense KV out (padded to ``pad_to``), logits discarded —
+        the draft's first proposal comes from its decode step."""
+        _, cache = forward_prefill(draft_params, self.drafter.cfg,
+                                   {"tokens": tokens}, length=length)
+        return [self._pad_kv(entry, pad_to) for entry in cache["layers"]]
+
+    def _splice_draft(self, draft_layers, one_layers, slot, enabled):
+        """Write a batch-1 draft prefill into row ``slot`` of the dense
+        draft cache (positions 0..n-1; the pad tail beyond the prompt is
+        overwritten by later draft decode writes)."""
+        out = []
+        for big, small in zip(draft_layers, one_layers):
+            e = {}
+            for k in ("k", "v"):
+                b_, s_ = big[k], small[k]
+                n = min(s_.shape[2], b_.shape[2])
+                s_ = s_[:, :, :n]
+                cur = jax.lax.dynamic_slice(
+                    b_, (slot, 0, 0, 0), (1,) + b_.shape[1:])[:, :, :n]
+                s_ = jnp.where(enabled, s_.astype(b_.dtype), cur)
+                e[k] = jax.lax.dynamic_update_slice(b_, s_,
+                                                    (slot, 0, 0, 0))
+            out.append(e)
+        return out
+
+    def _admit_impl(self, cache, state, one_caches, draft_caches, slots_v,
+                    starts, plens, rows, first_toks, max_news, eoss,
+                    temps, valids, hist_toks):
+        """Batched jitted admission: ONE splice dispatch applies every
+        admission a chunk boundary produced.  All per-admission operands
+        are padded to ``spec.slots`` entries (``valids`` masks the
+        padding — a disabled entry's pool writes land on trash pages and
+        its table/len/state keep their prior values), and every prefill
+        cache arrives padded to the largest bucket, so the executable
+        count stays at exactly 1 however many slots fill at once."""
         st = dict(state)
-        st["tokens"] = state["tokens"].at[slot].set(first_tok)
-        st["out_len"] = state["out_len"].at[slot].set(1)
-        st["max_new"] = state["max_new"].at[slot].set(max_new)
-        st["eos"] = state["eos"].at[slot].set(eos)
-        st["temp"] = state["temp"].at[slot].set(temp)
-        st["active"] = state["active"].at[slot].set(active)
-        return new_cache, st
+        for i in range(self.spec.slots):
+            sl = slots_v[i]
+            en = valids[i]
+            cache = cache_mod.admit_cache(
+                self.spec, cache, one_caches[i], sl, starts[i], plens[i],
+                {k: rows[k][i] for k in rows}, enabled=en)
+            if draft_caches is not None:
+                cache["draft"] = self._splice_draft(
+                    cache["draft"], draft_caches[i], sl, en)
 
-    def _chunk_impl(self, params, cache, state):
+            def setv(vec, new):
+                return vec.at[sl].set(jnp.where(en, new, vec[sl]))
+
+            st["tokens"] = setv(st["tokens"], first_toks[i][0])
+            st["out_len"] = setv(st["out_len"], 1)
+            st["max_new"] = setv(st["max_new"], max_news[i])
+            st["eos"] = setv(st["eos"], eoss[i])
+            st["temp"] = setv(st["temp"], temps[i])
+            st["active"] = setv(st["active"], True)
+            if hist_toks is not None:
+                cap = self.hist_cap
+                row = jnp.where(jnp.arange(cap) < plens[i], hist_toks[i], 0)
+                row = jnp.concatenate(
+                    [row, jnp.zeros((1,), jnp.int32)])
+                row = row.at[jnp.minimum(plens[i], cap)].set(
+                    first_toks[i][0])
+                cur = jax.lax.dynamic_slice(st["hist"], (sl, 0),
+                                            (1, cap + 1))
+                st["hist"] = jax.lax.dynamic_update_slice(
+                    st["hist"], jnp.where(en, row[None], cur), (sl, 0))
+                st["hist_len"] = setv(st["hist_len"], plens[i] + 1)
+        return cache, st
+
+    def _splice_impl(self, cache, one_cache, slot, start, plen, rows):
+        """Cache-only splice for intermediate chunked-prefill segments:
+        writes segment KV through the slot's pages at token offset
+        ``start`` without touching slot bookkeeping (the final segment
+        goes through the batched admission)."""
+        return cache_mod.admit_cache(self.spec, cache, one_cache, slot,
+                                     start, plen, rows)
+
+    def _chunk_impl(self, params, draft_params, cache, state):
         """``sync_interval`` fused decode steps: forward (with paged KV
         lookup) + sample + slot bookkeeping, all on device.  Returns the
         [T, slots] token history (-1 where a slot was idle) — the only
-        thing the host ever reads."""
+        thing the host ever reads.  With speculation each of the ``T``
+        steps is a draft/verify/accept round committing up to ``K+1``
+        tokens per slot, and the history is [T*(K+1), slots]."""
+        if self.spec_cfg is None:
+            def body(carry, _):
+                cache, state = carry
+                # active as write mask: a finished slot's dead-tail steps
+                # must not wrap KV writes into pages now shared with other
+                # slots or the radix prefix index
+                logits, cache = forward_decode(
+                    params, self.cfg, state["tokens"][:, None], cache,
+                    write_mask=state["active"],
+                    paged_kernel=self.paged_kernel)
+                cache.pop("enc_kv", None)   # decoder-only: keep structure
+                key, sub = jax.random.split(state["key"])
+                nxt = sampling.sample(logits, sub,
+                                      temperature=state["temp"],
+                                      top_k=self.top_k)
+                state, emitted = sampling.decode_update(state, nxt, key)
+                return (cache, state), emitted
+
+            (cache, state), toks = jax.lax.scan(
+                body, (cache, state), None, length=self.sync_interval)
+            return toks, cache, state
+
         def body(carry, _):
             cache, state = carry
-            # active as write mask: a finished slot's dead-tail steps must
-            # not wrap KV writes into pages now shared with other slots
-            # or the radix prefix index
-            logits, cache = forward_decode(
-                params, self.cfg, state["tokens"][:, None], cache,
+            kd, ka, knext = jax.random.split(state["key"], 3)
+            drafts, qprobs, cache = self.drafter.propose(
+                draft_params, cache, state, kd, self.top_k)
+            toks = jnp.concatenate([state["tokens"][:, None], drafts],
+                                   axis=1)
+            logits, cache = forward_verify(
+                params, self.cfg, toks, cache,
                 write_mask=state["active"],
-                paged_kernel=self.paged_kernel)
-            cache.pop("enc_kv", None)   # decoder-only: keep carry structure
-            key, sub = jax.random.split(state["key"])
-            nxt = sampling.sample(logits, sub, temperature=state["temp"],
-                                  top_k=self.top_k)
-            state, emitted = sampling.decode_update(state, nxt, key)
+                paged_kernel=self.paged_kernel,
+                spec_slack=self.spec_cfg.k)
+            cache.pop("enc_kv", None)
+            cand, n_acc = sampling.spec_accept(
+                logits, drafts, qprobs, state["temp"], self.top_k, ka)
+            state, emitted, n_emit = sampling.spec_update(
+                state, cand, n_acc, knext)
+            cache = dict(cache, len=cache["len"] + n_emit)
             return (cache, state), emitted
 
         (cache, state), toks = jax.lax.scan(
             body, (cache, state), None, length=self.sync_interval)
+        # [T, slots, K+1] -> time-major [T*(K+1), slots] for the drain
+        toks = jnp.swapaxes(toks, 1, 2).reshape(-1, toks.shape[1])
         return toks, cache, state
 
     def _free_impl(self, cache, slot):
@@ -181,27 +335,38 @@ class Executor:
                                           src, dst)
 
     # -------------------------------------------------------- public calls
-    def prefill(self, params, tokens, length, key, temp):
+    def prefill(self, params, tokens, length, key, temp, pad_to):
         with self._ctx():
-            return self._prefill_fn(params, tokens, length, key, temp)
+            return self._prefill_fn(params, tokens, length, key, temp,
+                                    pad_to)
 
     def prefill_suffix(self, params, tokens, length, off, ctx_row,
-                       layer_pools, key, temp):
+                       layer_pools, key, temp, pad_to):
         with self._ctx():
             return self._suffix_fn(params, tokens, length, off, ctx_row,
-                                   layer_pools, key, temp)
+                                   layer_pools, key, temp, pad_to)
+
+    def draft_prefill(self, draft_params, tokens, length, pad_to):
+        with self._ctx():
+            return self._draft_prefill_fn(draft_params, tokens, length,
+                                          pad_to)
 
     def admit(self, cache, state, *args):
         with self._ctx():
             return self._admit_fn(cache, state, *args)
 
+    def splice(self, cache, one_cache, slot, start, plen, rows):
+        with self._ctx():
+            return self._splice_fn(cache, one_cache, slot, start, plen,
+                                   rows)
+
     def copy_page(self, cache, src, dst, group_key):
         with self._ctx():
             return self._copy_fn(cache, src, dst, group_key)
 
-    def chunk(self, params, cache, state):
+    def chunk(self, params, draft_params, cache, state):
         with self._ctx():
-            return self._chunk_fn(params, cache, state)
+            return self._chunk_fn(params, draft_params, cache, state)
 
     def free_slot(self, cache, slot):
         with self._ctx():
@@ -215,6 +380,10 @@ class Executor:
     @property
     def suffix_prefill_compiles(self) -> int:
         return self._suffix_fn._cache_size()
+
+    @property
+    def admit_compiles(self) -> int:
+        return self._admit_fn._cache_size()
 
     @property
     def decode_compiles(self) -> int:
@@ -237,7 +406,11 @@ class Engine:
     page streaming on TPU, pool-wide masked attention elsewhere — the
     gather buffer never exists), ``False`` = gather-then-attend, and
     ``"auto"`` = kernel on a probe-passing TPU toolchain, gather
-    elsewhere."""
+    elsewhere.  ``spec`` turns on speculative decoding (``"ngram"``, a
+    draft-config name, or a ``serve/spec.SpecConfig``): drafted
+    multi-token steps verified in the fused chunk, output
+    token-identical at temperature 0 — attention-only archs only
+    (``serve/spec/config.py`` documents the gate)."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
@@ -247,6 +420,7 @@ class Engine:
                  page_size: int = 8, num_pages: Optional[int] = None,
                  prefix_sharing: bool = True,
                  paged_kernel: Any = "auto",
+                 spec: Any = None,
                  rules: Optional[sh.Rules] = None,
                  donate: Any = "auto"):
         if cfg.cross_attention:
@@ -276,9 +450,48 @@ class Engine:
         self._donate = bool(donate)
         self._rules = rules
 
-        self.spec = CacheSpec.from_config(cfg, slots, max_len,
-                                          page_size=page_size,
-                                          num_pages=num_pages)
+        # ---- speculative decoding config + drafter resolution
+        if spec in (None, False, "off"):
+            spec_cfg = None
+        elif isinstance(spec, SpecConfig):
+            spec_cfg = spec
+        elif isinstance(spec, str):
+            spec_cfg = SpecConfig(draft=spec)
+        else:
+            raise TypeError(f"spec must be None, 'ngram', a draft config "
+                            f"name, or a SpecConfig; got {spec!r}")
+        self.spec_config = spec_cfg
+        self.drafter = None
+        self.draft_params = None
+        if spec_cfg is not None:
+            check_spec_capable(cfg)
+            if spec_cfg.k < 1:
+                raise ValueError(f"spec.k must be >= 1, got {spec_cfg.k}")
+            if spec_cfg.draft == "ngram":
+                self.drafter = NGramDrafter(spec_cfg.k, spec_cfg.ngram)
+            else:
+                dcfg = spec_cfg.draft_cfg
+                if dcfg is None:
+                    from repro.configs import get_config, reduced
+                    dcfg = reduced(get_config(spec_cfg.draft))
+                self.drafter = ModelDrafter(
+                    dcfg, spec_cfg.k,
+                    cache_tokens=max_len + spec_cfg.k + 1)
+                self.draft_params = spec_cfg.draft_params
+                if self.draft_params is None:
+                    self.draft_params = m.init_params(
+                        model_defs(dcfg), jax.random.PRNGKey(seed + 17),
+                        jnp.float32)
+        # the token-history buffer is the n-gram drafter's lookup corpus;
+        # a model drafter never reads it, so it pays neither the buffer
+        # nor the per-step scatter
+        self._hist_cap = (max_len + spec_cfg.k + 2
+                          if spec_cfg is not None
+                          and spec_cfg.draft == "ngram" else 0)
+
+        self.spec = CacheSpec.from_config(
+            cfg, slots, max_len, page_size=page_size, num_pages=num_pages,
+            spec_tokens=spec_cfg.k if spec_cfg else 0)
         if paged_kernel == "auto":
             # pool-direct attention is the TPU hot path (compiled Pallas
             # kernel, gated on the runtime toolchain probe).  Off-TPU the
@@ -291,16 +504,24 @@ class Engine:
                             and jax.default_backend() == "tpu"
                             and paged_ops.supported())
         self.paged_kernel = bool(paged_kernel) and self.spec.has_paged
+        if spec_cfg is not None and not self.spec.has_paged:
+            raise ValueError(
+                f"{cfg.name}: speculative decoding needs the paged decode "
+                "cache (rollback by position)")
         self.scheduler = Scheduler(self.spec, prefix_sharing=prefix_sharing)
         self.executor = Executor(cfg, self.spec, top_k=self.top_k,
                                  sync_interval=self.sync_interval,
                                  donate=self._donate, rules=rules,
-                                 paged_kernel=self.paged_kernel)
+                                 paged_kernel=self.paged_kernel,
+                                 spec_cfg=spec_cfg, drafter=self.drafter,
+                                 hist_cap=self._hist_cap)
 
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._slot_first_tok: List[Optional[jax.Array]] = [None] * slots
         self.cache = self._empty_cache()
-        self.state = sampling.make_slot_state(slots, seed)
+        self.state = sampling.make_slot_state(slots, seed,
+                                              hist_cap=self._hist_cap,
+                                              spec=spec_cfg is not None)
         self._key = jax.random.PRNGKey(seed + 1)
         self.finished: List[Request] = []
         self.steps = 0
@@ -314,6 +535,8 @@ class Engine:
             cache = jax.tree.map(
                 lambda x, s: jax.device_put(x, s) if s is not None else x,
                 cache, shardings)
+        if self.drafter is not None and self.drafter.kind == "model":
+            cache["draft"] = self.drafter.init_cache(self.slots)
         return cache
 
     # ---------------------------------------------------------- telemetry
@@ -328,6 +551,10 @@ class Engine:
     @property
     def suffix_prefill_compiles(self) -> int:
         return self.executor.suffix_prefill_compiles
+
+    @property
+    def admit_compiles(self) -> int:
+        return self.executor.admit_compiles
 
     @property
     def decode_compiles(self) -> int:
@@ -347,6 +574,31 @@ class Engine:
         """Prefix-sharing telemetry (hit rate, skipped prefill tokens,
         shared-page attaches, CoW copies, radix evictions)."""
         return self.scheduler.prefix_stats()
+
+    def spec_stats(self) -> Dict[str, Any]:
+        """Speculative-decoding telemetry: acceptance rate (accepted
+        drafts / proposed drafts) and committed tokens per verify step,
+        from the device-side counters ``serve/sampling.spec_update``
+        maintains.  Reading them is one host transfer — call between
+        runs, not inside the serving loop."""
+        if self.spec_config is None:
+            return {"spec": False}
+        steps, drafted, accepted, emitted = jax.device_get(
+            (self.state["spec_steps"], self.state["spec_drafted"],
+             self.state["spec_accepted"], self.state["spec_emitted"]))
+        return {
+            "spec": True,
+            "drafter": self.drafter.kind,
+            "spec_k": self.spec_config.k,
+            "spec_steps": int(steps),
+            "drafted_tokens": int(drafted),
+            "accepted_tokens": int(accepted),
+            "acceptance_rate": (float(accepted) / float(drafted)
+                                if drafted else 0.0),
+            "emitted_tokens": int(emitted),
+            "tokens_per_step": (float(emitted) / float(steps)
+                                if steps else 0.0),
+        }
 
     # ------------------------------------------------------------ serving
     def submit(self, req: Request) -> None:
@@ -379,34 +631,82 @@ class Engine:
         """Pad the shared-prefix ctx gather to a power-of-two block count
         (capped at the sharing group's table width), so the suffix
         prefill compiles O(log^2) executables, not one per match."""
-        ring = self.spec.group_of(self.scheduler.share_key).ring_blocks
+        ring = self.spec.group_of(self.spec.share_group_key).ring_blocks
         return min(_next_pow2(max(nblocks, 1)), ring)
 
+    def _ctx_row(self, adm: Admission, s: int) -> np.ndarray:
+        """Trash-padded page row naming the ``ceil(s/P)`` context pages a
+        suffix prefill at offset ``s`` gathers from the slot's table."""
+        gkey = self.spec.share_group_key
+        nctx = -(-s // self.spec.page_size)
+        cb = self._ctx_bucket(nctx)
+        row = np.full((cb,), self.spec.group_of(gkey).trash_page, np.int32)
+        row[:nctx] = adm.rows[gkey][:nctx]
+        return row
+
+    def _batched_admit(self, entries: List[Dict], valids: List[bool]):
+        """Apply up to ``slots`` admissions in ONE splice dispatch.  The
+        entry list is padded to the slot count by aliasing the first
+        entry with its valid flag off (trash-routed writes, bookkeeping
+        untouched), so the executable count stays 1 for any batch size."""
+        if not entries:
+            return
+        ent = entries + [entries[0]] * (self.slots - len(entries))
+        vf = list(valids) + [False] * (self.slots - len(valids))
+        rows = {g.key: jnp.asarray(
+            np.stack([en["rows"][g.key] for en in ent]).astype(np.int32))
+            for g in self.spec.groups}
+        drafts = None
+        if self.drafter is not None and self.drafter.kind == "model":
+            drafts = tuple(en["draft"] for en in ent)
+        hist = None
+        if self._hist_cap:
+            hist = jnp.asarray(np.stack([en["hist"] for en in ent]),
+                               jnp.int32)
+        self.cache, self.state = self.executor.admit(
+            self.cache, self.state,
+            tuple(en["one_cache"] for en in ent), drafts,
+            jnp.asarray([en["slot"] for en in ent], jnp.int32),
+            jnp.asarray([en["start"] for en in ent], jnp.int32),
+            jnp.asarray([en["plen"] for en in ent], jnp.int32),
+            rows,
+            tuple(en["tok"] for en in ent),
+            jnp.asarray([en["max_new"] for en in ent], jnp.int32),
+            jnp.asarray([en["eos"] for en in ent], jnp.int32),
+            jnp.asarray([en["temp"] for en in ent], jnp.float32),
+            jnp.asarray(vf),
+            hist)
+
     def warmup(self) -> None:
-        """Pre-compile every prefill bucket, the splice, and the decode
-        chunk so serving never pays a compile inside the hot loop.
-        Semantically inert: admissions use trash page-table rows and
-        ``active=False``, and the PRNG key is restored afterwards, so
-        seeded sampled runs are identical with or without warmup.
-        (Suffix-prefill executables still compile lazily on the first
-        prefix hit per shape pair.)"""
+        """Pre-compile every prefill bucket, the batched admission
+        splice, and the decode chunk so serving never pays a compile
+        inside the hot loop.  Semantically inert: admissions use trash
+        page-table rows with their valid flag off, and the PRNG key is
+        restored afterwards, so seeded sampled runs are identical with or
+        without warmup.  (Suffix-prefill executables still compile lazily
+        on the first prefix hit per shape pair.)"""
         key_before = jnp.array(self.state["key"])   # copy: state is donated
-        trash_rows = {g.key: jnp.full((g.ring_blocks,), g.trash_page,
-                                      jnp.int32) for g in self.spec.groups}
+        trash_rows = {g.key: np.full((g.ring_blocks,), g.trash_page,
+                                     np.int32) for g in self.spec.groups}
         for b in self.buckets:
             tokens = jnp.zeros((1, b), jnp.int32)
             length = jnp.zeros((1,), jnp.int32)
             key = jax.random.PRNGKey(0)
             temp = jnp.zeros((1,), jnp.float32)
+            pad_to = self.buckets[-1]
             tok, one_cache = self.executor.prefill(
-                self.params, tokens, length, key, temp)
-            # active=False: compiles the splice without touching live slots
-            self.cache, self.state = self.executor.admit(
-                self.cache, self.state, one_cache, 0,
-                jnp.int32(0), jnp.int32(0), trash_rows, tok[0],
-                jnp.int32(0), jnp.int32(-1), jnp.float32(0.0), False)
+                self.params, tokens, length, key, temp, pad_to)
+            draft = None
+            if self.drafter is not None and self.drafter.kind == "model":
+                draft = self.executor.draft_prefill(
+                    self.draft_params, tokens, length, pad_to)
+            entry = {"slot": 0, "start": 0, "plen": 0, "rows": trash_rows,
+                     "tok": tok, "one_cache": one_cache, "draft": draft,
+                     "max_new": 0, "eos": -1, "temp": 0.0,
+                     "hist": np.zeros((self._hist_cap,), np.int32)}
+            self._batched_admit([entry], [False])
         _, self.cache, self.state = self.executor.chunk(
-            self.params, self.cache, self.state)
+            self.params, self.draft_params, self.cache, self.state)
         # eviction splice: compiling it here keeps the first request
         # completion from paying a trace inside the serving loop (slot 0
         # is idle, so re-trashing its table rows is inert)
@@ -418,13 +718,71 @@ class Engine:
             return float(req.temperature)
         return self.default_temp
 
+    @property
+    def _chunked_ok(self) -> bool:
+        """Prompts longer than the largest bucket can run as several
+        suffix-prefill segments when the arch has the suffix machinery
+        (single full-attention pool group) and no model drafter (whose
+        dense draft prefill has no suffix path)."""
+        return (self.spec.prefix_sharing_capable
+                and (self.drafter is None or self.drafter.kind != "model"))
+
+    def _chunked_prefill(self, adm: Admission, s: int) -> int:
+        """Run all but the final ``<= Bmax`` prompt tokens of an overlong
+        prompt as bucket-sized segments through the suffix-prefill path —
+        each segment attends to the pages earlier segments spliced — and
+        return the final segment's start offset.  Reuses the existing
+        buckets and the existing suffix executables: no new compiles
+        beyond the (segment bucket, ctx bucket) pairs sharing already
+        pays for."""
+        req, slot = adm.req, adm.slot
+        plen = len(req.prompt)
+        bmax = self.buckets[-1]
+        rows = {k: jnp.asarray(v) for k, v in adm.rows.items()}
+        cur = s
+        while plen - cur > bmax:
+            seg = list(req.prompt[cur:cur + bmax])
+            self._key, sub = jax.random.split(self._key)
+            temp = jnp.zeros((1,), jnp.float32)
+            if cur == 0:
+                _tok, oc = self.executor.prefill(
+                    self.params, jnp.asarray([seg], jnp.int32),
+                    jnp.asarray([bmax], jnp.int32), sub, temp, bmax)
+            else:
+                pools = [c if (c is not None and "pk" in c) else None
+                         for c in self.cache["layers"]]
+                _tok, oc = self.executor.prefill_suffix(
+                    self.params, jnp.asarray([seg], jnp.int32),
+                    jnp.asarray([bmax], jnp.int32), jnp.int32(cur),
+                    jnp.asarray(self._ctx_row(adm, cur)), pools, sub,
+                    temp, bmax)
+            self.cache = self.executor.splice(
+                self.cache, oc, jnp.int32(slot), jnp.int32(cur),
+                jnp.int32(cur + bmax), rows)
+            cur += bmax
+        return cur
+
     def _admit(self) -> None:
         free = [i for i in range(self.slots) if self._slot_req[i] is None]
+        pend: List[Dict] = []
+        pvalid: List[bool] = []
+
+        def flush():
+            self._batched_admit(pend, pvalid)
+            pend.clear()
+            pvalid.clear()
+
         for adm in self.scheduler.admissions(free):
             req, slot = adm.req, adm.slot
             plen = len(req.prompt)
             self._key, sub = jax.random.split(self._key)
             temp = jnp.asarray([self._req_temp(req)], jnp.float32)
+            s = adm.suffix_start
+            if adm.cow is not None or s > 0:
+                # a pending admission in this same batch may own the CoW
+                # source / ctx pages this one is about to read (radix
+                # match against pages not yet spliced): flush first
+                flush()
             if adm.cow is not None:
                 # the slot will write into a shared page (partial-page
                 # match, or last page of a fully-matched prompt): give it
@@ -433,56 +791,72 @@ class Engine:
                 self.cache = self.executor.copy_page(
                     self.cache, jnp.int32(src), jnp.int32(dst),
                     self.scheduler.share_key)
-            s = adm.suffix_start
+            if plen - s > self.buckets[-1] and self._chunked_ok:
+                flush()    # segment splices interleave with self.cache
+                s = self._chunked_prefill(adm, s)
             if s > 0:
-                # prefix hit: prefill only the un-matched suffix, reading
-                # the matched prefix from the slot's (shared) pages
-                gkey = self.scheduler.share_key
+                # prefix hit and/or chunked prefill: prefill only the
+                # remaining tail, reading the earlier tokens from the
+                # slot's (shared or just-spliced) pages
                 suffix = list(req.prompt[s:])
                 bucket = self.bucket_for(len(suffix))
                 padded = suffix + [0] * (bucket - len(suffix))
-                nctx = -(-s // self.spec.page_size)
-                cb = self._ctx_bucket(nctx)
-                trash = self.spec.group_of(gkey).trash_page
-                ctx_row = np.full((cb,), trash, np.int32)
-                ctx_row[:nctx] = adm.rows[gkey][:nctx]
                 pools = [c if (c is not None and "pk" in c) else None
                          for c in self.cache["layers"]]
                 tok, one_cache = self.executor.prefill_suffix(
                     self.params, jnp.asarray([padded], jnp.int32),
                     jnp.asarray([len(suffix)], jnp.int32), jnp.int32(s),
-                    jnp.asarray(ctx_row), pools, sub, temp)
+                    jnp.asarray(self._ctx_row(adm, s)), pools, sub, temp,
+                    self.buckets[-1])
             else:
                 bucket = self.bucket_for(plen)
                 padded = list(req.prompt) + [0] * (bucket - plen)
                 tok, one_cache = self.executor.prefill(
                     self.params, jnp.asarray([padded], jnp.int32),
-                    jnp.asarray([plen], jnp.int32), sub, temp)
+                    jnp.asarray([plen], jnp.int32), sub, temp,
+                    self.buckets[-1])
+            draft = None
+            if self.drafter is not None and self.drafter.kind == "model":
+                dbucket = self.bucket_for(plen)
+                dpadded = list(req.prompt) + [0] * (dbucket - plen)
+                draft = self.executor.draft_prefill(
+                    self.draft_params, jnp.asarray([dpadded], jnp.int32),
+                    jnp.asarray([plen], jnp.int32), self.buckets[-1])
+            hist = None
+            if self._hist_cap:
+                hist = np.zeros((self._hist_cap,), np.int32)
+                head = req.prompt[:self._hist_cap]
+                hist[:len(head)] = head
             eos = -1 if req.eos_id is None else int(req.eos_id)
-            rows = {k: jnp.asarray(v) for k, v in adm.rows.items()}
-            self.cache, self.state = self.executor.admit(
-                self.cache, self.state, one_cache, slot,
-                jnp.int32(s), jnp.int32(plen), rows, tok[0],
-                jnp.int32(req.max_new_tokens), jnp.int32(eos),
-                jnp.float32(self._req_temp(req)), True)
+            pend.append({"slot": slot, "start": s, "plen": plen,
+                         "rows": adm.rows, "tok": tok,
+                         "one_cache": one_cache, "draft": draft,
+                         "max_new": req.max_new_tokens, "eos": eos,
+                         "temp": self._req_temp(req), "hist": hist})
+            pvalid.append(True)
             self._slot_req[slot] = req
-            self._slot_first_tok[slot] = tok   # stays on device until drain
+            self._slot_first_tok[slot] = tok   # on device until drain
+        flush()
 
     def step_chunk(self) -> jax.Array:
         """Dispatch one fused decode chunk.  No host synchronization —
         safe to call under ``jax.transfer_guard_device_to_host``."""
         toks, self.cache, self.state = self.executor.chunk(
-            self.params, self.cache, self.state)
+            self.params, self.draft_params, self.cache, self.state)
         self.steps += self.sync_interval
         return toks
 
     def _drain(self, toks: jax.Array) -> None:
         """One batched device->host transfer: token history + slot state.
-        Finished slots are evicted: page refcounts drop in the scheduler
-        (exclusive pages rejoin the free list; shared/radix-indexed pages
-        survive for their other referents) and the slot's page-table rows
-        are pointed at the trash pages, so its dead tail writes cannot
-        touch re-leased pages."""
+        The history is [T, slots] with -1 where a slot was idle — and,
+        under speculation, wherever a draft/verify round committed fewer
+        than ``K+1`` tokens — so each slot's new tokens are the
+        non-negative entries of its column, in order.  Finished slots are
+        evicted: page refcounts drop in the scheduler (exclusive pages
+        rejoin the free list; shared/radix-indexed pages survive for
+        their other referents) and the slot's page-table rows are pointed
+        at the trash pages, so its dead tail writes cannot touch
+        re-leased pages."""
         toks_np, out_len, active, firsts = jax.device_get(
             (toks, self.state["out_len"], self.state["active"],
              [self._slot_first_tok[i] for i in range(self.slots)]))
@@ -494,8 +868,13 @@ class Engine:
             if not req.out_tokens:          # prefill-sampled first token
                 req.out_tokens.append(int(firsts[slot][0]))
             k = int(out_len[slot]) - len(req.out_tokens)
-            for i in range(k):
-                req.out_tokens.append(int(toks_np[i, slot]))
+            if k > 0:
+                # the serving loop drains every chunk, so the whole gap is
+                # in this history; a caller draining a partial history
+                # (benchmarks) just gets what it carries
+                vals = [int(t) for t in toks_np[:, slot] if t >= 0]
+                assert len(vals) <= k, (slot, len(vals), k)
+                req.out_tokens.extend(vals[-k:])
             if not active[slot]:
                 req.done = True
                 self.finished.append(req)

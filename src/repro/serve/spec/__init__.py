@@ -1,0 +1,7 @@
+from repro.serve.spec.config import (SpecConfig, check_spec_capable,
+                                     spec_unsupported_reason)
+from repro.serve.spec.drafter import (ModelDrafter, NGramDrafter,
+                                      ngram_propose)
+
+__all__ = ["SpecConfig", "check_spec_capable", "spec_unsupported_reason",
+           "NGramDrafter", "ModelDrafter", "ngram_propose"]

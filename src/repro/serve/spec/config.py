@@ -1,0 +1,77 @@
+"""Speculative-decoding configuration + capability gate.
+
+``SpecConfig`` is the one knob surface: which drafter proposes tokens
+(``"ngram"`` — the model-free prompt-lookup drafter — or the name/config
+of a small draft model), how many tokens it drafts per verify step
+(``k``), and the n-gram order for the lookup drafter.  The serving
+engine accepts it as ``Engine(spec=...)``; ``launch/serve.py`` maps
+``--spec-draft {off,ngram,<config>} --spec-k N`` onto it.
+
+Speculative decoding rewrites the decode inner loop as
+draft-``K``/verify-``K+1``/accept, which requires the target cache to
+support *positional rollback*: un-accepting a token must be as cheap as
+not advancing ``len``.  Block-paged attention KV has that property
+(token ``t`` always lives at page ``(t // P) mod ring``, offset ``t mod
+P`` — a rejected token's cell is simply overwritten by the real token
+later), but recurrent STATE layers (mamba2 / rwkv6) do not: their state
+update is a fold, and rewinding it would need every intermediate state
+materialized.  ``spec_unsupported_reason`` is therefore the same flavour
+of structural gate as ``CacheSpec.share_group_key``: attention-only
+stacks, no modality frontend, no cross-attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.configs.base import ATTN, ModelConfig
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decoding settings for ``serve/engine.Engine``.
+
+    draft:        ``"ngram"`` (prompt-lookup, no second model) or the name
+                  of a draft model config; ``draft_cfg``/``draft_params``
+                  override/supply the actual model when given.
+    k:            drafted tokens per verify step (the verify dispatch runs
+                  ``k + 1`` query rows).
+    ngram:        n-gram order for the lookup drafter.
+    draft_cfg:    resolved draft ``ModelConfig`` (model drafter only).
+    draft_params: draft model parameters; initialized from the engine seed
+                  when left None.
+    """
+
+    draft: str = "ngram"
+    k: int = 4
+    ngram: int = 3
+    draft_cfg: Optional[ModelConfig] = None
+    draft_params: Any = None
+
+
+def spec_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why ``cfg`` cannot serve speculatively, or None when it can.
+
+    The verify step needs every layer's decode state to roll back by
+    *not advancing a position counter*; only block-paged attention KV
+    behaves that way."""
+    if cfg.cross_attention:
+        return "cross-attention decoders are not served by Engine"
+    if cfg.frontend:
+        return ("modality-frontend archs prepend non-token state the "
+                "drafters cannot model")
+    bad = sorted({b.mixer for b in cfg.blocks if b.mixer != ATTN})
+    if bad:
+        return (f"{'/'.join(bad)} layers keep recurrent state that cannot "
+                "roll back rejected drafts without materializing every "
+                "intermediate state")
+    return None
+
+
+def check_spec_capable(cfg: ModelConfig, what: str = "speculative "
+                       "decoding") -> None:
+    """Raise with an actionable message when ``cfg`` cannot run ``what``."""
+    reason = spec_unsupported_reason(cfg)
+    if reason is not None:
+        raise ValueError(f"{cfg.name} does not support {what}: {reason}")

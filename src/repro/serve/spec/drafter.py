@@ -1,0 +1,159 @@
+"""Draft proposers for the speculative serving path.
+
+Both drafters are pure jit-traceable functions of device-side state — a
+draft step never touches the host, so the fused decode chunk stays
+sync-free with speculation enabled.  The contract is::
+
+    drafts, qprobs, cache = drafter.propose(draft_params, cache, state,
+                                            key, top_k)
+
+``drafts`` [B, K] are proposed continuations of ``state["tokens"]``;
+``qprobs`` is the per-position proposal distribution [B, K, V] (or None
+for a deterministic proposer — the accept rule then treats the proposal
+as a point mass); ``cache`` is returned because a model drafter advances
+its own draft cache in place.
+
+**NGramDrafter** (prompt-lookup decoding): finds the most recent earlier
+occurrence of the last ``n`` tokens in the slot's history buffer
+(``state["hist"]`` — prompt plus everything emitted) and proposes the
+``K`` tokens that followed it.  Free of any second model, and exact for
+the repetitive tails (cycles, copied spans) where greedy decoding spends
+most of its tokens.  A wrong draft costs nothing but wasted verify
+compute — the accept rule rejects it.
+
+**ModelDrafter**: a small attention-only model (any reduced ``configs/``
+arch) decoded ``K`` steps ahead on its own *dense* per-slot KV cache
+(``cache["draft"]``).  The draft cache needs no paging or careful
+rollback: positions past the committed length are overwritten by later
+writes, exactly like the target's pages, and any imperfection can only
+lower the acceptance rate, never corrupt the verified output.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.models import attention, forward_decode
+from repro.serve import sampling
+
+
+def ngram_propose(hist: jax.Array, hist_len: jax.Array, *, k: int,
+                  n: int) -> jax.Array:
+    """Prompt-lookup proposal: continue the most recent earlier match of
+    the trailing ``n``-gram.
+
+    hist [B, C(+1)] (the final spill column, if present, is excluded);
+    hist_len [B] valid entries.  Returns drafts [B, k].  When no earlier
+    match exists the last token is repeated — a deliberately cheap
+    fallback whose drafts simply get rejected."""
+    h = hist[:, :-1]
+    b, c = h.shape
+    gpos = hist_len[:, None] - n + jnp.arange(n)[None, :]
+    gram = jnp.take_along_axis(h, jnp.clip(gpos, 0, c - 1), axis=1)
+    # all length-n windows of the history: [B, C-n+1, n]
+    win = jnp.stack([h[:, i:c - n + i + 1] for i in range(n)], axis=-1)
+    jidx = jnp.arange(c - n + 1)
+    match = jnp.all(win == gram[:, None, :], axis=-1)
+    # an eligible start must have a continuation inside the history and
+    # must not be the trailing gram itself
+    ok = match & (jidx[None, :] + n < hist_len[:, None]) \
+        & (gpos[:, :1] >= 0)
+    # rank matches by USABLE continuation length first (a match right at
+    # the history tail can only contribute one token before running off
+    # the written region — e.g. in a constant run the most recent match
+    # is always one token from the end), recency second
+    avail = jnp.minimum(hist_len[:, None] - (jidx[None, :] + n), k)
+    score = jnp.where(ok, avail * (c + 1) + jidx[None, :], -1)
+    best = jnp.argmax(score, axis=1)
+    found = jnp.max(score, axis=1) >= 0
+    j = jidx[best]
+    # continuation positions past the written history wrap by the match
+    # period (distance from the matched gram to the trailing one), so a
+    # cyclic tail — constant runs, short cycles, the bread and butter of
+    # greedy decoding — drafts a full K tokens instead of trailing off
+    p = jnp.maximum(hist_len - n - j, 1)[:, None]
+    i = jnp.arange(k)[None, :]
+    cpos = j[:, None] + n + i
+    cpos = jnp.where(cpos >= hist_len[:, None],
+                     j[:, None] + n + i % p, cpos)
+    drafts = jnp.take_along_axis(h, jnp.clip(cpos, 0, c - 1), axis=1)
+    last = jnp.take_along_axis(
+        h, jnp.clip(hist_len - 1, 0, c - 1)[:, None], axis=1)
+    return jnp.where(found[:, None], drafts, last).astype(jnp.int32)
+
+
+class NGramDrafter:
+    """Model-free prompt-lookup drafter (see module docstring)."""
+
+    kind = "ngram"
+
+    def __init__(self, k: int, n: int = 3):
+        self.k = int(k)
+        self.n = int(n)
+
+    def propose(self, draft_params: Any, cache: Dict, state: Dict,
+                key: jax.Array, top_k: int
+                ) -> Tuple[jax.Array, Optional[jax.Array], Dict]:
+        """Traced inside the fused chunk; ignores params and PRNG key."""
+        drafts = ngram_propose(state["hist"], state["hist_len"],
+                               k=self.k, n=self.n)
+        return drafts, None, cache
+
+
+class ModelDrafter:
+    """Small-model drafter over a dense per-slot draft KV cache."""
+
+    kind = "model"
+
+    def __init__(self, cfg: ModelConfig, k: int, cache_tokens: int):
+        bad = sorted({b.mixer for b in cfg.blocks if b.mixer != ATTN})
+        if bad or cfg.frontend or cfg.cross_attention:
+            raise ValueError(
+                f"draft model {cfg.name} must be a plain attention-only "
+                f"decoder (got {bad or 'frontend/cross-attention'})")
+        self.cfg = cfg
+        self.k = int(k)
+        self.cache_tokens = int(cache_tokens)
+
+    def init_cache(self, slots: int) -> List[Optional[Dict]]:
+        """Zeroed dense draft KV: one ``cache_tokens`` row per slot per
+        draft layer (small model — paging buys nothing)."""
+        shape, _ = attention.init_cache_shape(self.cfg, slots,
+                                              self.cache_tokens)
+        return [{"k": jnp.zeros(shape, jnp.float32),
+                 "v": jnp.zeros(shape, jnp.float32)}
+                for _ in self.cfg.blocks]
+
+    def propose(self, draft_params: Any, cache: Dict, state: Dict,
+                key: jax.Array, top_k: int
+                ) -> Tuple[jax.Array, Optional[jax.Array], Dict]:
+        """``K`` sequential draft-model decode steps (traced, on device).
+
+        Draft tokens are *sampled* from the draft distribution at the
+        slot's temperature (greedy at 0) — the proposal distribution the
+        accept rule requires — and the same distribution is returned as
+        ``qprobs``."""
+        dc = {"layers": cache["draft"], "len": cache["len"]}
+        tok = state["tokens"]
+        temp = state["temp"]
+        drafts, qlogits = [], []
+        for _ in range(self.k):
+            lg, dc = forward_decode(draft_params, self.cfg, tok[:, None],
+                                    dc)
+            key, sub = jax.random.split(key)
+            tok = sampling.sample(lg, sub, temperature=temp, top_k=top_k)
+            drafts.append(tok)
+            qlogits.append(lg)
+        # one extra forward purely to write the LAST draft's KV: a fully
+        # accepted round commits through that position, and without this
+        # write the next round's draft steps would attend stale garbage
+        # there (rejected rounds overwrite it — only acceptance cares)
+        _, dc = forward_decode(draft_params, self.cfg, tok[:, None], dc)
+        qprobs = sampling.spec_probs(jnp.stack(qlogits, axis=1), temp,
+                                     top_k)
+        return (jnp.stack(drafts, axis=1), qprobs,
+                dict(cache, draft=dc["layers"]))

@@ -125,6 +125,82 @@ def test_trash_page_masked():
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("s", [2, 5])
+@pytest.mark.parametrize("mode", ["full", "window", "softcap"])
+def test_multiquery_pool_lowering_vs_ref(s, mode):
+    """Speculative verify reads: S query rows per slot, per-row causal
+    ring masks, against the multi-query gather oracle."""
+    page_size, nb, h, hkv = 4, 4, 4, 2
+    kw = {"full": {},
+          "window": {"window": 3 * page_size},
+          "softcap": {"softcap": 20.0}}[mode]
+    ring = page_size * nb
+    q, pk, pv, pt = _case(3, h, hkv, 16, page_size, nb, 4 * nb,
+                          seed=90 + s)
+    q = jnp.repeat(q[:, None], s, axis=1) * (1 + jnp.arange(s)[
+        None, :, None, None] * 0.1)
+    cl = jnp.asarray([ring - 3, s + 1, 2 * ring + 5], jnp.int32)
+    got = pool_attention_xla(q, pk, pv, pt, cl, **kw)
+    want = paged_attention_ref(q, pk, pv, pt, cl, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@needs_pallas
+@pytest.mark.parametrize("s", [2, 5])
+@pytest.mark.parametrize("mode", ["full", "window", "softcap"])
+def test_multiquery_kernel_vs_ref(s, mode):
+    kw = {"full": {},
+          "window": {"window": 3 * 4},
+          "softcap": {"softcap": 20.0}}[mode]
+    page_size, nb, h, hkv = 4, 4, 4, 2
+    ring = page_size * nb
+    q, pk, pv, pt = _case(3, h, hkv, 16, page_size, nb, 4 * nb,
+                          seed=70 + s)
+    q = jnp.repeat(q[:, None], s, axis=1) * (1 + jnp.arange(s)[
+        None, :, None, None] * 0.1)
+    cl = jnp.asarray([ring - 3, s + 1, 2 * ring + 5], jnp.int32)
+    got = paged_decode_attention(q, pk, pv, pt, cl,
+                                 interpret=_interpret(), **kw)
+    want = paged_attention_ref(q, pk, pv, pt, cl, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@needs_pallas
+def test_multiquery_kernel_page_stale_for_newest_row_only():
+    """Regression: a page whose tokens are all outside the NEWEST query
+    row's window can still be in-window for earlier draft rows — the
+    kernel's page-skip predicate must use the per-row mask, not the
+    newest row's.  window=12, P=4, S=5, cache_len=40: the page holding
+    absolute tokens 24..27 is stale for row 4 (position 39 needs u>27)
+    but valid for rows at positions 35..38."""
+    page_size, nb, h, hkv, s, window = 4, 4, 4, 2, 5, 12
+    q, pk, pv, pt = _case(2, h, hkv, 16, page_size, nb, 4 * nb, seed=21)
+    q = jnp.repeat(q[:, None], s, axis=1) * (1 + jnp.arange(s)[
+        None, :, None, None] * 0.1)
+    cl = jnp.asarray([40, 2 * 16 + 8], jnp.int32)   # page-aligned stale
+    got = paged_decode_attention(q, pk, pv, pt, cl, window=window,
+                                 interpret=_interpret())
+    want = paged_attention_ref(q, pk, pv, pt, cl, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_multiquery_first_row_matches_single_query():
+    """The newest row of an S-row verify equals the single-query result
+    at the same cache_len, and a 3-D q keeps the legacy behavior."""
+    page_size, nb, h, hkv = 4, 4, 4, 2
+    q, pk, pv, pt = _case(2, h, hkv, 16, page_size, nb, 3 * nb, seed=31)
+    cl = jnp.asarray([9, 14], jnp.int32)
+    single = paged_attention_ref(q, pk, pv, pt, cl)
+    multi = paged_attention_ref(
+        jnp.stack([jax.random.normal(KEY, q.shape), q], axis=1),
+        pk, pv, pt, cl)
+    np.testing.assert_allclose(np.asarray(multi[:, -1]),
+                               np.asarray(single), rtol=1e-5, atol=1e-5)
+
+
 @needs_pallas
 def test_model_paged_decode_step_kernel_vs_gather():
     """models/attention.paged_decode_step with paged_kernel on/off must

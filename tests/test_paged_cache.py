@@ -221,6 +221,151 @@ def test_page_pool_allocator_invariants():
 
 
 # ---------------------------------------------------------------------------
+# Multi-token cache appends (speculative verify writes K+1 tokens/step)
+# ---------------------------------------------------------------------------
+
+def _multi_vs_sequential(page_size, nb, num_pages, cache_len0, s, window):
+    """Oracle: an S-token paged_decode_step must equal S sequential
+    single-token steps — same pool contents, same per-position attention
+    outputs."""
+    from repro.models.attention import paged_decode_step
+
+    b, h, hkv, dh = 2, 4, 2, 16
+    key = jax.random.PRNGKey(nb + s + (window or 0))
+    q = jax.random.normal(key, (b, s, h, dh)) * 0.5
+    kk = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, dh)) * 0.5
+    vv = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, dh))
+    pool = jax.random.normal(jax.random.fold_in(key, 3),
+                             (num_pages + 1, page_size, hkv, dh)) * 0.3
+    rs = np.random.RandomState(3)
+    pt = jnp.asarray(np.stack([rs.permutation(num_pages)[:nb]
+                               for _ in range(b)]), jnp.int32)
+    cl0 = jnp.asarray(cache_len0, jnp.int32)
+
+    multi, mnew = paged_decode_step(
+        q, kk, vv, {"pk": pool, "pv": pool, "pt": pt}, cl0 + s,
+        window=window, softcap=None)
+    seq_out = []
+    cur = {"pk": pool, "pv": pool}
+    for i in range(s):
+        o, cur = paged_decode_step(
+            q[:, i:i + 1], kk[:, i:i + 1], vv[:, i:i + 1],
+            {"pk": cur["pk"], "pv": cur["pv"], "pt": pt}, cl0 + i + 1,
+            window=window, softcap=None)
+        seq_out.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(mnew["pk"]),
+                               np.asarray(cur["pk"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mnew["pv"]),
+                               np.asarray(cur["pv"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(multi),
+                               np.asarray(jnp.stack(seq_out, 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_multi_token_scatter_across_page_boundary():
+    """K-token append straddling a page boundary: positions 6..10 with
+    page_size 8 span pages 0 and 1."""
+    _multi_vs_sequential(page_size=8, nb=4, num_pages=12,
+                         cache_len0=[6, 13], s=5, window=None)
+
+
+def test_multi_token_scatter_into_ring_wrapped_window():
+    """K-token append into a windowed ring that wraps mid-append.  The
+    ring carries spec slack (ring tokens >= window + S - 1, the
+    CacheSpec sizing), so wrapped writes only land on ring slots whose
+    tokens are already outside every query's window.  Oracles: a numpy
+    emulation of the token-position write rule for the pool contents,
+    and the gather-then-attend ``paged_attention_ref`` for the output."""
+    from repro.kernels.paged_attention import paged_attention_ref
+    from repro.models.attention import paged_decode_step
+
+    b, h, hkv, dh, P, nb, window, s = 2, 4, 2, 16, 4, 4, 12, 5
+    ring = P * nb                                  # 16 >= window + s - 1
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (b, s, h, dh)) * 0.5
+    kk = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, dh))
+    vv = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, dh))
+    pool = jax.random.normal(jax.random.fold_in(key, 3),
+                             (11, P, hkv, dh)) * 0.3
+    rs = np.random.RandomState(5)
+    pt = jnp.asarray(np.stack([rs.permutation(10)[:nb]
+                               for _ in range(b)]), jnp.int32)
+    cl = jnp.asarray([14 + s, 29 + s], jnp.int32)  # second slot wraps
+    out, new = paged_decode_step(
+        q, kk, vv, {"pk": pool, "pv": pool, "pt": pt}, cl,
+        window=window, softcap=None)
+    want_k = np.asarray(pool).copy()
+    for bi in range(b):
+        for i in range(s):
+            g = int(cl[bi]) - s + i                # absolute position
+            want_k[int(pt[bi, (g // P) % nb]), g % P] = np.asarray(kk)[bi, i]
+    np.testing.assert_allclose(np.asarray(new["pk"]), want_k, atol=1e-6)
+    want = paged_attention_ref(q, new["pk"], new["pv"], pt, cl,
+                               window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_multi_token_write_clamped_outside_nonwrapping_ring():
+    """A verify step whose draft positions run past a NON-wrapping ring
+    (full attention) must discard those writes instead of mod-wrapping
+    them onto page 0 — under prefix sharing that page may belong to
+    other slots."""
+    from repro.models.attention import paged_decode_step
+
+    b, h, hkv, dh, P, nb = 1, 2, 1, 8, 4, 2       # ring = 8 tokens
+    q = jnp.zeros((b, 3, h, dh))
+    kk = jnp.ones((b, 3, hkv, dh))
+    vv = jnp.ones((b, 3, hkv, dh))
+    pool = jnp.zeros((4, P, hkv, dh))
+    pt = jnp.asarray([[0, 1]], jnp.int32)
+    # positions 6, 7, 8: the last is beyond the 8-token ring
+    _, new = paged_decode_step(
+        q, kk, vv, {"pk": pool, "pv": pool, "pt": pt},
+        jnp.asarray([9], jnp.int32), window=None, softcap=None)
+    pk = np.asarray(new["pk"])
+    assert pk[1, 2:].sum() == 2 * hkv * dh        # positions 6,7 written
+    assert pk[0].sum() == 0                       # page 0 NOT wrapped into
+    assert pk[3].sum() > 0                        # overflow went to trash
+
+
+def test_multi_token_append_into_cow_shared_page_rolls_back():
+    """Engine-level: a slot admitted onto a partially-matched shared page
+    copies it exactly once (CoW), drafted writes then land in the
+    private copy, and rejected-draft rollback leaves refcounts intact —
+    after the run every page reference is the radix tree's own."""
+    from repro.serve.spec import SpecConfig
+
+    cfg, params = _model("internlm2-1.8b")
+    prefix = [(3 * j) % 200 + 1 for j in range(16)]
+    tail = [50, 51, 52, 53, 54, 55, 56, 57]
+    eng = Engine(cfg, params, slots=2, max_len=64, page_size=8,
+                 spec=SpecConfig(draft="ngram", k=4))
+    eng.submit(Request(rid=0, prompt=prefix + tail, max_new_tokens=6))
+    eng.submit(Request(rid=1, prompt=prefix + tail[:3] + [99],
+                       max_new_tokens=6))
+    done = {r.rid: r for r in eng.run()}
+    assert len(done) == 2
+    ps = eng.prefix_stats()
+    assert ps["cow_copies"] == 1                  # the copy fired ONCE
+    # solo oracle: the CoW'd slot's output is unaffected by sharing +
+    # speculative rollback
+    solo = Engine(cfg, params, slots=2, max_len=64, page_size=8,
+                  spec=SpecConfig(draft="ngram", k=4))
+    solo.submit(Request(rid=1, prompt=prefix + tail[:3] + [99],
+                        max_new_tokens=6))
+    (s,) = solo.run()
+    assert done[1].out_tokens == s.out_tokens
+    # every slot lease was released; only the radix tree holds pages, at
+    # refcount 1 each
+    sched = eng.scheduler
+    assert sched.pages_in_use == sched.radix.node_count
+    pool = sched.pools[sched.share_key]
+    for leaf in sched.radix._leaves():
+        assert pool.refcount(leaf.page) == 1
+
+
+# ---------------------------------------------------------------------------
 # Capacity: paged lifts the per-slot dense ceiling at equal memory
 # ---------------------------------------------------------------------------
 

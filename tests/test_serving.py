@@ -272,6 +272,76 @@ def test_warmup_preserves_sampling_reproducibility():
     assert outs[0] == outs[1]
 
 
+def test_batched_admission_single_executable():
+    """All admissions at a chunk boundary coalesce into ONE jitted splice
+    dispatch whose executable compiles exactly once, whatever mix of
+    buckets and batch sizes the workload produces."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=3, max_len=64)
+    eng.warmup()
+    assert eng.admit_compiles == 1
+    for i in range(9):
+        plen = 1 + (5 * i) % 11          # several buckets, ragged refills
+        eng.submit(Request(rid=i, prompt=[(i + j) % cfg.vocab_size
+                                          for j in range(plen)],
+                           max_new_tokens=3 + i % 4))
+    done = eng.run()
+    assert len(done) == 9
+    assert eng.admit_compiles == 1
+
+
+def test_chunked_prefill_reuses_buckets():
+    """A prompt longer than the largest bucket runs as several
+    suffix-prefill segments (suffix-capable archs): no new bucket, no
+    bucket-growth recompile, token output identical to teacher
+    forcing."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, buckets=[8])
+    prompt = [(7 * j) % 200 + 1 for j in range(30)]
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+    (r,) = eng.run()
+    assert eng.buckets == [8]                  # reuse, don't grow
+    assert eng.prefill_compiles <= 1
+    full = prompt + r.out_tokens
+    dense = jax.jit(lambda p, b: forward_dense_logits(p, cfg, b))(
+        params, {"tokens": jnp.asarray([full], jnp.int32)})
+    for i, tok in enumerate(r.out_tokens):
+        pos = len(prompt) - 1 + i
+        assert int(jnp.argmax(dense[0, pos])) == tok, f"diverged at {i}"
+
+
+def test_chunked_prefill_matches_single_shot():
+    """Chunked prefill (buckets=[8]) and single-shot prefill (default
+    buckets) produce identical outputs for the same requests — including
+    a second request sharing the engine."""
+    cfg, params = _model("internlm2-1.8b")
+    prompts = [[(11 * j) % 250 + 1 for j in range(27)], [3, 1, 4]]
+    outs = []
+    for buckets in ([8], None):
+        eng = Engine(cfg, params, slots=2, max_len=64, buckets=buckets)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+        outs.append({r.rid: r.out_tokens for r in eng.run()})
+    assert outs[0] == outs[1]
+
+
+def test_chunked_prefill_non_capable_arch_grows_bucket():
+    """Archs without the suffix machinery (windowed layers) keep the old
+    fallback: the bucket list grows and output stays correct."""
+    cfg, params = _model("gemma2-2b")
+    eng = Engine(cfg, params, slots=1, max_len=96, buckets=[8])
+    prompt = [(5 * j) % 200 + 1 for j in range(22)]
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+    (r,) = eng.run()
+    assert eng.buckets != [8]                  # grew to cover the prompt
+    full = prompt + r.out_tokens
+    dense = jax.jit(lambda p, b: forward_dense_logits(p, cfg, b))(
+        params, {"tokens": jnp.asarray([full], jnp.int32)})
+    for i, tok in enumerate(r.out_tokens):
+        pos = len(prompt) - 1 + i
+        assert int(jnp.argmax(dense[0, pos])) == tok, f"diverged at {i}"
+
+
 def test_per_request_temperature_mixed_batch():
     """Greedy and sampled requests share one compiled decode step."""
     cfg, params = _model("internlm2-1.8b")

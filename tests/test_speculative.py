@@ -1,0 +1,304 @@
+"""Speculative decoding subsystem (serve/spec): drafter units, the
+rejection sampler's greedy/stochastic semantics, engine-level token
+parity (full-attention and ring-wrapped windowed archs), rollback of
+rejected drafts, EOS/budget clamping, self-speculation acceptance, the
+capability gate, and the sync-free/single-executable properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import forward_dense_logits, model_defs
+from repro.models import module as m
+from repro.serve import sampling
+from repro.serve.engine import Engine, Request
+from repro.serve.spec import SpecConfig, ngram_propose
+
+
+def _model(arch, **kw):
+    cfg = reduced(get_config(arch), **kw)
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    return cfg, params
+
+
+def _run(cfg, params, spec, reqs, **kw):
+    eng = Engine(cfg, params, spec=spec, **kw)
+    for i, (prompt, mx) in enumerate(reqs):
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=mx))
+    done = eng.run(max_steps=100_000)
+    assert len(done) == len(reqs)
+    return {r.rid: r.out_tokens for r in done}, eng
+
+
+# ---------------------------------------------------------------------------
+# Drafter units
+# ---------------------------------------------------------------------------
+
+def test_ngram_propose_lookup_and_fallbacks():
+    cap = 24
+    # 1 2 3 4 1 2 3 -> trailing (2,3) seen at pos 1 -> continue 4 1 2
+    h = np.zeros((1, cap + 1), np.int32)
+    h[0, :7] = [1, 2, 3, 4, 1, 2, 3]
+    d = ngram_propose(jnp.asarray(h), jnp.asarray([7]), k=3, n=2)
+    assert d.tolist() == [[4, 1, 2]]
+    # constant run: periodic extension keeps drafting the constant
+    h2 = np.zeros((1, cap + 1), np.int32)
+    h2[0, :10] = 7
+    d2 = ngram_propose(jnp.asarray(h2), jnp.asarray([10]), k=4, n=3)
+    assert d2.tolist() == [[7, 7, 7, 7]]
+    # period-2 cycle wraps through the period
+    h3 = np.zeros((1, cap + 1), np.int32)
+    h3[0, :10] = [3, 9] * 5
+    d3 = ngram_propose(jnp.asarray(h3), jnp.asarray([10]), k=5, n=3)
+    assert d3.tolist() == [[3, 9, 3, 9, 3]]
+    # no earlier match: repeat the last token (cheap fallback)
+    h4 = np.zeros((1, cap + 1), np.int32)
+    h4[0, :4] = [5, 6, 7, 8]
+    d4 = ngram_propose(jnp.asarray(h4), jnp.asarray([4]), k=2, n=2)
+    assert d4.tolist() == [[8, 8]]
+
+
+# ---------------------------------------------------------------------------
+# Accept/reject sampler semantics
+# ---------------------------------------------------------------------------
+
+def _onehot_logits(seq, v=11):
+    return jnp.asarray([[np.where(np.arange(v) == t, 5.0, -5.0)
+                         for t in seq]], jnp.float32)
+
+
+def test_spec_accept_greedy_is_exact():
+    """At temperature 0 the rule must reproduce sequential greedy: accept
+    while the draft matches the target argmax, then emit the argmax."""
+    logits = _onehot_logits([2, 3, 4, 5])          # [1, K+1=4, V]
+    t0 = jnp.zeros((1,), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    cand, n_acc = sampling.spec_accept(
+        logits, jnp.asarray([[2, 3, 4]]), None, t0, 0, key)
+    assert int(n_acc[0]) == 3 and cand[0, :4].tolist() == [2, 3, 4, 5]
+    cand, n_acc = sampling.spec_accept(
+        logits, jnp.asarray([[9, 3, 4]]), None, t0, 0, key)
+    assert int(n_acc[0]) == 0 and int(cand[0, 0]) == 2
+    cand, n_acc = sampling.spec_accept(
+        logits, jnp.asarray([[2, 9, 4]]), None, t0, 0, key)
+    assert int(n_acc[0]) == 1 and cand[0, :2].tolist() == [2, 3]
+
+
+def test_spec_accept_matches_target_distribution():
+    """Speculative sampling guarantee: whatever the proposal, the first
+    emitted token's marginal equals the target distribution."""
+    v, k = 5, 2
+    key = jax.random.PRNGKey(3)
+    plog = jax.random.normal(key, (1, k + 1, v)) * 1.5
+    qlog = jax.random.normal(jax.random.fold_in(key, 1), (1, k, v))
+    temp = jnp.ones((1,), jnp.float32)
+    qprobs = sampling.spec_probs(qlog, temp, 0)
+
+    def one(sample_key):
+        dk, ak = jax.random.split(sample_key)
+        drafts = jax.random.categorical(dk, qlog[0], axis=-1)[None]
+        cand, _ = sampling.spec_accept(plog, drafts.astype(jnp.int32),
+                                       qprobs, temp, 0, ak)
+        return cand[0, 0]
+
+    n = 6000
+    toks = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(7), n))
+    emp = np.bincount(np.asarray(toks), minlength=v) / n
+    want = np.asarray(sampling.spec_probs(plog, temp, 0))[0, 0]
+    np.testing.assert_allclose(emp, want, atol=0.03)
+
+
+def test_spec_update_budget_and_eos():
+    state = sampling.make_slot_state(2, 0, hist_cap=16)
+    state["active"] = jnp.asarray([True, True])
+    state["max_new"] = jnp.asarray([10, 2], jnp.int32)
+    state["eos"] = jnp.asarray([4, -1], jnp.int32)
+    state["hist_len"] = jnp.asarray([3, 3], jnp.int32)
+    cand = jnp.asarray([[2, 3, 4, 5], [7, 8, 9, 6]], jnp.int32)
+    st, emitted, n_emit = sampling.spec_update(
+        state, cand, jnp.asarray([3, 3], jnp.int32), jax.random.PRNGKey(1))
+    # slot 0 stops at its EOS (emits it); slot 1 is budget-clamped to 2
+    assert n_emit.tolist() == [3, 2]
+    assert emitted.tolist() == [[2, 3, 4, -1], [7, 8, -1, -1]]
+    assert st["active"].tolist() == [False, False]
+    assert st["hist"][0, 3:6].tolist() == [2, 3, 4]
+    assert st["tokens"].tolist() == [4, 8]
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity: drafted/verified decode must be invisible at T=0
+# ---------------------------------------------------------------------------
+
+def _ragged_reqs(cfg, n=5, max_new=9):
+    out = []
+    for i in range(n):
+        plen = 2 + (4 * i) % 7
+        out.append(([(5 * i + j) % cfg.vocab_size for j in range(plen)],
+                    max_new - i % 3))
+    return out
+
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_spec_ngram_matches_plain_engine(k):
+    cfg, params = _model("internlm2-1.8b")
+    reqs = _ragged_reqs(cfg)
+    base, _ = _run(cfg, params, None, reqs, slots=2, max_len=64)
+    spec, eng = _run(cfg, params, SpecConfig(draft="ngram", k=k), reqs,
+                     slots=2, max_len=64)
+    assert spec == base
+    assert eng.decode_compiles == 1 and eng.admit_compiles == 1
+
+
+def test_spec_windowed_ring_wrap_matches_teacher_forcing():
+    """gemma2's sliding-window rings wrap during a drafted run; the
+    spec-slack ring sizing must keep multi-token writes from clobbering
+    in-window history.  Teacher forcing is the oracle."""
+    cfg, params = _model("gemma2-2b")
+    window = next(b.window for b in cfg.blocks if b.window)
+    n_new = window + 10
+    _, eng = _run(cfg, params, SpecConfig(draft="ngram", k=4),
+                  [([3, 1, 4, 1, 5], n_new)], slots=1, max_len=96)
+    (r,) = eng.finished
+    full = r.prompt + r.out_tokens
+    dense = jax.jit(lambda p, b: forward_dense_logits(p, cfg, b))(
+        params, {"tokens": jnp.asarray([full], jnp.int32)})
+    for i, tok in enumerate(r.out_tokens):
+        pos = len(r.prompt) - 1 + i
+        assert int(jnp.argmax(dense[0, pos])) == tok, f"diverged at {i}"
+
+
+def test_model_drafter_self_speculation_accepts_everything():
+    """Draft model == target model: every draft must be accepted (the
+    strongest check that the draft cache stays position-exact through
+    commits and rollbacks) and output must stay token-identical."""
+    cfg, params = _model("internlm2-1.8b")
+    reqs = _ragged_reqs(cfg)
+    base, _ = _run(cfg, params, None, reqs, slots=2, max_len=64)
+    spec = SpecConfig(draft="self", k=3, draft_cfg=cfg, draft_params=params)
+    out, eng = _run(cfg, params, spec, reqs, slots=2, max_len=64)
+    st = eng.spec_stats()
+    assert out == base
+    assert st["acceptance_rate"] > 0.99, st
+    # k+1 = 4 tokens/step except where the generation budget clamps the
+    # final step of each request
+    assert st["tokens_per_step"] > 2.5, st
+
+
+def test_model_drafter_disagreeing_draft_still_exact():
+    """A random-weights draft model proposes near-garbage; rejection
+    sampling must still deliver the target's exact greedy output."""
+    cfg, params = _model("internlm2-1.8b")
+    dcfg, dparams = _model("internlm2-1.8b", layers=1, d_model=32, heads=2,
+                           d_ff=64)
+    reqs = _ragged_reqs(cfg, n=3)
+    base, _ = _run(cfg, params, None, reqs, slots=2, max_len=64)
+    spec = SpecConfig(draft="tiny", k=3, draft_cfg=dcfg,
+                      draft_params=dparams)
+    out, eng = _run(cfg, params, spec, reqs, slots=2, max_len=64)
+    assert out == base
+
+
+def test_spec_eos_and_budget():
+    cfg, params = _model("internlm2-1.8b")
+    probe, _ = _run(cfg, params, None, [([2, 3], 8)], slots=1, max_len=64)
+    eos = probe[0][3]
+    eng = Engine(cfg, params, slots=1, max_len=64, spec=SpecConfig(k=4))
+    eng.submit(Request(rid=0, prompt=[2, 3], max_new_tokens=8, eos_id=eos))
+    (r,) = eng.run()
+    assert r.out_tokens == probe[0][:4]          # truncated AT the eos
+    # budgets are exact even when a verify step could overshoot
+    out, _ = _run(cfg, params, SpecConfig(k=4),
+                  [([4, 5], 7), ([6], 3)], slots=2, max_len=64)
+    assert len(out[0]) == 7 and len(out[1]) == 3
+
+
+def test_spec_sampled_run_completes_and_mixes_temperatures():
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, spec=SpecConfig(k=3),
+                 seed=11)
+    eng.submit(Request(rid=0, prompt=[2, 3], max_new_tokens=6))
+    eng.submit(Request(rid=1, prompt=[2, 3], max_new_tokens=6,
+                       temperature=1.5))
+    done = {r.rid: r for r in eng.run()}
+    # the greedy slot must match a solo greedy run exactly
+    solo, _ = _run(cfg, params, SpecConfig(k=3), [([2, 3], 6)], slots=2,
+                   max_len=64)
+    assert done[0].out_tokens == solo[0]
+    assert len(done[1].out_tokens) == 6
+    assert all(0 <= t < cfg.vocab_size for t in done[1].out_tokens)
+
+
+def test_spec_chunk_is_sync_free():
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, spec=SpecConfig(k=4))
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=40))
+    eng.submit(Request(rid=1, prompt=[4, 5], max_new_tokens=40))
+    eng._admit()
+    with jax.transfer_guard_device_to_host("disallow"):
+        toks = eng.step_chunk()
+    eng._drain(toks)
+    assert eng.host_syncs == 1
+    assert eng.decode_compiles == 1
+
+
+def test_spec_pool_direct_reads_match_gather():
+    """Speculative verify over the pool-direct decode-attention path
+    (kernels/paged_attention multi-query lowering) must match the
+    gather-then-attend path token for token."""
+    cfg, params = _model("internlm2-1.8b")
+    reqs = _ragged_reqs(cfg, n=4)
+    gather, _ = _run(cfg, params, SpecConfig(k=4), reqs, slots=2,
+                     max_len=64, paged_kernel=False)
+    pooled, _ = _run(cfg, params, SpecConfig(k=4), reqs, slots=2,
+                     max_len=64, paged_kernel=True)
+    assert pooled == gather
+
+
+def test_spec_capability_gate():
+    for arch in ("rwkv6-7b", "zamba2-7b"):
+        cfg, params = _model(arch)
+        with pytest.raises(ValueError, match="speculative"):
+            Engine(cfg, params, slots=1, max_len=32, spec=SpecConfig(k=2))
+
+
+def test_spec_warmup_inert_and_compile_counts():
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, spec=SpecConfig(k=4))
+    eng.warmup()
+    n_pre, n_dec, n_adm = (eng.prefill_compiles, eng.decode_compiles,
+                           eng.admit_compiles)
+    assert n_dec == 1 and n_adm == 1
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[1 + i] * (2 + 7 * i),
+                           max_new_tokens=5))
+    done = eng.run()
+    assert len(done) == 3
+    assert (eng.prefill_compiles, eng.decode_compiles,
+            eng.admit_compiles) == (n_pre, n_dec, n_adm)
+    # warmup contributed nothing to the telemetry counters
+    st = eng.spec_stats()
+    assert st["emitted_tokens"] == sum(len(r.out_tokens) for r in done) - 3
+
+
+def test_spec_with_prefix_sharing_matches_exclusive():
+    """Speculation on top of radix prefix sharing: shared pages are CoW'd
+    at admission, drafted writes never touch them, and outputs stay
+    token-identical to the exclusive-ownership speculative engine."""
+    cfg, params = _model("internlm2-1.8b")
+    prefix = [(3 * j) % 200 + 1 for j in range(16)]
+    tail = [50, 51, 52, 53, 54, 55, 56, 57]
+    reqs = [(prefix + tail, 8),                  # indexes 3 full pages
+            (prefix + tail[:3] + [99], 8),       # partial page-2 match: CoW
+            (prefix + tail, 8),                  # full re-hit
+            (prefix + tail[:2] + [7, 8], 8)]     # second partial match
+    excl, _ = _run(cfg, params, SpecConfig(k=4), reqs, slots=2, max_len=64,
+                   prefix_sharing=False)
+    shared, eng = _run(cfg, params, SpecConfig(k=4), reqs, slots=2,
+                       max_len=64)
+    assert shared == excl
+    ps = eng.prefix_stats()
+    assert ps["prefix_hits"] >= 3 and ps["cow_copies"] >= 2
+    assert eng.scheduler.pages_in_use == eng.scheduler.radix.node_count
