@@ -19,6 +19,11 @@ in the same CI job) against the committed baseline run and fails when:
   tokens/sec fell more than ``--threshold`` below gather-then-attend on
   the oversubscribed-pool workload (a same-machine comparison, so no
   normalization is needed);
+* the fault-tolerance workload regressed — the oversubscribed-pool run
+  stopped preempting (pressure path inert), goodput (deadline
+  attainment) fell below 0.8, preempted-then-resumed outputs diverged
+  from the uncontended engine at temperature 0, pages leaked at drain,
+  the chunk stopped being sync-free, or the decode executable retraced;
 * tokens/sec dropped more than ``--threshold`` (default 25%) vs the
   baseline.  CI machines differ from the machine that committed the
   baseline, so the comparison is machine-normalized: both runs also
@@ -208,6 +213,48 @@ def check(runs, threshold: float) -> int:
         failures.append("candidate run dropped the speculative workload "
                         "(spec_* fields missing)")
 
+    # ---- fault-tolerance gates (oversubscribed pool + deadlines, same
+    # run).  The engine must survive the pressure — preempt and resume
+    # token-identically — not throw at it or leak pages.
+    if "ft_goodput" in cand:
+        if not cand.get("ft_outputs_match", False):
+            failures.append(
+                "fault-tolerance correctness regressed: preempted-then-"
+                "resumed outputs diverged from the uncontended engine at "
+                "temperature 0")
+        if not cand.get("ft_preemptions", 0) >= 1:
+            failures.append(
+                "fault-tolerance workload inert: the oversubscribed pool "
+                "produced no preemptions (pressure path never exercised)")
+        if cand.get("ft_goodput", 0.0) < 0.8:
+            failures.append(
+                "fault-tolerance goodput < 0.8: deadline attainment "
+                f"{cand.get('ft_goodput', 0.0):.2f} on the oversubscribed "
+                "workload (only the doomed request may miss)")
+        if cand.get("ft_leaked_pages", 0) != 0:
+            failures.append(
+                "fault-tolerance run leaked pages at drain "
+                f"({cand.get('ft_leaked_pages')}) — a refcount leak in "
+                "the preempt/reap/resume path")
+        if not cand.get("ft_decode_sync_free", True):
+            failures.append("fault-tolerance decode chunk performed a "
+                            "device->host transfer")
+        if cand.get("ft_decode_compiles", 1) != 1:
+            failures.append(
+                "fault-tolerance workload retraced the decode chunk "
+                f"({cand.get('ft_decode_compiles')} compiles) — "
+                "preemption/resume must reuse the one executable")
+        print(f"fault tolerance: goodput={cand.get('ft_goodput', 0.0):.2f} "
+              f"preemptions={cand.get('ft_preemptions')} "
+              f"resumes={cand.get('ft_resumes')} "
+              f"recovered_prefill="
+              f"{cand.get('ft_recovered_prefill_fraction', 0.0):.2f} "
+              f"match={cand.get('ft_outputs_match')} "
+              f"leaked={cand.get('ft_leaked_pages')}")
+    elif "ft_goodput" in base:
+        failures.append("candidate run dropped the fault-tolerance "
+                        "workload (ft_* fields missing)")
+
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
@@ -215,7 +262,9 @@ def check(runs, threshold: float) -> int:
     print("serve bench OK: sync-free, single decode + admission "
           "executables, tokens/sec within threshold, prefix sharing "
           "correct, paged-kernel decode gather-free and token-identical, "
-          "speculative decode token-identical and >= 1.2x")
+          "speculative decode token-identical and >= 1.2x, "
+          "fault tolerance preempts/resumes token-identically with "
+          "goodput >= 0.8 and zero leaked pages")
     return 0
 
 

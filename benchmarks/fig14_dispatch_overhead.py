@@ -26,6 +26,13 @@ K=4 — ``serve/spec``) on a repetitive-text workload: greedy token parity
 vs the non-speculative engine and the dense reference, acceptance rate,
 committed tokens per verify step, and steady-state decode tokens/sec vs
 the plain engine (gated >= 1.2x by check_serve_regression).
+
+``fault_tolerance_comparison`` oversubscribes the page pool (full slot
+occupancy impossible) with per-request deadlines: the engine must
+preempt/resume instead of throwing, and the workload gates goodput
+(deadline attainment), >= 1 preemption, token parity of the
+preempted-then-resumed run vs an uncontended engine, zero leaked pages,
+and the same sync-free single-executable decode properties.
 """
 
 import time
@@ -431,6 +438,125 @@ def speculative_comparison(max_new: int = 48) -> dict:
     return rec
 
 
+def fault_tolerance_comparison(n_req: int = 8, max_new: int = 16) -> dict:
+    """Oversubscribed pool + deadlines: survive instead of throwing.
+
+    The pool is sized so full slot occupancy is impossible (4 slots that
+    would reserve 16 worst-case pages against a 12-page budget), so the
+    engine MUST preempt — fewest-tokens-decoded victims are evicted with
+    their prompt pages preserved in the radix index, requeued, and
+    resumed with generated-so-far tokens replayed as prompt tail.  One
+    extra request is submitted with an already-expired deadline and must
+    be reaped as TIMED_OUT, never occupying a slot.
+
+    Reports (gated by check_serve_regression): goodput = deadline
+    attainment over everything submitted (deterministically
+    ``n_req / (n_req + 1)`` — the live requests carry generous
+    deadlines, the doomed one can never make it), preemption / resume
+    counts (>= 1 required), recovered-prefill fraction of resumed
+    admissions, token parity of the preempted-then-resumed run against
+    an uncontended engine at temperature 0, zero leaked pages at drain,
+    and the usual structural properties: ONE decode executable,
+    sync-free chunk.
+
+    The recovered-prefill fraction is reported, not gated: under pure
+    page pressure the preserved prefix pages are refcount-1 radix
+    leaves, and the admission that triggered the eviction usually
+    reclaims them immediately — recovery pays off when preemption is
+    NOT page-bound (watchdog / chaos storms; see the --chaos launch
+    path and tests/test_fault_tolerance.py, where the fraction is
+    nonzero)."""
+    from repro.configs import get_config, reduced
+    from repro.models import model_defs
+    from repro.models import module as m
+    from repro.serve.engine import Engine, Request
+    from repro.serve.scheduler import RequestStatus
+
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    kw = dict(slots=4, max_len=64, page_size=8, sync_interval=8)
+    prompts = [[(3 * i + j) % 250 + 1 for j in range(2 + (5 * i) % 11)]
+               for i in range(n_req)]
+
+    def load(eng, ttl=None, doomed=False):
+        for i, p in enumerate(prompts):
+            assert eng.submit(Request(rid=i, prompt=list(p),
+                                      max_new_tokens=max_new,
+                                      ttl=ttl)) is None
+        if doomed:
+            # deadline in the past (monotonic clock starts > 0): reaped
+            # as TIMED_OUT at the first chunk boundary, no slot wasted
+            assert eng.submit(Request(rid=n_req, prompt=[1, 2, 3],
+                                      max_new_tokens=max_new,
+                                      deadline=0.0)) is None
+        done = eng.run(max_steps=100_000)
+        assert len(done) == n_req + (1 if doomed else 0)
+        out = {r.rid: list(r.out_tokens) for r in done
+               if r.status == RequestStatus.FINISHED}
+        statuses = {r.rid: r.status for r in done}
+        preempted = sorted(r.rid for r in done if r.preemptions > 0)
+        eng.finished = []
+        return out, statuses, preempted
+
+    # uncontended oracle: ample pages (the default slots*max_len/P
+    # budget), no deadlines — every request runs solo-quality
+    calm = Engine(cfg, params, **kw)
+    calm.warmup()
+    out_calm, _, calm_preempted = load(calm)
+    assert not calm_preempted, "uncontended run must not preempt"
+
+    # oversubscribed: 12 pages vs 16 worst-case for full occupancy
+    eng = Engine(cfg, params, num_pages=12, **kw)
+    eng.warmup()
+    out_ft, statuses, preempted = load(eng, ttl=600.0, doomed=True)
+    fs = eng.fault_stats()
+
+    submitted = n_req + 1
+    goodput = len(out_ft) / submitted
+    outputs_match = out_ft == out_calm
+    timed_out = sum(1 for s in statuses.values()
+                    if s == RequestStatus.TIMED_OUT)
+    leaked = eng.leaked_pages()
+
+    sync_free = True
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            toks = eng.step_chunk()
+    except Exception as e:  # noqa: BLE001 - classify, don't swallow
+        if "transfer" not in str(e).lower():
+            raise
+        sync_free = False
+    else:
+        eng._drain(toks)
+
+    rec = {
+        "ft_requests": submitted,
+        "ft_goodput": goodput,
+        "ft_preemptions": fs["preemptions"],
+        "ft_pressure_preemptions": fs["pressure_preemptions"],
+        "ft_resumes": fs["resumes"],
+        "ft_preempted_requests": len(preempted),
+        "ft_outputs_match": outputs_match,
+        "ft_recovered_prefill_fraction": fs["recovered_prefill_fraction"],
+        "ft_resume_replayed_tokens": fs["resume_replayed_tokens"],
+        "ft_timed_out": timed_out,
+        "ft_leaked_pages": leaked,
+        "ft_num_pages": 12,
+        "ft_peak_pages": eng.scheduler.peak_pages_in_use,
+        "ft_decode_compiles": eng.decode_compiles,
+        "ft_decode_sync_free": sync_free,
+    }
+    emit("fig14.ft_goodput", goodput,
+         f"preemptions={fs['preemptions']},"
+         f"resumes={fs['resumes']},"
+         f"preempted_reqs={len(preempted)},match={outputs_match}")
+    emit("fig14.ft_recovered_prefill", fs["recovered_prefill_fraction"],
+         f"timed_out={timed_out},leaked={leaked},"
+         f"peak_pages={rec['ft_peak_pages']}/12")
+    return rec
+
+
 def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     from repro.configs import get_config, reduced
     from repro.models import model_defs
@@ -580,6 +706,7 @@ def main() -> None:
     rec.update(shared_prefix_comparison())
     rec.update(paged_kernel_comparison())
     rec.update(speculative_comparison())
+    rec.update(fault_tolerance_comparison())
     path = write_bench_json("BENCH_serve.json", rec)
     print(f"# serve trajectory appended to {path}", flush=True)
 

@@ -79,6 +79,23 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--warmup", action="store_true",
                     help="pre-compile prefill buckets + decode chunk")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="run under a seeded fault-injection schedule "
+                         "(serve/chaos.py smoke preset: admission "
+                         "denials, preemption storms, slot stalls, "
+                         "CoW degradation); asserts every request "
+                         "reaches a clean terminal status and zero "
+                         "pages leak at drain")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound the admission queue; overflow is "
+                         "handled by --shed-policy")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=["reject", "block", "evict-lru-prefix"],
+                    help="load-shedding at a full admission queue")
+    ap.add_argument("--ttl", type=float, default=None,
+                    help="per-request deadline in seconds from submit; "
+                         "expired requests are reaped as TIMED_OUT at "
+                         "the next chunk boundary")
     args = ap.parse_args()
 
     import jax
@@ -87,7 +104,9 @@ def main() -> None:
     from repro.configs import get_config, reduced
     from repro.models import model_defs
     from repro.models import module as m
+    from repro.serve.chaos import ChaosMonkey
     from repro.serve.engine import Engine, Request
+    from repro.serve.scheduler import RequestStatus
 
     from repro.serve.spec import SpecConfig
 
@@ -97,6 +116,9 @@ def main() -> None:
     spec = None
     if args.spec_draft != "off":
         spec = SpecConfig(draft=args.spec_draft, k=args.spec_k)
+    chaos = None
+    if args.chaos is not None:
+        chaos = ChaosMonkey.smoke(args.chaos)
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
                  page_size=args.page_size, num_pages=args.num_pages,
                  prefix_sharing=not args.no_prefix_sharing,
@@ -104,7 +126,10 @@ def main() -> None:
                                "off": False}[args.paged_kernel],
                  spec=spec,
                  temperature=args.temperature, top_k=args.top_k,
-                 sync_interval=args.sync_interval)
+                 sync_interval=args.sync_interval,
+                 queue_limit=args.queue_limit,
+                 shed_policy=args.shed_policy,
+                 chaos=chaos)
     if args.warmup:
         t0 = time.perf_counter()
         eng.warmup()
@@ -113,10 +138,13 @@ def main() -> None:
               f"{time.perf_counter() - t0:.2f}s")
     t0 = time.perf_counter()
     head = [1 + (3 * j) % 97 for j in range(max(args.shared_prefix, 0))]
+    submitted = []
     for i in range(args.requests):
-        eng.submit(Request(rid=i, prompt=head + [1 + i, 2, 3, 4 + i % 3],
-                           max_new_tokens=args.max_new))
-    done = eng.run()
+        req = Request(rid=i, prompt=head + [1 + i, 2, 3, 4 + i % 3],
+                      max_new_tokens=args.max_new, ttl=args.ttl)
+        submitted.append(req)
+        eng.submit(req)
+    done = eng.run(max_steps=100_000 if chaos is not None else 1000)
     dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
     for r in sorted(done, key=lambda r: r.rid):
@@ -144,6 +172,31 @@ def main() -> None:
               f"({ss['accepted_tokens']}/{ss['drafted_tokens']} drafts), "
               f"{ss['tokens_per_step']:.2f} tokens/verify-step over "
               f"{ss['spec_steps']} steps")
+    fs = eng.fault_stats()
+    print(f"faults: {fs['preemptions']} preemptions "
+          f"({fs['pressure_preemptions']} pressure / "
+          f"{fs['chaos_preemptions']} chaos / "
+          f"{fs['watchdog_preemptions']} watchdog), "
+          f"{fs['resumes']} resumes "
+          f"(recovered_prefill={fs['recovered_prefill_fraction']:.2f}), "
+          f"{fs['timed_out']} timed out, {fs['cancelled']} cancelled, "
+          f"{fs['rejected']} rejected, "
+          f"{eng.leaked_pages()} leaked pages")
+    if chaos is not None:
+        cs = fs["chaos"]
+        print(f"chaos[seed={cs['seed']}]: "
+              f"{cs['admission_denials']} admission denials, "
+              f"{cs['forced_preemptions']} forced preemptions, "
+              f"{cs['stalls_started']} stalls, "
+              f"{cs['sharing_faults']} sharing faults")
+        bad = [r for r in submitted
+               if r.status not in RequestStatus.TERMINAL]
+        assert not bad, f"non-terminal requests after drain: " \
+            f"{[(r.rid, r.status) for r in bad]}"
+        assert eng.leaked_pages() == 0, \
+            f"leaked {eng.leaked_pages()} pages at drain"
+        print("chaos: clean drain (all terminal statuses, zero leaked "
+              "pages)")
     ps = eng.prefix_stats()
     if ps["prefix_sharing"]:
         print(f"prefix sharing: hit_rate={ps['prefix_hit_rate']:.2f} "

@@ -43,7 +43,8 @@ per-token-sync loop as the measurement baseline and equivalence oracle for
 from __future__ import annotations
 
 import contextlib
-from typing import Any, Dict, List, Optional
+import time
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,8 +58,10 @@ from repro.parallel import sharding as sh
 from repro.serve import cache as cache_mod
 from repro.serve import sampling
 from repro.serve.cache import CacheSpec, empty_batch_cache  # noqa: F401
+from repro.serve.chaos import ChaosMonkey, GarbageDrafter  # noqa: F401
 from repro.serve.scheduler import (Admission, PagePoolExhausted,  # noqa: F401
-                                   Request, Scheduler)
+                                   Request, RequestRejected, RequestStatus,
+                                   Scheduler)
 from repro.serve.spec import (ModelDrafter, NGramDrafter, SpecConfig,
                               check_spec_capable)
 
@@ -114,12 +117,14 @@ class Executor:
             self._free_fn = jax.jit(self._free_impl, donate_argnums=(0,))
             self._copy_fn = jax.jit(self._copy_impl, donate_argnums=(0,),
                                     static_argnums=(3,))
+            self._deact_fn = jax.jit(self._deact_impl, donate_argnums=(0,))
         else:
             self._admit_fn = jax.jit(self._admit_impl)
             self._splice_fn = jax.jit(self._splice_impl)
             self._chunk_fn = jax.jit(self._chunk_impl)
             self._free_fn = jax.jit(self._free_impl)
             self._copy_fn = jax.jit(self._copy_impl, static_argnums=(3,))
+            self._deact_fn = jax.jit(self._deact_impl)
 
     def _ctx(self):
         """Sharding rules are a tracing-time thread-local; enter them for
@@ -219,15 +224,20 @@ class Executor:
         return out
 
     def _admit_impl(self, cache, state, one_caches, draft_caches, slots_v,
-                    starts, plens, rows, first_toks, max_news, eoss,
-                    temps, valids, hist_toks):
+                    starts, plens, rows, first_toks, out_lens, max_news,
+                    eoss, temps, valids, hist_toks):
         """Batched jitted admission: ONE splice dispatch applies every
         admission a chunk boundary produced.  All per-admission operands
         are padded to ``spec.slots`` entries (``valids`` masks the
         padding — a disabled entry's pool writes land on trash pages and
         its table/len/state keep their prior values), and every prefill
         cache arrives padded to the largest bucket, so the executable
-        count stays at exactly 1 however many slots fill at once."""
+        count stays at exactly 1 however many slots fill at once.
+
+        ``out_lens`` is the slot's initial generated-token count: 1 for a
+        fresh request, ``len(out_tokens) + 1`` for a preempted request
+        being resumed (its replayed tokens already count against
+        ``max_new``, so the budget check needs no special casing)."""
         st = dict(state)
         for i in range(self.spec.slots):
             sl = slots_v[i]
@@ -243,11 +253,14 @@ class Executor:
                 return vec.at[sl].set(jnp.where(en, new, vec[sl]))
 
             st["tokens"] = setv(st["tokens"], first_toks[i][0])
-            st["out_len"] = setv(st["out_len"], 1)
+            st["out_len"] = setv(st["out_len"], out_lens[i])
             st["max_new"] = setv(st["max_new"], max_news[i])
             st["eos"] = setv(st["eos"], eoss[i])
             st["temp"] = setv(st["temp"], temps[i])
-            st["active"] = setv(st["active"], True)
+            # active only while budget remains past the prefill-sampled
+            # token: a resume whose pending token is its last (and a
+            # fresh max_new=1 request) must not decode a step beyond it
+            st["active"] = setv(st["active"], out_lens[i] < max_news[i])
             if hist_toks is not None:
                 cap = self.hist_cap
                 row = jnp.where(jnp.arange(cap) < plens[i], hist_toks[i], 0)
@@ -328,6 +341,13 @@ class Executor:
     def _free_impl(self, cache, slot):
         return cache_mod.free_slot_cache(self.spec, cache, slot)
 
+    def _deact_impl(self, state, slot):
+        """Clear a slot's active flag (preemption / reaping at a chunk
+        boundary): its dead-tail decode steps stop sampling and — with
+        the table rows re-trashed by ``free_slot`` — cannot write KV
+        anywhere that matters."""
+        return dict(state, active=state["active"].at[slot].set(False))
+
     def _copy_impl(self, cache, src, dst, group_key):
         """Copy-on-write: duplicate page ``src`` into ``dst`` across the
         sharing group's layer pools before the owner slot writes."""
@@ -371,6 +391,10 @@ class Executor:
     def free_slot(self, cache, slot):
         with self._ctx():
             return self._free_fn(cache, slot)
+
+    def deactivate(self, state, slot):
+        with self._ctx():
+            return self._deact_fn(state, slot)
 
     # ----------------------------------------------------------- telemetry
     @property
@@ -422,7 +446,13 @@ class Engine:
                  paged_kernel: Any = "auto",
                  spec: Any = None,
                  rules: Optional[sh.Rules] = None,
-                 donate: Any = "auto"):
+                 donate: Any = "auto",
+                 preemption: bool = True,
+                 queue_limit: Optional[int] = None,
+                 shed_policy: str = "reject",
+                 clock: Optional[Callable[[], float]] = None,
+                 stall_patience: int = 0,
+                 chaos: Optional[ChaosMonkey] = None):
         if cfg.cross_attention:
             raise NotImplementedError(
                 "Engine serves decoder-only archs; whisper uses "
@@ -482,6 +512,11 @@ class Engine:
                     self.draft_params = m.init_params(
                         model_defs(dcfg), jax.random.PRNGKey(seed + 17),
                         jnp.float32)
+        if chaos is not None and chaos.garbage_drafter \
+                and self.drafter is not None:
+            # fault isolation: rejection sampling keeps output
+            # token-identical however bad the drafts are
+            self.drafter = GarbageDrafter(self.drafter)
         # the token-history buffer is the n-gram drafter's lookup corpus;
         # a model drafter never reads it, so it pays neither the buffer
         # nor the per-step scatter
@@ -518,14 +553,42 @@ class Engine:
 
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._slot_first_tok: List[Optional[jax.Array]] = [None] * slots
+        # True while a slot's prefill-sampled token sits on device but
+        # has not been drained into req.out_tokens yet (resumed requests
+        # arrive with a non-empty out_tokens, so "is out_tokens empty"
+        # cannot stand in for this flag)
+        self._slot_first_pending: List[bool] = [False] * slots
+        self._slot_stale: List[int] = [0] * slots
         self.cache = self._empty_cache()
         self.state = sampling.make_slot_state(slots, seed,
                                               hist_cap=self._hist_cap,
                                               spec=spec_cfg is not None)
         self._key = jax.random.PRNGKey(seed + 1)
         self.finished: List[Request] = []
+        self.rejected: List[Request] = []
         self.steps = 0
         self.host_syncs = 0
+
+        # ---- robustness: preemption / deadlines / admission control
+        self.preemption = bool(preemption)
+        self.queue_limit = queue_limit
+        if shed_policy not in ("reject", "block", "evict-lru-prefix"):
+            raise ValueError(f"shed_policy must be 'reject', 'block' or "
+                             f"'evict-lru-prefix', got {shed_policy!r}")
+        self.shed_policy = shed_policy
+        self._clock = clock if clock is not None else time.monotonic
+        self.chaos = chaos
+        self.scheduler.chaos = chaos
+        if chaos is not None and chaos.p_stall > 0 and stall_patience <= 0:
+            stall_patience = 4   # a stall must end in watchdog recovery
+        self.stall_patience = int(stall_patience)
+        self.fault_counters: Dict[str, int] = {
+            "preemptions": 0, "pressure_preemptions": 0,
+            "chaos_preemptions": 0, "watchdog_preemptions": 0,
+            "resumes": 0, "timed_out": 0, "cancelled": 0,
+            "rejected": 0, "rejected_infeasible": 0,
+            "rejected_queue_full": 0,
+        }
 
     # -------------------------------------------------------------- setup
     def _empty_cache(self):
@@ -575,6 +638,44 @@ class Engine:
         shared-page attaches, CoW copies, radix evictions)."""
         return self.scheduler.prefix_stats()
 
+    def fault_stats(self) -> Dict[str, Any]:
+        """Robustness telemetry: preemption / resume / timeout /
+        cancellation / rejection counters, the recovered-prefill fraction
+        of resumed admissions (replayed tokens that rode on radix pages
+        instead of being recomputed), and the chaos schedule's own event
+        counts when fault injection is active."""
+        sched = self.scheduler
+        stats: Dict[str, Any] = dict(self.fault_counters)
+        stats["resume_admissions"] = sched.resume_admissions
+        stats["resume_replayed_tokens"] = sched.resume_replayed_tokens
+        stats["resume_recovered_tokens"] = sched.resume_recovered_tokens
+        stats["recovered_prefill_fraction"] = (
+            sched.resume_recovered_tokens / sched.resume_replayed_tokens
+            if sched.resume_replayed_tokens else 0.0)
+        if self.chaos is not None:
+            stats["chaos"] = self.chaos.stats()
+        return stats
+
+    def leaked_pages(self) -> int:
+        """Pages still leased beyond what live slots and the radix index
+        legitimately hold — at full drain (no live slots, empty queue)
+        anything nonzero is a refcount leak.  The CI chaos smoke asserts
+        this is 0 after every fault schedule."""
+        sched = self.scheduler
+        leaked = 0
+        for key, pool in sched.pools.items():
+            accounted = set()
+            for lease in sched._leases.values():
+                accounted.update(lease.get(key, ()))
+            if sched.radix is not None and key == sched.share_key:
+                stack = list(sched.radix.root.children.values())
+                while stack:
+                    node = stack.pop()
+                    stack.extend(node.children.values())
+                    accounted.add(node.page)
+            leaked += pool.in_use - len(accounted)
+        return leaked
+
     def spec_stats(self) -> Dict[str, Any]:
         """Speculative-decoding telemetry: acceptance rate (accepted
         drafts / proposed drafts) and committed tokens per verify step,
@@ -601,9 +702,21 @@ class Engine:
         }
 
     # ------------------------------------------------------------ serving
-    def submit(self, req: Request) -> None:
-        # validate HERE, where the caller can handle it: raising mid-run()
-        # would drop the request and strand in-flight slots
+    def submit(self, req: Request) -> Optional[RequestRejected]:
+        """Enqueue a request, or shed it with a typed result.
+
+        Never raises ``PagePoolExhausted``: a request whose worst-case
+        reservation exceeds the pool's total budget gets an
+        ``"infeasible"`` ``RequestRejected`` (queueing it would wedge the
+        head of the line), and one arriving at a full bounded queue is
+        handled by ``shed_policy`` — ``"reject"`` sheds it immediately,
+        ``"block"`` drives the engine until the queue drains (submission
+        backpressure), ``"evict-lru-prefix"`` first reclaims unreferenced
+        radix prefix pages and drains the queue into freed slots, then
+        sheds only if the queue is still full.  Returns ``None`` when the
+        request was accepted.  ``ValueError`` for requests violating the
+        ``max_len`` contract still raises — that is a caller bug, not
+        load."""
         if len(req.prompt) + req.max_new_tokens > self.max_len \
                 and not self.cfg.supports_long_context:
             # full-attention page tables cap at max_len tokens; a longer
@@ -616,7 +729,61 @@ class Engine:
                 f"{req.max_new_tokens} exceeds max_len={self.max_len} "
                 f"and {self.cfg.name} has non-windowed attention; raise "
                 "max_len or lower max_new_tokens")
-        self.scheduler.submit(req)   # may raise PagePoolExhausted
+        try:
+            self.scheduler.validate(req)
+        except PagePoolExhausted as e:
+            return self._reject(req, "infeasible", str(e))
+        if req.deadline is None and req.ttl is not None:
+            req.deadline = self._clock() + req.ttl
+        if self.queue_limit is not None \
+                and len(self.scheduler.queue) >= self.queue_limit:
+            shed = self._shed(req)
+            if shed is not None:
+                return shed
+        self.scheduler.submit(req)
+        return None
+
+    def _reject(self, req: Request, kind: str,
+                reason: str) -> RequestRejected:
+        req.status = RequestStatus.REJECTED
+        req.reject_reason = reason
+        req.done = True
+        self.fault_counters["rejected"] += 1
+        self.fault_counters[f"rejected_{kind}"] += 1
+        self.rejected.append(req)
+        return RequestRejected(req=req, kind=kind, reason=reason)
+
+    def _shed(self, req: Request) -> Optional[RequestRejected]:
+        """Apply the shed policy to a submission hitting a full queue.
+        Returns the rejection, or None once there is room."""
+        def room() -> bool:
+            return len(self.scheduler.queue) < self.queue_limit
+
+        if self.shed_policy == "block":
+            # submission backpressure: run the engine until the queue
+            # drains (bounded — every step finishes or reaps work)
+            for _ in range(100_000):
+                if room():
+                    return None
+                if not (self.scheduler.queue or self._live()):
+                    break
+                self.step()
+            if room():
+                return None
+        elif self.shed_policy == "evict-lru-prefix":
+            sched = self.scheduler
+            if sched.radix is not None:
+                pool = sched.pools[sched.share_key]
+                while sched.radix.evict_one(pool) is not None:
+                    sched.radix_evictions += 1
+            self._reap()
+            self._admit()
+            if room():
+                return None
+        return self._reject(
+            req, "queue_full",
+            f"admission queue full ({self.queue_limit} waiting, "
+            f"shed_policy={self.shed_policy})")
 
     def bucket_for(self, plen: int) -> int:
         for b in self.buckets:
@@ -671,6 +838,7 @@ class Engine:
             jnp.asarray([en["plen"] for en in ent], jnp.int32),
             rows,
             tuple(en["tok"] for en in ent),
+            jnp.asarray([en["out_len0"] for en in ent], jnp.int32),
             jnp.asarray([en["max_new"] for en in ent], jnp.int32),
             jnp.asarray([en["eos"] for en in ent], jnp.int32),
             jnp.asarray([en["temp"] for en in ent], jnp.float32),
@@ -702,7 +870,7 @@ class Engine:
                     self.draft_params, tokens, length, pad_to)
             entry = {"slot": 0, "start": 0, "plen": 0, "rows": trash_rows,
                      "tok": tok, "one_cache": one_cache, "draft": draft,
-                     "max_new": 0, "eos": -1, "temp": 0.0,
+                     "out_len0": 1, "max_new": 0, "eos": -1, "temp": 0.0,
                      "hist": np.zeros((self._hist_cap,), np.int32)}
             self._batched_admit([entry], [False])
         _, self.cache, self.state = self.executor.chunk(
@@ -736,12 +904,13 @@ class Engine:
         beyond the (segment bucket, ctx bucket) pairs sharing already
         pays for."""
         req, slot = adm.req, adm.slot
-        plen = len(req.prompt)
+        prompt = req.effective_prompt
+        plen = len(prompt)
         bmax = self.buckets[-1]
         rows = {k: jnp.asarray(v) for k, v in adm.rows.items()}
         cur = s
         while plen - cur > bmax:
-            seg = list(req.prompt[cur:cur + bmax])
+            seg = list(prompt[cur:cur + bmax])
             self._key, sub = jax.random.split(self._key)
             temp = jnp.zeros((1,), jnp.float32)
             if cur == 0:
@@ -763,6 +932,125 @@ class Engine:
         return cur
 
     def _admit(self) -> None:
+        """Chunk-boundary admission with pool-pressure preemption: admit
+        while the queue head fits; when it does not but a slot is free
+        (pages, not slots, are the bottleneck), evict a victim — fewest
+        tokens decoded first, most radix-recoverable on ties — and retry.
+        Victims requeue at the back and resume through the radix/suffix
+        path; each carries a ``max_preemptions`` cap, and at most
+        ``slots`` evictions happen per boundary, so admission cannot
+        livelock."""
+        if self.chaos is not None and self._live() \
+                and self.chaos.deny_admission():
+            return   # injected admission-time exhaustion (delay, not loss)
+        self._do_admissions()
+        if not self.preemption:
+            return
+        guard = 0
+        while self.scheduler.queue and guard < self.slots \
+                and any(r is None for r in self._slot_req):
+            victim = self._pick_victim()
+            if victim is None:
+                return
+            guard += 1
+            qlen = len(self.scheduler.queue)
+            self._preempt_slot(victim, "pressure")
+            self._do_admissions()
+            if len(self.scheduler.queue) > qlen:
+                return   # eviction did not unblock the head; stop churning
+
+    def _pick_victim(self) -> Optional[int]:
+        """Victim policy: fewest tokens decoded (least work lost), then
+        most radix-recoverable pages (cheapest to resume), then lowest
+        slot.  Slots at their preemption cap are never picked."""
+        best, best_score = None, None
+        P = self.spec.page_size
+        for slot in range(self.slots):
+            req = self._slot_req[slot]
+            if req is None or req.preemptions >= req.max_preemptions:
+                continue
+            valid = len(req.effective_prompt) - (1 if req.out_tokens else 0)
+            recoverable = valid // P if self.scheduler.radix is not None \
+                else 0
+            score = (len(req.out_tokens), -recoverable, slot)
+            if best_score is None or score < best_score:
+                best, best_score = slot, score
+        return best
+
+    def _clear_slot(self, slot: int) -> None:
+        """Device+host teardown shared by preemption and reaping: drop
+        page references, re-trash the table rows, clear the active flag
+        so the next chunk's dead-tail steps neither sample nor write."""
+        self._slot_req[slot] = None
+        self._slot_first_tok[slot] = None
+        self._slot_first_pending[slot] = False
+        self._slot_stale[slot] = 0
+        if self.chaos is not None:
+            self.chaos.clear_stall(slot)
+        self.scheduler.release(slot)
+        self.cache = self.executor.free_slot(self.cache, jnp.int32(slot))
+        self.state = self.executor.deactivate(self.state, jnp.int32(slot))
+
+    def _finish_terminal(self, req: Request, status: str) -> None:
+        req.status = status
+        req.done = True
+        if status == RequestStatus.TIMED_OUT:
+            self.fault_counters["timed_out"] += 1
+        elif status == RequestStatus.CANCELLED:
+            self.fault_counters["cancelled"] += 1
+        self.finished.append(req)
+
+    def _evict_slot(self, slot: int, status: str) -> None:
+        req = self._slot_req[slot]
+        self._clear_slot(slot)
+        self._finish_terminal(req, status)
+
+    def _preempt_slot(self, slot: int, why: str) -> None:
+        """Evict a running slot and requeue its request for resumption.
+        The request's generated-so-far tokens replay as prompt tail on
+        re-admission; full pages are preserved in the radix index first,
+        so the resume's prefill recovers them as a prefix hit instead of
+        recomputing."""
+        req = self._slot_req[slot]
+        if len(req.out_tokens) >= req.max_new_tokens or (
+                req.eos_id is not None and req.out_tokens
+                and req.out_tokens[-1] == int(req.eos_id)):
+            # everything was already drained (a stalled slot can hide its
+            # own finish): complete, don't resume an empty remainder
+            self._evict_slot(slot, RequestStatus.FINISHED)
+            return
+        req.preemptions += 1
+        self.fault_counters["preemptions"] += 1
+        self.fault_counters[f"{why}_preemptions"] += 1
+        self.scheduler.preserve(slot, req)
+        self._clear_slot(slot)
+        self.scheduler.requeue(req)
+
+    def _reap(self) -> None:
+        """Chunk-boundary reaping of cancelled and deadline-expired
+        requests, queued or running: pages free immediately, the typed
+        terminal status lands in ``finished``, and the very same
+        boundary's admission pass can re-lease the freed slot."""
+        now = self._clock()
+
+        def dead(req: Request) -> bool:
+            return req.cancel_requested or (
+                req.deadline is not None and now > req.deadline)
+
+        for req in [r for r in self.scheduler.queue if dead(r)]:
+            self.scheduler.queue.remove(req)
+            self._finish_terminal(
+                req, RequestStatus.CANCELLED if req.cancel_requested
+                else RequestStatus.TIMED_OUT)
+        for slot in range(self.slots):
+            req = self._slot_req[slot]
+            if req is None or not dead(req):
+                continue
+            self._evict_slot(
+                slot, RequestStatus.CANCELLED if req.cancel_requested
+                else RequestStatus.TIMED_OUT)
+
+    def _do_admissions(self) -> None:
         free = [i for i in range(self.slots) if self._slot_req[i] is None]
         pend: List[Dict] = []
         pvalid: List[bool] = []
@@ -774,7 +1062,8 @@ class Engine:
 
         for adm in self.scheduler.admissions(free):
             req, slot = adm.req, adm.slot
-            plen = len(req.prompt)
+            prompt = req.effective_prompt   # resume: replay emitted tail
+            plen = len(prompt)
             self._key, sub = jax.random.split(self._key)
             temp = jnp.asarray([self._req_temp(req)], jnp.float32)
             s = adm.suffix_start
@@ -798,7 +1087,7 @@ class Engine:
                 # prefix hit and/or chunked prefill: prefill only the
                 # remaining tail, reading the earlier tokens from the
                 # slot's (shared or just-spliced) pages
-                suffix = list(req.prompt[s:])
+                suffix = list(prompt[s:])
                 bucket = self.bucket_for(len(suffix))
                 padded = suffix + [0] * (bucket - len(suffix))
                 pools = [c if (c is not None and "pk" in c) else None
@@ -810,7 +1099,7 @@ class Engine:
                     self.buckets[-1])
             else:
                 bucket = self.bucket_for(plen)
-                padded = list(req.prompt) + [0] * (bucket - plen)
+                padded = list(prompt) + [0] * (bucket - plen)
                 tok, one_cache = self.executor.prefill(
                     self.params, jnp.asarray([padded], jnp.int32),
                     jnp.asarray([plen], jnp.int32), sub, temp,
@@ -818,24 +1107,29 @@ class Engine:
             draft = None
             if self.drafter is not None and self.drafter.kind == "model":
                 dbucket = self.bucket_for(plen)
-                dpadded = list(req.prompt) + [0] * (dbucket - plen)
+                dpadded = list(prompt) + [0] * (dbucket - plen)
                 draft = self.executor.draft_prefill(
                     self.draft_params, jnp.asarray([dpadded], jnp.int32),
                     jnp.asarray([plen], jnp.int32), self.buckets[-1])
             hist = None
             if self._hist_cap:
                 hist = np.zeros((self._hist_cap,), np.int32)
-                head = req.prompt[:self._hist_cap]
+                head = prompt[:self._hist_cap]
                 hist[:len(head)] = head
             eos = -1 if req.eos_id is None else int(req.eos_id)
             pend.append({"slot": slot, "start": s, "plen": plen,
                          "rows": adm.rows, "tok": tok,
                          "one_cache": one_cache, "draft": draft,
+                         "out_len0": len(req.out_tokens) + 1,
                          "max_new": req.max_new_tokens, "eos": eos,
                          "temp": self._req_temp(req), "hist": hist})
             pvalid.append(True)
+            if req.preemptions > 0:
+                self.fault_counters["resumes"] += 1
             self._slot_req[slot] = req
             self._slot_first_tok[slot] = tok   # on device until drain
+            self._slot_first_pending[slot] = True
+            self._slot_stale[slot] = 0
         flush()
 
     def step_chunk(self) -> jax.Array:
@@ -861,12 +1155,26 @@ class Engine:
             (toks, self.state["out_len"], self.state["active"],
              [self._slot_first_tok[i] for i in range(self.slots)]))
         self.host_syncs += 1
+        watchdog: List[int] = []
         for slot in range(self.slots):
             req = self._slot_req[slot]
             if req is None:
                 continue
-            if not req.out_tokens:          # prefill-sampled first token
+            if self.chaos is not None and self.chaos.stalled(slot):
+                # injected straggler: the slot reported nothing this
+                # boundary.  Progress stalls host-side until the watchdog
+                # preempts it; tokens lost in between regenerate on
+                # resume (token-identical at temperature 0).
+                self._slot_stale[slot] += 1
+                if self.stall_patience \
+                        and self._slot_stale[slot] >= self.stall_patience:
+                    watchdog.append(slot)
+                continue
+            if self._slot_first_pending[slot]:
+                # prefill-sampled token (resumes arrive with a non-empty
+                # out_tokens, so presence of output cannot gate this)
                 req.out_tokens.append(int(firsts[slot][0]))
+                self._slot_first_pending[slot] = False
             k = int(out_len[slot]) - len(req.out_tokens)
             if k > 0:
                 # the serving loop drains every chunk, so the whole gap is
@@ -875,21 +1183,45 @@ class Engine:
                 vals = [int(t) for t in toks_np[:, slot] if t >= 0]
                 assert len(vals) <= k, (slot, len(vals), k)
                 req.out_tokens.extend(vals[-k:])
+                self._slot_stale[slot] = 0
+            elif self.stall_patience:
+                self._slot_stale[slot] += 1
+                if self._slot_stale[slot] >= self.stall_patience:
+                    watchdog.append(slot)
+                    continue
             if not active[slot]:
+                req.status = RequestStatus.FINISHED
                 req.done = True
                 self.finished.append(req)
                 self._slot_req[slot] = None
                 self._slot_first_tok[slot] = None
+                self._slot_first_pending[slot] = False
+                self._slot_stale[slot] = 0
                 self.scheduler.release(slot)
                 self.cache = self.executor.free_slot(self.cache,
                                                      jnp.int32(slot))
+        for slot in watchdog:
+            # straggler recovery: treat the unresponsive slot as lost and
+            # resume its request from the last drained token
+            self._preempt_slot(slot, "watchdog")
 
     def _live(self) -> bool:
         return any(r is not None for r in self._slot_req)
 
     def step(self) -> None:
-        """One admit + fused-chunk + drain round (``sync_interval`` decode
-        steps per call)."""
+        """One reap + admit + fused-chunk + drain round
+        (``sync_interval`` decode steps per call).  All policy — deadline
+        reaping, cancellation, preemption, admission — runs on the host
+        at this boundary; the chunk itself stays one sync-free
+        executable."""
+        self._reap()
+        if self.chaos is not None:
+            live = [i for i in range(self.slots)
+                    if self._slot_req[i] is not None]
+            self.chaos.tick(live)
+            for slot in self.chaos.storm_victims(live):
+                if self._slot_req[slot] is not None:
+                    self._preempt_slot(slot, "chaos")
         self._admit()
         if not self._live():
             if not self.scheduler.can_progress(0):

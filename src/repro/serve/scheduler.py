@@ -62,6 +62,24 @@ class PagePoolExhausted(RuntimeError):
     admitted, no cache state was touched)."""
 
 
+class RequestStatus:
+    """Typed terminal/lifecycle states a ``Request`` moves through.
+
+    ``QUEUED -> RUNNING -> FINISHED`` is the happy path; ``PREEMPTED``
+    loops back to ``QUEUED -> RUNNING`` (capped by ``max_preemptions``);
+    ``TIMED_OUT`` / ``CANCELLED`` / ``REJECTED`` are terminal."""
+
+    QUEUED = "QUEUED"
+    RUNNING = "RUNNING"
+    PREEMPTED = "PREEMPTED"
+    FINISHED = "FINISHED"
+    TIMED_OUT = "TIMED_OUT"
+    CANCELLED = "CANCELLED"
+    REJECTED = "REJECTED"
+
+    TERMINAL = frozenset({FINISHED, TIMED_OUT, CANCELLED, REJECTED})
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -69,8 +87,48 @@ class Request:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     temperature: Optional[float] = None   # None -> engine default
+    # --- deadline / cancellation (engine-clock units; ttl is relative
+    # and resolved to an absolute deadline at Engine.submit) ---
+    deadline: Optional[float] = None
+    ttl: Optional[float] = None
+    max_preemptions: int = 3
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = RequestStatus.QUEUED
+    preemptions: int = 0
+    cancel_requested: bool = False
+    reject_reason: Optional[str] = None
+
+    def cancel(self) -> None:
+        """Request cooperative cancellation; the engine reaps the slot
+        (or drops the queue entry) at the next chunk boundary."""
+        self.cancel_requested = True
+
+    # A preempted request resumes by replaying everything it has already
+    # emitted as prompt tail: prefill of ``prompt + out_tokens`` samples
+    # the next new token from the last emitted token's logits, which at
+    # temperature 0 is exactly the token the uncontended run would have
+    # decoded.  Fresh requests (empty ``out_tokens``) reduce to the
+    # plain prompt, so admission has ONE representation for both.
+    @property
+    def effective_prompt(self) -> List[int]:
+        return list(self.prompt) + list(self.out_tokens)
+
+    @property
+    def effective_max_new(self) -> int:
+        return self.max_new_tokens - len(self.out_tokens)
+
+
+@dataclasses.dataclass
+class RequestRejected:
+    """Typed load-shedding result from ``Engine.submit``: the request was
+    not enqueued.  ``kind`` is ``"infeasible"`` (worst-case reservation
+    exceeds the pool budget — it can never run at this config) or
+    ``"queue_full"`` (the bounded admission queue shed it)."""
+
+    req: Request
+    kind: str
+    reason: str
 
 
 @dataclasses.dataclass
@@ -305,6 +363,11 @@ class Scheduler:
             RadixIndex(spec.page_size) if self.share_key else None)
         self.queue: List[Request] = []
         self._leases: Dict[int, Dict[str, List[int]]] = {}
+        self._rows: Dict[int, Dict[str, np.ndarray]] = {}
+        # fault-injection hook (serve/chaos.ChaosMonkey); a sharing_fault
+        # degrades a plan to exclusive pages — the recovery path a real
+        # CoW/splice failure would take
+        self.chaos = None
         # --- telemetry ---
         self._peak_pages = 0
         self.admissions_total = 0
@@ -313,6 +376,9 @@ class Scheduler:
         self.shared_page_attaches = 0
         self.cow_copies = 0
         self.radix_evictions = 0
+        self.resume_admissions = 0
+        self.resume_recovered_tokens = 0
+        self.resume_replayed_tokens = 0
 
     # ------------------------------------------------------------ compat
     @property
@@ -322,7 +388,10 @@ class Scheduler:
         return self.pools[self.spec.widest_group.key]
 
     # ---------------------------------------------------------- admission
-    def submit(self, req: Request) -> None:
+    def validate(self, req: Request) -> None:
+        """Raise ``PagePoolExhausted`` when the request's worst-case page
+        reservation exceeds a pool's TOTAL budget — it can never run at
+        this config, so queueing it would wedge the head of the line."""
         need = self.spec.blocks_needed(len(req.prompt), req.max_new_tokens)
         for key, n in need.items():
             budget = self.pools[key].num_pages
@@ -333,6 +402,18 @@ class Scheduler:
                     f"{req.max_new_tokens} new tokens at page_size="
                     f"{self.spec.page_size}) but that pool only has "
                     f"{budget}; raise --num-pages")
+
+    def submit(self, req: Request) -> None:
+        self.validate(req)   # may raise PagePoolExhausted
+        req.status = RequestStatus.QUEUED
+        self.queue.append(req)
+
+    def requeue(self, req: Request) -> None:
+        """Return a preempted request to the BACK of the queue: the
+        preemption was made to admit the blocked head, so the victim
+        resumes once pressure subsides (its ``max_preemptions`` cap keeps
+        repeated victimhood bounded)."""
+        req.status = RequestStatus.PREEMPTED
         self.queue.append(req)
 
     def _alloc(self, key: str, n: int) -> Optional[List[int]]:
@@ -358,16 +439,28 @@ class Scheduler:
         fails, the plan retries as a miss — the match's own retains can
         pin exactly the refcount-1 radix pages eviction would need, so
         insisting on the match could wedge an admission that plain
-        ownership (evicting the matched prefix) can still satisfy."""
-        adm = self._plan_once(req, use_sharing=True)
-        if adm is None and self.radix is not None:
+        ownership (evicting the matched prefix) can still satisfy.
+
+        An injected sharing fault (chaos) skips the sharing attempt
+        outright — the graceful-degradation path a CoW/splice failure
+        takes: exclusive pages, full prefill, identical tokens."""
+        share = self.radix is not None
+        if share and self.chaos is not None and self.chaos.sharing_fault():
+            share = False
+        adm = self._plan_once(req, use_sharing=share)
+        if adm is None and share:
             adm = self._plan_once(req, use_sharing=False)
         return adm
 
     def _plan_once(self, req: Request,
                    use_sharing: bool) -> Optional[Admission]:
-        plen = len(req.prompt)
-        need = self.spec.blocks_needed(plen, req.max_new_tokens)
+        # a resumed (preempted) request replays its generated-so-far
+        # tokens as prompt tail; total pages needed are invariant under
+        # preemption (orig prompt + orig max_new), so a request that fit
+        # at submit always fits again here
+        prompt = req.effective_prompt
+        plen = len(prompt)
+        need = self.spec.blocks_needed(plen, req.effective_max_new)
         P = self.spec.page_size
 
         shared: List[Tuple[int, int]] = []      # (block, page) attach
@@ -376,7 +469,7 @@ class Scheduler:
         spool = self.pools.get(self.share_key) if self.share_key else None
         if use_sharing and self.radix is not None \
                 and need.get(self.share_key):
-            matched = self.radix.match(req.prompt)
+            matched = self.radix.match(prompt)
             m = sum(nt for _, _, nt in matched)
             # always re-prefill >= 1 token: first-token logits come from
             # the suffix prefill, so a fully-matched prompt keeps its
@@ -445,7 +538,7 @@ class Scheduler:
             rows[key] = row
 
         if self.radix is not None and self.share_key in rows:
-            self.radix.insert(req.prompt, rows[self.share_key],
+            self.radix.insert(prompt, rows[self.share_key],
                               self.pools[self.share_key])
 
         self.admissions_total += 1
@@ -456,6 +549,12 @@ class Scheduler:
             self.shared_page_attaches += len(shared)
             if cow is not None:
                 self.cow_copies += 1
+        if req.preemptions > 0:
+            # recovered-prefill telemetry: of the replayed effective
+            # prompt, how much rode on radix pages instead of recompute
+            self.resume_admissions += 1
+            self.resume_recovered_tokens += s
+            self.resume_replayed_tokens += plen
         return Admission(slot=-1, req=req, rows=rows, suffix_start=s,
                          cow=cow, lease=lease)
 
@@ -472,6 +571,8 @@ class Scheduler:
             self.queue.pop(0)
             adm.slot = free_slots.pop(0)
             self._leases[adm.slot] = adm.lease
+            self._rows[adm.slot] = adm.rows
+            adm.req.status = RequestStatus.RUNNING
             try:
                 yield adm
             finally:
@@ -487,8 +588,28 @@ class Scheduler:
         """Drop a finished slot's page references.  Exclusive pages go
         straight back to the free list; shared/indexed pages survive
         until their refcount drains (other slots, then the radix tree)."""
+        self._rows.pop(slot, None)
         for key, pages in self._leases.pop(slot, {}).items():
             self.pools[key].free(pages)
+
+    def preserve(self, slot: int, req: Request) -> int:
+        """Index a slot's pages in the radix tree just before a
+        preemption releases them, so re-admission recovers the work via
+        suffix prefill instead of recomputing it.  Only tokens whose KV
+        has actually been written are indexed: every prompt token, plus
+        every generated token except the last emitted one (its KV is
+        written by the decode step that *consumes* it, which has not run
+        from the host's point of view).  Returns radix nodes created."""
+        if self.radix is None:
+            return 0
+        rows = self._rows.get(slot)
+        if rows is None or self.share_key not in rows:
+            return 0
+        valid = req.effective_prompt
+        if req.out_tokens:
+            valid = valid[:-1]
+        return self.radix.insert(valid, rows[self.share_key],
+                                 self.pools[self.share_key])
 
     def can_progress(self, live_slots: int) -> bool:
         """False when the engine is wedged: nothing is running and the
@@ -497,8 +618,9 @@ class Scheduler:
         capacity check — a guard, not a policy)."""
         if not self.queue or live_slots:
             return True
-        need = self.spec.blocks_needed(len(self.queue[0].prompt),
-                                       self.queue[0].max_new_tokens)
+        head = self.queue[0]
+        need = self.spec.blocks_needed(len(head.effective_prompt),
+                                       head.effective_max_new)
         for key, n in need.items():
             avail = self.pools[key].free_pages
             if self.radix is not None and key == self.share_key:

@@ -1,0 +1,253 @@
+"""Robustness: preemption/resume token parity, deadline + cancellation
+reaping, typed admission-control rejections, watchdog stall recovery,
+and chaos clean-drain (zero leaked pages, all-terminal statuses)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model_defs
+from repro.models import module as m
+from repro.serve.chaos import ChaosMonkey
+from repro.serve.engine import Engine, Request
+from repro.serve.scheduler import RequestStatus
+
+
+def _model(arch, **kw):
+    cfg = reduced(get_config(arch), **kw)
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    return cfg, params
+
+
+def _prompts(n):
+    return [[(3 * i + j) % 250 + 1 for j in range(2 + (5 * i) % 11)]
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# deadline reaping + mid-stream cancellation
+# ---------------------------------------------------------------------------
+
+def test_deadline_reaped_mid_stream_and_slot_reused_same_boundary():
+    """A running request whose deadline expires is reaped TIMED_OUT at
+    the next chunk boundary — pages free immediately and a queued
+    request admits into the freed slot at that very boundary."""
+    cfg, params = _model("internlm2-1.8b")
+    clk = {"t": 0.0}
+    eng = Engine(cfg, params, slots=1, max_len=64, prefix_sharing=False,
+                 clock=lambda: clk["t"])
+    doomed = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=40, ttl=5.0)
+    waiting = Request(rid=1, prompt=[4, 5, 6], max_new_tokens=12)
+    assert eng.submit(doomed) is None
+    assert eng.submit(waiting) is None
+    eng.step()                                  # doomed admitted, decoding
+    assert doomed.status == RequestStatus.RUNNING
+    assert eng.scheduler.pool.in_use > 0
+    clk["t"] = 10.0                             # past the 5s deadline
+    eng.step()                                  # reap + re-admit boundary
+    assert doomed.status == RequestStatus.TIMED_OUT
+    assert doomed.done and 0 < len(doomed.out_tokens) < 40
+    assert eng._slot_req[0] is waiting          # freed slot reused at once
+    done = eng.run(max_steps=1000)
+    assert waiting in done
+    assert waiting.status == RequestStatus.FINISHED
+    assert len(waiting.out_tokens) == 12
+    fs = eng.fault_stats()
+    assert fs["timed_out"] == 1
+    assert eng.scheduler.pool.in_use == 0       # everything released
+    assert eng.leaked_pages() == 0
+
+
+def test_queued_request_times_out_without_ever_running():
+    """Deadlines also apply while QUEUED: an expired queued request is
+    reaped without occupying a slot, and never emits a token."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=1, max_len=64, prefix_sharing=False)
+    live = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=6)
+    dead = Request(rid=1, prompt=[4, 5, 6], max_new_tokens=6,
+                   deadline=0.0)   # monotonic clock starts past 0
+    eng.submit(live)
+    eng.submit(dead)
+    done = eng.run(max_steps=1000)
+    assert len(done) == 2
+    assert live in done and dead in done
+    assert dead.status == RequestStatus.TIMED_OUT
+    assert dead.out_tokens == []
+    assert live.status == RequestStatus.FINISHED
+    assert eng.leaked_pages() == 0
+
+
+def test_cancel_mid_stream_frees_slot_same_boundary():
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=1, max_len=64, prefix_sharing=False)
+    victim = Request(rid=0, prompt=[7, 8, 9], max_new_tokens=40)
+    waiting = Request(rid=1, prompt=[4, 5, 6], max_new_tokens=12)
+    eng.submit(victim)
+    eng.submit(waiting)
+    eng.step()
+    assert victim.status == RequestStatus.RUNNING
+    victim.cancel()
+    eng.step()                                  # reap + re-admit boundary
+    assert victim.status == RequestStatus.CANCELLED
+    assert victim.done and 0 < len(victim.out_tokens) < 40
+    assert eng._slot_req[0] is waiting
+    eng.run(max_steps=1000)
+    assert waiting.status == RequestStatus.FINISHED
+    fs = eng.fault_stats()
+    assert fs["cancelled"] == 1
+    assert eng.scheduler.pool.in_use == 0
+    assert eng.leaked_pages() == 0
+
+
+# ---------------------------------------------------------------------------
+# preemption / resume token parity at temperature 0
+# ---------------------------------------------------------------------------
+
+def test_pressure_preemption_token_parity_full_attention():
+    """Oversubscribed pool (full slot occupancy impossible): the engine
+    must preempt under pressure, and every preempted-then-resumed
+    request's greedy output must be identical to an uncontended run."""
+    cfg, params = _model("internlm2-1.8b")
+    prompts = _prompts(6)
+
+    def load(eng):
+        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=12)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            assert eng.submit(r) is None
+        done = eng.run(max_steps=100_000)
+        assert len(done) == len(reqs)
+        return {r.rid: list(r.out_tokens) for r in done}, reqs
+
+    calm = Engine(cfg, params, slots=4, max_len=64, page_size=8)
+    out_calm, _ = load(calm)
+
+    # 4 slots x 3-page worst case = 12 > 9 physical pages
+    eng = Engine(cfg, params, slots=4, max_len=64, page_size=8,
+                 num_pages=9)
+    out_ft, reqs = load(eng)
+    fs = eng.fault_stats()
+    assert fs["pressure_preemptions"] >= 1
+    assert any(r.preemptions > 0 for r in reqs)
+    assert out_ft == out_calm
+    assert all(r.status == RequestStatus.FINISHED for r in reqs)
+    assert eng.leaked_pages() == 0
+
+
+def test_preempt_resume_token_parity_windowed_ring_wrap():
+    """gemma2 sliding windows: preempt mid-generation, resume with the
+    generated tokens replayed as prompt tail (no radix on windowed
+    archs — full re-prefill, ring-wrapping in the splice), and decode
+    past the window after resume.  Output must match the uninterrupted
+    run exactly."""
+    cfg, params = _model("gemma2-2b")
+    window = next(b.window for b in cfg.blocks if b.window)
+    prompt, max_new = [3, 1, 4, 1, 5], window + 8   # wraps post-resume
+
+    solo = Engine(cfg, params, slots=1, max_len=96)
+    ref = Request(rid=0, prompt=list(prompt), max_new_tokens=max_new)
+    solo.submit(ref)
+    solo.run(max_steps=1000)
+    assert len(ref.out_tokens) == max_new
+
+    eng = Engine(cfg, params, slots=1, max_len=96)
+    req = Request(rid=0, prompt=list(prompt), max_new_tokens=max_new)
+    eng.submit(req)
+    eng.step()
+    eng.step()
+    assert 0 < len(req.out_tokens) < max_new
+    eng._preempt_slot(0, "pressure")
+    assert req.status == RequestStatus.PREEMPTED
+    assert req.preemptions == 1
+    assert eng.queue and eng.queue[0] is req
+    eng.run(max_steps=1000)
+    assert req.status == RequestStatus.FINISHED
+    assert req.out_tokens == ref.out_tokens
+    assert eng.fault_stats()["resumes"] == 1
+    assert eng.leaked_pages() == 0
+
+
+def test_resume_recovers_prefill_from_radix_when_pool_has_slack():
+    """When preemption is NOT page-bound, the preserved prompt pages
+    survive in the radix index and the resume admits as a prefix hit:
+    most of the replayed effective prompt is recovered, not recomputed."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, page_size=8)
+    req = Request(rid=0, prompt=[(5 * j) % 200 + 1 for j in range(12)],
+                  max_new_tokens=20)
+    eng.submit(req)
+    eng.step()                       # prefill + first chunk
+    assert len(req.out_tokens) > 0
+    eng._preempt_slot(0, "watchdog")
+    eng.run(max_steps=1000)
+    assert req.status == RequestStatus.FINISHED
+    fs = eng.fault_stats()
+    assert fs["watchdog_preemptions"] == 1
+    assert fs["resumes"] == 1
+    assert fs["resume_recovered_tokens"] > 0
+    assert fs["recovered_prefill_fraction"] > 0.5
+    assert eng.leaked_pages() == 0
+
+
+# ---------------------------------------------------------------------------
+# admission control: typed rejection and shed policies
+# ---------------------------------------------------------------------------
+
+def test_queue_full_sheds_typed_rejection():
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=1, max_len=64, prefix_sharing=False,
+                 queue_limit=1, shed_policy="reject")
+    first = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4)
+    shed = Request(rid=1, prompt=[4, 5, 6], max_new_tokens=4)
+    assert eng.submit(first) is None
+    rej = eng.submit(shed)
+    assert rej is not None and rej.kind == "queue_full"
+    assert rej.req is shed
+    assert shed.status == RequestStatus.REJECTED
+    assert shed in eng.rejected
+    fs = eng.fault_stats()
+    assert fs["rejected"] == 1 and fs["rejected_queue_full"] == 1
+    eng.run(max_steps=1000)
+    assert first.status == RequestStatus.FINISHED
+
+
+def test_block_shed_policy_applies_backpressure():
+    """shed_policy='block' drives the engine until the queue drains
+    instead of shedding — the submission succeeds, just later."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=1, max_len=64, prefix_sharing=False,
+                 queue_limit=1, shed_policy="block")
+    first = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4)
+    second = Request(rid=1, prompt=[4, 5, 6], max_new_tokens=4)
+    assert eng.submit(first) is None
+    assert eng.submit(second) is None     # blocked until first admitted
+    done = eng.run(max_steps=1000)
+    assert first in done and second in done
+    assert second.status == RequestStatus.FINISHED
+    assert eng.fault_counters["rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# chaos: seeded fault schedule must always drain clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_chaos_smoke_drains_clean(seed):
+    """Under the smoke fault schedule (admission denials, preemption
+    storms, persistent slot stalls + watchdog, sharing faults) every
+    request still reaches a typed terminal status and no page leaks."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=3, max_len=64, page_size=8,
+                 num_pages=12, chaos=ChaosMonkey.smoke(seed))
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=8, ttl=600.0)
+            for i, p in enumerate(_prompts(6))]
+    for r in reqs:
+        assert eng.submit(r) is None
+    eng.run(max_steps=100_000)
+    assert all(r.status in RequestStatus.TERMINAL for r in reqs)
+    assert all(r.status == RequestStatus.FINISHED and
+               len(r.out_tokens) == 8 for r in reqs)
+    assert eng.leaked_pages() == 0
+    assert eng.decode_compiles == 1

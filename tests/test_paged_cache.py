@@ -16,7 +16,8 @@ from repro.models.attention import ring_token_positions, ring_valid
 from repro.parallel import sharding as sh
 from repro.serve.cache import PAGED_KV, STATE, CacheSpec
 from repro.serve.engine import Engine, Request
-from repro.serve.scheduler import PagePool, PagePoolExhausted, Scheduler
+from repro.serve.scheduler import (PagePool, PagePoolExhausted,  # noqa: F401
+                                   RequestStatus, Scheduler)
 
 
 def _model(arch, **kw):
@@ -193,14 +194,20 @@ def test_fifo_completion_order_end_to_end():
 
 
 def test_page_pool_exhaustion_is_clean_backpressure():
-    """A request that can never fit raises PagePoolExhausted at submit();
+    """A request that can never fit is shed with a typed "infeasible"
+    RequestRejected at submit() (no exception leaks to the caller);
     nothing is admitted and in-flight neighbours are unharmed."""
     cfg, params = _model("internlm2-1.8b")
     eng = Engine(cfg, params, slots=2, max_len=64, page_size=8,
                  num_pages=4)   # 32-token pool
-    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8))
-    with pytest.raises(PagePoolExhausted, match="pages"):
-        eng.submit(Request(rid=1, prompt=[1] * 30, max_new_tokens=16))
+    assert eng.submit(
+        Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8)) is None
+    doomed = Request(rid=1, prompt=[1] * 30, max_new_tokens=16)
+    rej = eng.submit(doomed)
+    assert rej is not None and rej.kind == "infeasible"
+    assert "pages" in rej.reason
+    assert doomed.status == RequestStatus.REJECTED and doomed.done
+    assert eng.fault_stats()["rejected_infeasible"] == 1
     assert len(eng.queue) == 1
     (r,) = eng.run()
     assert r.rid == 0 and len(r.out_tokens) == 8

@@ -149,9 +149,13 @@ def test_eviction_of_shared_prefix_denied_then_allowed_end_to_end():
     """While a slot still references the tree-held prefix pages, an
     unrelated request that needs the whole pool gets backpressure (shared
     nodes are not evictable); once the slot releases, LRU eviction frees
-    the prefix and the big request admits."""
+    the prefix and the big request admits.  Preemption is disabled to
+    keep the waiting-for-release scenario — with it on, the engine would
+    instead evict rid 0 under pool pressure and resume it later
+    (tests/test_fault_tolerance.py covers that path)."""
     cfg, params = _model()
-    eng = Engine(cfg, params, slots=2, max_len=64, num_pages=8)
+    eng = Engine(cfg, params, slots=2, max_len=64, num_pages=8,
+                 preemption=False)
     # rid 0 runs long; its 2 prefix pages are tree-indexed AND slot-held
     eng.submit(Request(rid=0, prompt=list(PREFIX + [5]), max_new_tokens=24))
     # rid 1 needs all 8 pages -> must wait for rid 0 AND evict the tree
