@@ -24,6 +24,18 @@ in the same CI job) against the committed baseline run and fails when:
   attainment) fell below 0.8, preempted-then-resumed outputs diverged
   from the uncontended engine at temperature 0, pages leaked at drain,
   the chunk stopped being sync-free, or the decode executable retraced;
+* the chunked-prefill workload regressed — fused mixed-chunk outputs
+  diverged from the legacy two-executable engine, the p99 per-chunk
+  decode-token latency advantage under long-prompt arrivals fell below
+  1.3x, a prefill executable reappeared (fused mode must compile
+  exactly one decode chunk + one admission splice), the fused chunk
+  stopped being sync-free, or the gathered-ring shapes reappeared in
+  the fused executable's HLO;
+* a **gated metric key is missing** from a workload the candidate run
+  claims to include — a silently-dropped metric must read as a
+  regression, not as a pass through a forgiving ``.get`` default (the
+  per-workload sentinels still allow a whole workload to be absent
+  only when the baseline never had it);
 * tokens/sec dropped more than ``--threshold`` (default 25%) vs the
   baseline.  CI machines differ from the machine that committed the
   baseline, so the comparison is machine-normalized: both runs also
@@ -50,6 +62,22 @@ import sys
 from benchmarks.common import REPO_ROOT
 
 
+def _require(cand, failures, section: str, keys) -> bool:
+    """Hard-fail on any gated metric key absent from the candidate run.
+
+    Every gate below reads with a forgiving ``.get(key, <passing
+    default>)`` so a partial record cannot crash the checker — but a
+    metric that silently vanished (a workload edit dropped it) must
+    fail CI, not sail through the default.  Returns False when any key
+    is missing so value gates on garbage can be skipped."""
+    missing = [k for k in keys if k not in cand]
+    for k in missing:
+        failures.append(f"{section}: gated metric '{k}' missing from "
+                        "the candidate run — a dropped metric is a "
+                        "regression, not a pass")
+    return not missing
+
+
 def check(runs, threshold: float) -> int:
     if len(runs) < 2:
         print("check_serve_regression: need a committed baseline run plus "
@@ -63,17 +91,20 @@ def check(runs, threshold: float) -> int:
         failures.append("decode_sync_free regressed: the fused decode "
                         "chunk performed a device->host transfer")
 
-    ref_scale = cand["ref_tokens_per_s"] / base["ref_tokens_per_s"]
-    expected = base["new_tokens_per_s"] * ref_scale
-    floor = (1.0 - threshold) * expected
-    print(f"baseline new_tokens_per_s={base['new_tokens_per_s']:.0f} "
-          f"(machine scale x{ref_scale:.2f} -> expected {expected:.0f})")
-    print(f"candidate new_tokens_per_s={cand['new_tokens_per_s']:.0f} "
-          f"(floor {floor:.0f} at threshold {threshold:.0%})")
-    if cand["new_tokens_per_s"] < floor:
-        failures.append(
-            f"tokens/sec dropped >{threshold:.0%}: "
-            f"{cand['new_tokens_per_s']:.0f} < {floor:.0f}")
+    if _require(cand, failures, "engine", [
+            "decode_sync_free", "ref_tokens_per_s", "new_tokens_per_s",
+            "new_decode_compiles"]):
+        ref_scale = cand["ref_tokens_per_s"] / base["ref_tokens_per_s"]
+        expected = base["new_tokens_per_s"] * ref_scale
+        floor = (1.0 - threshold) * expected
+        print(f"baseline new_tokens_per_s={base['new_tokens_per_s']:.0f} "
+              f"(machine scale x{ref_scale:.2f} -> expected {expected:.0f})")
+        print(f"candidate new_tokens_per_s={cand['new_tokens_per_s']:.0f} "
+              f"(floor {floor:.0f} at threshold {threshold:.0%})")
+        if cand["new_tokens_per_s"] < floor:
+            failures.append(
+                f"tokens/sec dropped >{threshold:.0%}: "
+                f"{cand['new_tokens_per_s']:.0f} < {floor:.0f}")
 
     if cand.get("new_decode_compiles", 1) != 1:
         failures.append("decode executable count != 1: the shape-stable "
@@ -94,6 +125,9 @@ def check(runs, threshold: float) -> int:
     # Correctness first: radix/CoW admission must be invisible in the
     # tokens — shared-prefix outputs identical to exclusive ownership.
     if "prefix_outputs_match_exclusive" in cand:
+        _require(cand, failures, "prefix-sharing", [
+            "prefix_hit_rate", "prefix_pages_saved",
+            "prefix_decode_sync_free", "prefix_decode_compiles"])
         if not cand["prefix_outputs_match_exclusive"]:
             failures.append(
                 "prefix-hit correctness regressed: shared-prefix outputs "
@@ -128,6 +162,11 @@ def check(runs, threshold: float) -> int:
     # invisible in the tokens, and the gathered ring buffer must actually
     # be gone from its decode executable.
     if "paged_kernel_tokens_per_s" in cand:
+        _require(cand, failures, "paged-kernel", [
+            "paged_kernel_outputs_match", "paged_kernel_gather_free",
+            "gather_path_materializes_ring",
+            "paged_kernel_decode_sync_free",
+            "paged_kernel_decode_compiles", "paged_gather_tokens_per_s"])
         if not cand.get("paged_kernel_outputs_match", False):
             failures.append(
                 "paged-kernel correctness regressed: pool-direct outputs "
@@ -170,6 +209,10 @@ def check(runs, threshold: float) -> int:
     # run).  Correctness first: drafted/verified decoding must be
     # invisible in the tokens at temperature 0.
     if "spec_decode_tokens_per_s" in cand:
+        _require(cand, failures, "speculative", [
+            "spec_outputs_match", "spec_acceptance_rate",
+            "spec_baseline_decode_tokens_per_s", "spec_decode_sync_free",
+            "spec_decode_compiles", "spec_admit_compiles"])
         if not cand.get("spec_outputs_match", False):
             failures.append(
                 "speculative correctness regressed: drafted outputs "
@@ -217,6 +260,9 @@ def check(runs, threshold: float) -> int:
     # run).  The engine must survive the pressure — preempt and resume
     # token-identically — not throw at it or leak pages.
     if "ft_goodput" in cand:
+        _require(cand, failures, "fault-tolerance", [
+            "ft_outputs_match", "ft_preemptions", "ft_leaked_pages",
+            "ft_decode_sync_free", "ft_decode_compiles"])
         if not cand.get("ft_outputs_match", False):
             failures.append(
                 "fault-tolerance correctness regressed: preempted-then-"
@@ -255,6 +301,66 @@ def check(runs, threshold: float) -> int:
         failures.append("candidate run dropped the fault-tolerance "
                         "workload (ft_* fields missing)")
 
+    # ---- chunked-prefill gates (fused mixed-chunk workload, same run).
+    # The fused engine's reason to exist is flat decode-token latency
+    # under long-prompt arrivals, at token parity, with zero prefill
+    # executables and pool-direct (gather-free) prompt context reads.
+    if "cp_decode_latency_p99_ratio" in cand:
+        _require(cand, failures, "chunked-prefill", [
+            "cp_outputs_match", "cp_fused_prefill_compiles",
+            "cp_fused_decode_compiles", "cp_fused_admit_compiles",
+            "cp_fused_decode_sync_free", "cp_fused_gather_free"])
+        if not cand.get("cp_outputs_match", False):
+            failures.append(
+                "chunked-prefill correctness regressed: fused mixed-chunk "
+                "outputs diverged from the legacy two-executable engine "
+                "at temperature 0")
+        ratio = cand.get("cp_decode_latency_p99_ratio", 0.0)
+        if not ratio >= 1.3:
+            failures.append(
+                "chunked-prefill p99 decode-token latency advantage "
+                f"< 1.3x under long-prompt arrivals (x{ratio:.2f}: "
+                f"legacy p99 "
+                f"{cand.get('cp_legacy_chunk_token_p99_ms', 0.0):.2f}ms "
+                "vs fused "
+                f"{cand.get('cp_fused_chunk_token_p99_ms', 0.0):.2f}ms)")
+        if cand.get("cp_fused_prefill_compiles", 0) != 0:
+            failures.append(
+                "fused engine compiled a prefill executable "
+                f"({cand.get('cp_fused_prefill_compiles')}) — chunked "
+                "prefill must stream prompts through the one chunk "
+                "executable")
+        if cand.get("cp_fused_decode_compiles", 1) != 1:
+            failures.append(
+                "chunked-prefill workload retraced the fused chunk "
+                f"({cand.get('cp_fused_decode_compiles')} compiles)")
+        if cand.get("cp_fused_admit_compiles", 1) != 1:
+            failures.append(
+                "chunked-prefill workload retraced the admission "
+                f"bookkeeping ({cand.get('cp_fused_admit_compiles')} "
+                "compiles)")
+        if not cand.get("cp_fused_decode_sync_free", True):
+            failures.append("fused mixed chunk performed a device->host "
+                            "transfer")
+        if not cand.get("cp_fused_gather_free", False):
+            failures.append(
+                "fused chunk executable materializes gathered-ring "
+                "shapes — prompt context reads must stay pool-direct")
+        print(f"chunked prefill: p99_ratio=x{ratio:.2f} "
+              f"(legacy "
+              f"{cand.get('cp_legacy_chunk_token_p99_ms', 0.0):.2f}ms "
+              f"-> fused "
+              f"{cand.get('cp_fused_chunk_token_p99_ms', 0.0):.2f}ms) "
+              f"jitter={cand.get('cp_fused_jitter', 0.0):.2f}/"
+              f"{cand.get('cp_legacy_jitter', 0.0):.2f} "
+              f"ttft_p99={cand.get('cp_fused_ttft_p99_s', 0.0):.2f}s/"
+              f"{cand.get('cp_legacy_ttft_p99_s', 0.0):.2f}s "
+              f"match={cand.get('cp_outputs_match')} "
+              f"gather_free={cand.get('cp_fused_gather_free')}")
+    elif "cp_decode_latency_p99_ratio" in base:
+        failures.append("candidate run dropped the chunked-prefill "
+                        "workload (cp_* fields missing)")
+
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
@@ -264,7 +370,9 @@ def check(runs, threshold: float) -> int:
           "correct, paged-kernel decode gather-free and token-identical, "
           "speculative decode token-identical and >= 1.2x, "
           "fault tolerance preempts/resumes token-identically with "
-          "goodput >= 0.8 and zero leaked pages")
+          "goodput >= 0.8 and zero leaked pages, chunked prefill "
+          "token-identical with >= 1.3x p99 decode-token latency under "
+          "long-prompt arrivals and zero prefill executables")
     return 0
 
 

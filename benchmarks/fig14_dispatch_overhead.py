@@ -33,6 +33,27 @@ preempt/resume instead of throwing, and the workload gates goodput
 (deadline attainment), >= 1 preemption, token parity of the
 preempted-then-resumed run vs an uncontended engine, zero leaked pages,
 and the same sync-free single-executable decode properties.
+
+``chunked_prefill_comparison`` measures the tail-latency story of the
+fused mixed prefill+decode chunk: long prompts arriving into a busy
+decode batch.  The legacy two-executable engine stalls every decoding
+neighbour for a full prefill dispatch at each arrival boundary; the
+fused engine streams ``prefill_budget`` prompt tokens per micro-step
+through the one chunk executable, keeping per-chunk decode-token
+latency flat.  Gates (check_serve_regression): token parity between
+the two engines, p99 per-chunk decode-token latency >= 1.3x better
+under arrivals, zero prefill executables / one decode + one admission
+executable for the fused engine, and the fused chunk's HLO free of the
+gathered-ring shapes (prompt context reads are pool-direct).  TTFT
+percentiles for both engines are reported ungated — streaming a prompt
+through small chunks trades first-token latency for neighbour decode
+latency, and the record keeps both sides of that trade visible.
+
+The five trajectory workloads above pin ``chunked_prefill=False``: their
+committed BENCH baselines measure the legacy two-executable admission
+path, and the fused path's economics (S-row decode micro-steps) are
+deliberately different — it gets its own workload + gates instead of
+silently shifting the old trajectories.
 """
 
 import time
@@ -94,13 +115,16 @@ def shared_prefix_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         eng.finished = []
         return out, toks / dt
 
+    # legacy path pinned: this trajectory baselines the two-executable
+    # admission (see module docstring); fused gets its own workload
     excl = Engine(cfg, params, slots=4, max_len=64, sync_interval=16,
-                  prefix_sharing=False)
+                  prefix_sharing=False, chunked_prefill=False)
     excl.warmup()
     out_excl, _ = load(excl)                     # warm compiles
     out_excl, excl_tps = load(excl)
 
-    eng = Engine(cfg, params, slots=4, max_len=64, sync_interval=16)
+    eng = Engine(cfg, params, slots=4, max_len=64, sync_interval=16,
+                 chunked_prefill=False)
     eng.warmup()
     out_share, _ = load(eng)
     out_share, share_tps = load(eng)
@@ -224,7 +248,8 @@ def paged_kernel_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     params = m.init_params(model_defs(cfg), _jax.random.PRNGKey(0),
                            jnp.float32)
     kw = dict(slots=4, max_len=256, page_size=8, num_pages=28,
-              sync_interval=16, prefix_sharing=False)
+              sync_interval=16, prefix_sharing=False,
+              chunked_prefill=False)    # legacy-pinned trajectory
 
     def load(eng):
         for i in range(n_req):
@@ -342,7 +367,8 @@ def speculative_comparison(max_new: int = 48) -> dict:
     # prompts are strongly cyclic for the seeded reduced model
     toks = [50, 80, 116, 176, 98, 128, 224, 194]
     kw = dict(slots=4, max_len=256, page_size=8, sync_interval=8,
-              prefix_sharing=False)
+              prefix_sharing=False,
+              chunked_prefill=False)    # legacy-pinned trajectory
 
     def load(eng):
         for i, t in enumerate(toks):
@@ -475,7 +501,8 @@ def fault_tolerance_comparison(n_req: int = 8, max_new: int = 16) -> dict:
     cfg = reduced(get_config("internlm2-1.8b"))
     params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
-    kw = dict(slots=4, max_len=64, page_size=8, sync_interval=8)
+    kw = dict(slots=4, max_len=64, page_size=8, sync_interval=8,
+              chunked_prefill=False)    # legacy-pinned trajectory
     prompts = [[(3 * i + j) % 250 + 1 for j in range(2 + (5 * i) % 11)]
                for i in range(n_req)]
 
@@ -557,6 +584,164 @@ def fault_tolerance_comparison(n_req: int = 8, max_new: int = 16) -> dict:
     return rec
 
 
+def chunked_prefill_comparison(n_arrivals: int = 3,
+                               prompt_len: int = 120,
+                               budget: int = 4) -> dict:
+    """Long-prompt arrivals into a busy decode batch: fused vs legacy.
+
+    Three background requests decode continuously while ``n_arrivals``
+    long prompts arrive at fixed chunk boundaries.  Every ``step()`` is
+    timed; per-chunk decode-token latency is chunk wall time /
+    ``sync_interval``.  The legacy engine's arrival boundaries pay a
+    synchronous full-prompt prefill dispatch (here bucket-padded to
+    128 tokens) that stalls all three decoding neighbours — its p99
+    latency is that spike.  The fused engine admits with pure
+    bookkeeping and streams ``budget`` prompt tokens per micro-step
+    through the one chunk executable — flat latency, no spike.  Gated
+    (check_serve_regression): token parity, p99 ratio >= 1.3x, fused
+    compile telemetry (0 prefill / 1 decode / 1 admit executables),
+    fused chunk sync-free, and the fused ``paged_kernel=True``
+    executable's HLO free of gathered-ring shapes.  TTFT is reported
+    ungated: streaming trades first-token latency for neighbour decode
+    latency, and the trade should stay visible in the trajectory."""
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.models import model_defs
+    from repro.models import module as m
+    from repro.serve.engine import Engine, Request
+
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    kw = dict(slots=4, max_len=256, page_size=8, sync_interval=4,
+              prefix_sharing=False, seed=0)
+    arrival_gap = 10                       # chunks between arrivals
+    warm_chunks = 2                        # untimed settle-in chunks
+
+    def long_prompt(r):
+        return [(3 * r + j) % 250 + 1 for j in range(prompt_len)]
+
+    def drive(eng):
+        """Timed arrival window, then drain; returns (outputs,
+        per-chunk seconds during the window, TTFT seconds per
+        arrival)."""
+        background = [Request(rid=i, prompt=[5 + i, 9, 2 + i],
+                              max_new_tokens=200)
+                      for i in range(3)]
+        for r in background:
+            eng.submit(r)
+        arrivals = {}
+        chunk_times = []
+        submit_t = {}
+        ttft = {}
+        chunk = 0
+        while True:
+            gap = chunk - warm_chunks
+            if gap >= 0 and gap % arrival_gap == 0 \
+                    and len(arrivals) < n_arrivals:
+                rid = 10 + len(arrivals)
+                req = Request(rid=rid, prompt=long_prompt(rid),
+                              max_new_tokens=12)
+                arrivals[rid] = req
+                eng.submit(req)
+                submit_t[rid] = time.perf_counter()
+            t0 = time.perf_counter()
+            eng.step()
+            dt = time.perf_counter() - t0
+            if chunk >= warm_chunks:
+                chunk_times.append(dt)
+            for rid, req in arrivals.items():
+                if rid not in ttft and req.out_tokens:
+                    ttft[rid] = time.perf_counter() - submit_t[rid]
+            chunk += 1
+            if len(arrivals) == n_arrivals \
+                    and all(r.done for r in arrivals.values()):
+                break
+            assert chunk < 500, "arrival window failed to drain"
+        done = eng.run(max_steps=200_000)
+        out = {r.rid: list(r.out_tokens) for r in done}
+        eng.finished = []
+        return out, chunk_times, [ttft[r] for r in sorted(ttft)]
+
+    legacy = Engine(cfg, params, chunked_prefill=False, **kw)
+    legacy.warmup()
+    drive(legacy)                                     # warm compiles
+    out_legacy, legacy_times, legacy_ttft = drive(legacy)
+
+    fused = Engine(cfg, params, chunked_prefill=True,
+                   prefill_budget=budget, **kw)
+    fused.warmup()
+    drive(fused)
+    out_fused, fused_times, fused_ttft = drive(fused)
+
+    outputs_match = out_fused == out_legacy
+    si = kw["sync_interval"]
+
+    def pct(xs, q):
+        return float(np.percentile(np.asarray(xs), q)) / si * 1e3
+
+    legacy_p50, legacy_p99 = pct(legacy_times, 50), pct(legacy_times, 99)
+    fused_p50, fused_p99 = pct(fused_times, 50), pct(fused_times, 99)
+    p99_ratio = legacy_p99 / fused_p99
+
+    # structural checks on the fused engine
+    sync_free = True
+    fused.submit(Request(rid=99, prompt=[1, 2, 3], max_new_tokens=32))
+    fused._admit()
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            toks = fused.step_chunk()
+    except Exception as e:  # noqa: BLE001 - classify, don't swallow
+        if "transfer" not in str(e).lower():
+            raise
+        sync_free = False
+    else:
+        fused._drain(toks)
+    fused.run(max_steps=200_000)
+    fused.finished = []
+
+    # gather-free fused executable: the pool-direct build's chunk HLO
+    # (prefill context reads included — there is no other executable)
+    pooled = Engine(cfg, params, chunked_prefill=True,
+                    prefill_budget=budget, paged_kernel=True, **kw)
+    pooled.warmup()
+    hlo, _ = _decode_executable(pooled)
+    gather_free = not any(s in hlo for s in _ring_gather_shapes(pooled))
+
+    rec = {
+        "cp_prefill_budget": budget,
+        "cp_long_prompt_len": prompt_len,
+        "cp_arrivals": n_arrivals,
+        "cp_outputs_match": outputs_match,
+        "cp_decode_latency_p99_ratio": p99_ratio,
+        "cp_fused_chunk_token_p50_ms": fused_p50,
+        "cp_fused_chunk_token_p99_ms": fused_p99,
+        "cp_legacy_chunk_token_p50_ms": legacy_p50,
+        "cp_legacy_chunk_token_p99_ms": legacy_p99,
+        "cp_fused_jitter": fused_p99 / fused_p50,
+        "cp_legacy_jitter": legacy_p99 / legacy_p50,
+        "cp_fused_ttft_p50_s": float(np.percentile(fused_ttft, 50)),
+        "cp_fused_ttft_p99_s": float(np.percentile(fused_ttft, 99)),
+        "cp_legacy_ttft_p50_s": float(np.percentile(legacy_ttft, 50)),
+        "cp_legacy_ttft_p99_s": float(np.percentile(legacy_ttft, 99)),
+        "cp_fused_prefill_compiles": fused.prefill_compiles
+            + fused.suffix_prefill_compiles,
+        "cp_fused_decode_compiles": fused.decode_compiles,
+        "cp_fused_admit_compiles": fused.admit_compiles,
+        "cp_fused_decode_sync_free": sync_free,
+        "cp_fused_gather_free": gather_free,
+    }
+    emit("fig14.cp_p99_ratio", p99_ratio,
+         f"fused_p99={fused_p99:.2f}ms,legacy_p99={legacy_p99:.2f}ms,"
+         f"match={outputs_match}")
+    emit("fig14.cp_fused_jitter", rec["cp_fused_jitter"],
+         f"legacy_jitter={rec['cp_legacy_jitter']:.2f},"
+         f"ttft_p99={rec['cp_fused_ttft_p99_s']:.2f}s/"
+         f"{rec['cp_legacy_ttft_p99_s']:.2f}s")
+    return rec
+
+
 def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     from repro.configs import get_config, reduced
     from repro.models import model_defs
@@ -588,7 +773,8 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     _serve_workload(ref, n_req, max_new)          # warm: compiles happen here
     ref_tps, ref_sps, ref_syncs = timed_trials(ref)
 
-    eng = Engine(cfg, params, slots=4, max_len=64, sync_interval=16)
+    eng = Engine(cfg, params, slots=4, max_len=64, sync_interval=16,
+                 chunked_prefill=False)   # legacy-pinned trajectory
     eng.warmup()                                  # compile caches
     _serve_workload(eng, n_req, max_new)          # host-path warm, like ref
 
@@ -707,6 +893,7 @@ def main() -> None:
     rec.update(paged_kernel_comparison())
     rec.update(speculative_comparison())
     rec.update(fault_tolerance_comparison())
+    rec.update(chunked_prefill_comparison())
     path = write_bench_json("BENCH_serve.json", rec)
     print(f"# serve trajectory appended to {path}", flush=True)
 

@@ -74,6 +74,18 @@ def main() -> None:
                     help="length of the prompt head shared by every "
                          "request in the synthetic workload (0 = fully "
                          "distinct prompts)")
+    ap.add_argument("--chunked-prefill", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="fused mixed prefill+decode chunks (Sarathi-"
+                         "style): prompts stream through the decode "
+                         "executable prefill_budget tokens per micro-"
+                         "step — no prefill executables at all. 'auto' "
+                         "enables it whenever the arch is paged-KV "
+                         "capable with no model drafter")
+    ap.add_argument("--prefill-budget", type=int, default=32,
+                    help="prompt tokens each fused chunk micro-step "
+                         "spends per admitting slot (the TTFT-vs-decode-"
+                         "jitter knob; only with chunked prefill)")
     ap.add_argument("--sync-interval", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -129,13 +141,21 @@ def main() -> None:
                  sync_interval=args.sync_interval,
                  queue_limit=args.queue_limit,
                  shed_policy=args.shed_policy,
-                 chaos=chaos)
+                 chaos=chaos,
+                 chunked_prefill={"auto": "auto", "on": True,
+                                  "off": False}[args.chunked_prefill],
+                 prefill_budget=args.prefill_budget)
     if args.warmup:
         t0 = time.perf_counter()
         eng.warmup()
-        print(f"warmup: {len(eng.buckets)} prefill buckets "
-              f"{eng.buckets} + decode chunk compiled in "
-              f"{time.perf_counter() - t0:.2f}s")
+        if eng.chunked_prefill:
+            print(f"warmup: fused prefill+decode chunk "
+                  f"(prefill_budget={eng.prefill_budget}) + admission "
+                  f"splice compiled in {time.perf_counter() - t0:.2f}s")
+        else:
+            print(f"warmup: {len(eng.buckets)} prefill buckets "
+                  f"{eng.buckets} + decode chunk compiled in "
+                  f"{time.perf_counter() - t0:.2f}s")
     t0 = time.perf_counter()
     head = [1 + (3 * j) % 97 for j in range(max(args.shared_prefix, 0))]
     submitted = []
@@ -164,7 +184,9 @@ def main() -> None:
           f"dense/paged capacity ratio="
           f"{ms['dense_vs_paged_capacity_ratio']:.2f} "
           f"decode_attention="
-          f"{'pool-direct' if eng.paged_kernel else 'gather'}")
+          f"{'pool-direct' if eng.paged_kernel else 'gather'} "
+          f"prefill="
+          f"{'fused-chunked' if eng.chunked_prefill else 'bucketed'}")
     ss = eng.spec_stats()
     if ss["spec"]:
         print(f"speculative [{ss['drafter']}, k={ss['spec_k']}]: "

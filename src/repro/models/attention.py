@@ -396,7 +396,9 @@ def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
         ok &= g_pos < ring              # non-wrapping ring: no write aliasing
     wm = cache.get("wm")
     if wm is not None:
-        ok &= wm[:, None]
+        # [B] slot mask (verify step) or [B,S] per-row mask (fused mixed
+        # prefill+decode chunk: leading pad rows write to trash)
+        ok &= wm if wm.ndim == 2 else wm[:, None]
     phys = jnp.where(ok, phys, trash)
     off = g_pos % page_size
     pool_k = pool_k.at[phys, off].set(kk.astype(pool_k.dtype))

@@ -434,7 +434,8 @@ def forward_decode(params, cfg: ModelConfig, tokens: jax.Array,
 
 def forward_verify(params, cfg: ModelConfig, tokens: jax.Array,
                    cache: Dict, write_mask: Optional[jax.Array] = None,
-                   paged_kernel: bool = False, spec_slack: int = 0
+                   paged_kernel: bool = False, spec_slack: int = 0,
+                   n_rows: Optional[jax.Array] = None
                    ) -> Tuple[jax.Array, Dict]:
     """Speculative verify: run the target model on ``S = K+1`` tokens per
     slot — the current token plus ``K`` drafted continuations — in ONE
@@ -455,10 +456,26 @@ def forward_verify(params, cfg: ModelConfig, tokens: jax.Array,
 
     ``spec_slack`` must equal the draft length ``K`` the serving
     ``CacheSpec`` was built with (windowed rings carry ``K`` tokens of
-    slack so in-flight drafts never wrap onto in-window history)."""
+    slack so in-flight drafts never wrap onto in-window history).
+
+    ``n_rows`` [B] int (fused mixed prefill+decode chunks): per-slot
+    count of *real* query rows, **right-aligned** — slot ``b``'s live
+    tokens occupy rows ``S - n_rows[b] .. S - 1`` and the leading rows
+    are padding.  ``cache_len`` becomes ``len + n_rows`` per slot, and
+    positions are shifted so row ``S-1`` sits at ``len + n_rows - 1``
+    (pad rows clip to position 0 and must be write-masked via a 2-D
+    ``write_mask``).  Right alignment keeps every real position strictly
+    below the slot's logical length, so ring-validity masks never see a
+    phantom wrap from uniform-``S`` padding."""
     b, s = tokens.shape
-    cache_len = cache["len"] + s         # including all s query tokens
-    positions = cache["len"][:, None] + jnp.arange(s)[None, :]
+    if n_rows is None:
+        cache_len = cache["len"] + s     # including all s query tokens
+        positions = cache["len"][:, None] + jnp.arange(s)[None, :]
+    else:
+        cache_len = cache["len"] + n_rows
+        positions = jnp.clip(
+            cache["len"][:, None] + jnp.arange(s)[None, :]
+            - (s - n_rows)[:, None], 0)
     layer_caches = _thread_page_tables(cfg, cache, write_mask, spec_slack)
     h = layers.embed(params["embed"], cfg, tokens)
     h, new_caches, _ = _decoder(params, cfg, h, mode="decode",

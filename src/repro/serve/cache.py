@@ -547,6 +547,34 @@ def admit_cache(spec: CacheSpec, cache: Dict, one_cache: Dict,
                 len=length)
 
 
+def install_slot_rows(spec: CacheSpec, cache: Dict, slot: jax.Array,
+                      start: jax.Array, rows: Dict[str, jax.Array],
+                      enabled: Optional[jax.Array] = None) -> Dict:
+    """Jit-traceable table-only admission for fused chunked prefill:
+    install ``slot``'s page-table rows and rewind its ``len`` to the
+    prefill cursor ``start`` (0 for a fresh prompt; the shared-prefix or
+    resume boundary otherwise).  No KV is spliced — the fused chunk step
+    writes prompt KV through these rows itself — so this stays a cheap
+    bookkeeping dispatch.  ``enabled`` masks a padding entry exactly as
+    in :func:`admit_cache`."""
+    page_tables = {}
+    for k in cache["page_tables"]:
+        row = rows[k][None].astype(jnp.int32)
+        if enabled is not None:
+            cur = jax.lax.dynamic_slice(
+                cache["page_tables"][k], (slot, 0), (1, row.shape[1]))
+            row = jnp.where(enabled, row, cur)
+        page_tables[k] = jax.lax.dynamic_update_slice(
+            cache["page_tables"][k], row, (slot, 0))
+    new_len = start[None].astype(jnp.int32)
+    if enabled is not None:
+        cur = jax.lax.dynamic_slice_in_dim(cache["len"], slot, 1, 0)
+        new_len = jnp.where(enabled, new_len, cur)
+    length = jax.lax.dynamic_update_slice_in_dim(
+        cache["len"], new_len, slot, axis=0)
+    return dict(cache, page_tables=page_tables, len=length)
+
+
 def copy_shared_page(spec: CacheSpec, cache: Dict, group_key: str,
                      src: jax.Array, dst: jax.Array) -> Dict:
     """Jit-traceable copy-on-write: duplicate physical page ``src`` into

@@ -63,7 +63,7 @@ from repro.serve.scheduler import (Admission, PagePoolExhausted,  # noqa: F401
                                    Request, RequestRejected, RequestStatus,
                                    Scheduler)
 from repro.serve.spec import (ModelDrafter, NGramDrafter, SpecConfig,
-                              check_spec_capable)
+                              check_spec_capable, spec_unsupported_reason)
 
 
 def _next_pow2(n: int) -> int:
@@ -92,7 +92,8 @@ class Executor:
                  rules: Optional[sh.Rules] = None,
                  paged_kernel: bool = False,
                  spec_cfg: Optional[SpecConfig] = None,
-                 drafter=None, hist_cap: int = 0):
+                 drafter=None, hist_cap: int = 0,
+                 prefill_budget: int = 0):
         self.cfg = cfg
         self.spec = spec
         self.top_k = int(top_k)
@@ -101,16 +102,37 @@ class Executor:
         self.spec_cfg = spec_cfg
         self.drafter = drafter
         self.hist_cap = int(hist_cap)
+        # fused chunked prefill (Sarathi-style mixed chunks): > 0 selects
+        # the one-executable mode — no prefill executables exist at all;
+        # each chunk step runs every decode row plus up to
+        # ``prefill_budget`` prompt tokens per admitting slot, and prompt
+        # KV is written through the page tables by the SAME dispatch that
+        # decodes (context reads stay pool-direct under ``paged_kernel``)
+        self.prefill_budget = int(prefill_budget)
+        self.chunk_rows = max(self.prefill_budget,
+                              spec_cfg.k + 1 if spec_cfg else 1)
         self._rules = rules
-        self._prefill_fn = jax.jit(self._prefill_impl, static_argnums=(5,))
-        # suffix prefill READS the live pools (shared-prefix gather), so
-        # its cache argument is never donated
-        self._suffix_fn = jax.jit(self._prefill_suffix_impl,
-                                  static_argnums=(8,))
-        self._draft_prefill_fn = jax.jit(self._draft_prefill_impl,
-                                         static_argnums=(3,))
+        if self.prefill_budget:
+            # satellite of the fused design: the per-bucket prefill,
+            # suffix-prefill, and draft-prefill executables are simply
+            # never built — steady-state compile count is 1 fused chunk
+            # (+ 1 admission bookkeeping dispatch)
+            self._prefill_fn = None
+            self._suffix_fn = None
+            self._draft_prefill_fn = None
+            admit_impl = self._fused_admit_impl
+        else:
+            self._prefill_fn = jax.jit(self._prefill_impl,
+                                       static_argnums=(5,))
+            # suffix prefill READS the live pools (shared-prefix gather),
+            # so its cache argument is never donated
+            self._suffix_fn = jax.jit(self._prefill_suffix_impl,
+                                      static_argnums=(8,))
+            self._draft_prefill_fn = jax.jit(self._draft_prefill_impl,
+                                             static_argnums=(3,))
+            admit_impl = self._admit_impl
         if donate:
-            self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(0, 1))
+            self._admit_fn = jax.jit(admit_impl, donate_argnums=(0, 1))
             self._splice_fn = jax.jit(self._splice_impl,
                                       donate_argnums=(0,))
             self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(2, 3))
@@ -119,7 +141,7 @@ class Executor:
                                     static_argnums=(3,))
             self._deact_fn = jax.jit(self._deact_impl, donate_argnums=(0,))
         else:
-            self._admit_fn = jax.jit(self._admit_impl)
+            self._admit_fn = jax.jit(admit_impl)
             self._splice_fn = jax.jit(self._splice_impl)
             self._chunk_fn = jax.jit(self._chunk_impl)
             self._free_fn = jax.jit(self._free_impl)
@@ -275,6 +297,55 @@ class Executor:
                 st["hist_len"] = setv(st["hist_len"], plens[i] + 1)
         return cache, st
 
+    def _fused_admit_impl(self, cache, state, slots_v, starts, plens, rows,
+                          prompts, out_lens, max_news, eoss, temps, valids):
+        """Batched admission for fused chunked prefill: pure bookkeeping.
+        No prefill KV exists yet — the fused chunk step itself writes
+        prompt KV through the page tables — so admission only installs
+        the slot's table rows, rewinds ``len`` to the prefill cursor
+        (``starts``: 0 fresh, the shared-prefix / resume boundary
+        otherwise), stages the prompt row + ``plen`` target, and arms the
+        slot.  ``out_lens`` is ``len(out_tokens)`` with NO +1: the first
+        sampled token flows through the chunk's emitted history like any
+        other, instead of being staged host-side at admission."""
+        st = dict(state)
+        for i in range(self.spec.slots):
+            sl = slots_v[i]
+            en = valids[i]
+            cache = cache_mod.install_slot_rows(
+                self.spec, cache, sl, starts[i],
+                {k: rows[k][i] for k in rows}, enabled=en)
+
+            def setv(vec, new):
+                return vec.at[sl].set(jnp.where(en, new, vec[sl]))
+
+            st["tokens"] = setv(st["tokens"], 0)
+            st["out_len"] = setv(st["out_len"], out_lens[i])
+            st["max_new"] = setv(st["max_new"], max_news[i])
+            st["eos"] = setv(st["eos"], eoss[i])
+            st["temp"] = setv(st["temp"], temps[i])
+            st["active"] = setv(st["active"], out_lens[i] < max_news[i])
+            st["plen"] = setv(st["plen"], plens[i])
+            cur = jax.lax.dynamic_slice(
+                st["prompt"], (sl, 0), (1, st["prompt"].shape[1]))
+            st["prompt"] = jax.lax.dynamic_update_slice(
+                st["prompt"], jnp.where(en, prompts[i][None], cur), (sl, 0))
+            if "hist" in st:
+                cap = self.hist_cap
+                prom = prompts[i]
+                if prom.shape[0] < cap + 1:
+                    prom = jnp.concatenate(
+                        [prom, jnp.zeros((cap + 1 - prom.shape[0],),
+                                         jnp.int32)])
+                row = jnp.where(jnp.arange(cap + 1) < plens[i],
+                                prom[:cap + 1], 0)
+                curh = jax.lax.dynamic_slice(st["hist"], (sl, 0),
+                                             (1, cap + 1))
+                st["hist"] = jax.lax.dynamic_update_slice(
+                    st["hist"], jnp.where(en, row[None], curh), (sl, 0))
+                st["hist_len"] = setv(st["hist_len"], plens[i])
+        return cache, st
+
     def _splice_impl(self, cache, one_cache, slot, start, plen, rows):
         """Cache-only splice for intermediate chunked-prefill segments:
         writes segment KV through the slot's pages at token offset
@@ -290,6 +361,9 @@ class Executor:
         thing the host ever reads.  With speculation each of the ``T``
         steps is a draft/verify/accept round committing up to ``K+1``
         tokens per slot, and the history is [T*(K+1), slots]."""
+        if self.prefill_budget:
+            return self._fused_chunk_impl(params, draft_params, cache,
+                                          state)
         if self.spec_cfg is None:
             def body(carry, _):
                 cache, state = carry
@@ -335,6 +409,120 @@ class Executor:
         (cache, state), toks = jax.lax.scan(
             body, (cache, state), None, length=self.sync_interval)
         # [T, slots, K+1] -> time-major [T*(K+1), slots] for the drain
+        toks = jnp.swapaxes(toks, 1, 2).reshape(-1, toks.shape[1])
+        return toks, cache, state
+
+    def _fused_chunk_impl(self, params, draft_params, cache, state):
+        """Fused mixed prefill+decode chunk (Sarathi-style chunked
+        prefill): ONE executable serves the whole slot population.  Each
+        of the ``sync_interval`` micro-steps builds a right-aligned
+        [slots, S] token matrix (S = ``chunk_rows``): a mid-prefill slot
+        contributes its next ``n = min(plen - len, S)`` prompt tokens, a
+        decoding slot its pending token (+ drafts under speculation), and
+        every row block sits flush against column S-1 so leading pad rows
+        have write masks off (KV lands on trash) and sampling always
+        reads the static last row.  Per-slot ``cache_len = len + n``
+        keeps the causal/ring masks exact per row — no kernel changes,
+        and the prompt's context reads stream pool-direct through the
+        paged attention path like any decode.
+
+        A slot whose prefill completes this step (``rem <= S``) samples
+        its first token from row S-1 — exactly the logits the legacy
+        prefill executable sampled — and starts decoding next micro-step;
+        until then nothing is committed for it (and under speculation
+        drafting stays disabled for it: its draft rows are write-masked
+        and its accept verdicts discarded)."""
+        S = self.chunk_rows
+        k1 = self.spec_cfg.k + 1 if self.spec_cfg is not None else 1
+        col = jnp.arange(S)[None, :]
+
+        def split_rows(cache, state):
+            len_ = cache["len"]
+            active = state["active"]
+            rem = state["plen"] - len_
+            prefilling = active & (rem > 0)
+            n = jnp.where(prefilling, jnp.minimum(rem, S), k1)
+            completing = prefilling & (rem <= S)
+            gidx = len_[:, None] + col - (S - n)[:, None]
+            pcap = state["prompt"].shape[1]
+            ptoks = jnp.take_along_axis(
+                state["prompt"], jnp.clip(gidx, 0, pcap - 1), axis=1)
+            wm = active[:, None] & (col >= (S - n)[:, None])
+            return len_, active, prefilling, completing, n, ptoks, wm
+
+        if self.spec_cfg is None:
+            def body(carry, _):
+                cache, state = carry
+                (len_, active, prefilling, completing, n, ptoks,
+                 wm) = split_rows(cache, state)
+                toks = jnp.where(
+                    prefilling[:, None], ptoks,
+                    jnp.where(col == S - 1, state["tokens"][:, None], 0))
+                logits, cache = forward_verify(
+                    params, self.cfg, toks, cache, write_mask=wm,
+                    paged_kernel=self.paged_kernel,
+                    spec_slack=self.spec.spec_tokens, n_rows=n)
+                cache.pop("enc_kv", None)
+                key, sub = jax.random.split(state["key"])
+                nxt = sampling.sample(logits[:, -1], sub,
+                                      temperature=state["temp"],
+                                      top_k=self.top_k)
+                # commit the sample for decoding slots and for slots whose
+                # prefill just completed (their first token); mid-prefill
+                # slots commit nothing
+                commit = active & (~prefilling | completing)
+                state, emitted = sampling.decode_update(state, nxt, key,
+                                                        commit=commit)
+                cache = dict(cache, len=len_ + jnp.where(
+                    prefilling, n, active.astype(jnp.int32)))
+                return (cache, state), emitted
+
+            (cache, state), toks = jax.lax.scan(
+                body, (cache, state), None, length=self.sync_interval)
+            return toks, cache, state
+
+        def body(carry, _):
+            cache, state = carry
+            (len_, active, prefilling, completing, n, ptoks,
+             wm) = split_rows(cache, state)
+            decoding = active & ~prefilling
+            kd, ka, kf, kmid, knext = jax.random.split(state["key"], 5)
+            drafts, qprobs, cache = self.drafter.propose(
+                draft_params, cache, state, kd, self.top_k)
+            dtoks = jnp.concatenate([state["tokens"][:, None], drafts],
+                                    axis=1)
+            if S > k1:
+                dtoks = jnp.concatenate(
+                    [jnp.zeros((dtoks.shape[0], S - k1), jnp.int32),
+                     dtoks], axis=1)
+            toks = jnp.where(prefilling[:, None], ptoks, dtoks)
+            logits, cache = forward_verify(
+                params, self.cfg, toks, cache, write_mask=wm,
+                paged_kernel=self.paged_kernel,
+                spec_slack=self.spec.spec_tokens, n_rows=n)
+            cache.pop("enc_kv", None)
+            cand, n_acc = sampling.spec_accept(
+                logits[:, S - k1:], drafts, qprobs, state["temp"],
+                self.top_k, ka)
+            first = sampling.sample(logits[:, -1], kf,
+                                    temperature=state["temp"],
+                                    top_k=self.top_k)
+            # prefill-completing slots commit exactly their first token
+            # (drafting for them begins next micro-step); decoding slots
+            # commit their accepted draft run as usual
+            state, _ = sampling.decode_update(state, first, kmid,
+                                              commit=completing)
+            state, emitted, n_emit = sampling.spec_update(
+                state, cand, n_acc, knext, commit=decoding)
+            idx1 = jnp.arange(k1)[None, :]
+            emitted = jnp.where(completing[:, None] & (idx1 == 0),
+                                first[:, None], emitted)
+            cache = dict(cache, len=len_ + jnp.where(
+                prefilling, n, n_emit))
+            return (cache, state), emitted
+
+        (cache, state), toks = jax.lax.scan(
+            body, (cache, state), None, length=self.sync_interval)
         toks = jnp.swapaxes(toks, 1, 2).reshape(-1, toks.shape[1])
         return toks, cache, state
 
@@ -399,10 +587,14 @@ class Executor:
     # ----------------------------------------------------------- telemetry
     @property
     def prefill_compiles(self) -> int:
+        if self._prefill_fn is None:     # fused mode: no prefill exec
+            return 0
         return self._prefill_fn._cache_size()
 
     @property
     def suffix_prefill_compiles(self) -> int:
+        if self._suffix_fn is None:      # fused mode: no prefill exec
+            return 0
         return self._suffix_fn._cache_size()
 
     @property
@@ -452,7 +644,9 @@ class Engine:
                  shed_policy: str = "reject",
                  clock: Optional[Callable[[], float]] = None,
                  stall_patience: int = 0,
-                 chaos: Optional[ChaosMonkey] = None):
+                 chaos: Optional[ChaosMonkey] = None,
+                 chunked_prefill: Any = "auto",
+                 prefill_budget: int = 32):
         if cfg.cross_attention:
             raise NotImplementedError(
                 "Engine serves decoder-only archs; whisper uses "
@@ -524,9 +718,43 @@ class Engine:
                           if spec_cfg is not None
                           and spec_cfg.draft == "ngram" else 0)
 
+        # ---- fused chunked prefill (Sarathi-style mixed chunks)
+        # "auto": on whenever the fused chunk can serve the arch — paged
+        # KV throughout, attention-only mixer stack, and no model drafter
+        # (its separate draft cache still needs a draft-prefill pass).
+        # The fused mode deletes every prefill executable: prompts stream
+        # through the SAME chunk step that decodes, prefill_budget tokens
+        # per slot per micro-step.
+        fused_capable = (
+            not cfg.cross_attention
+            and spec_unsupported_reason(cfg) is None
+            and not (spec_cfg is not None and spec_cfg.draft != "ngram"))
+        if chunked_prefill == "auto":
+            chunked_prefill = fused_capable
+        elif chunked_prefill and not fused_capable:
+            raise ValueError(
+                f"{cfg.name}: chunked_prefill needs paged KV for every "
+                "mixer (attention-only stack) and no model drafter; "
+                f"reason: {spec_unsupported_reason(cfg) or 'model drafter'}")
+        self.chunked_prefill = bool(chunked_prefill)
+        if prefill_budget < 1:
+            raise ValueError(
+                f"prefill_budget must be >= 1, got {prefill_budget}")
+        self.prefill_budget = int(prefill_budget) if self.chunked_prefill \
+            else 0
+        # rows per fused micro-step: prefill slices and draft/verify rows
+        # share the one [slots, S] token matrix
+        chunk_rows = max(self.prefill_budget,
+                         spec_cfg.k + 1 if spec_cfg else 1)
+        # windowed rings need ring >= window + S - 1 so a full-width
+        # prefill slice can write-wrap legitimately; spec_tokens is
+        # exactly that slack (max_len-capped inside CacheSpec)
+        cache_slack = (max(spec_cfg.k if spec_cfg else 0, chunk_rows - 1)
+                       if self.chunked_prefill
+                       else (spec_cfg.k if spec_cfg else 0))
         self.spec = CacheSpec.from_config(
             cfg, slots, max_len, page_size=page_size, num_pages=num_pages,
-            spec_tokens=spec_cfg.k if spec_cfg else 0)
+            spec_tokens=cache_slack)
         if paged_kernel == "auto":
             # pool-direct attention is the TPU hot path (compiled Pallas
             # kernel, gated on the runtime toolchain probe).  Off-TPU the
@@ -543,13 +771,18 @@ class Engine:
             raise ValueError(
                 f"{cfg.name}: speculative decoding needs the paged decode "
                 "cache (rollback by position)")
-        self.scheduler = Scheduler(self.spec, prefix_sharing=prefix_sharing)
+        if self.chunked_prefill and not self.spec.has_paged:
+            raise ValueError(
+                f"{cfg.name}: chunked_prefill needs the paged decode cache")
+        self.scheduler = Scheduler(self.spec, prefix_sharing=prefix_sharing,
+                                   defer_radix_insert=self.chunked_prefill)
         self.executor = Executor(cfg, self.spec, top_k=self.top_k,
                                  sync_interval=self.sync_interval,
                                  donate=self._donate, rules=rules,
                                  paged_kernel=self.paged_kernel,
                                  spec_cfg=spec_cfg, drafter=self.drafter,
-                                 hist_cap=self._hist_cap)
+                                 hist_cap=self._hist_cap,
+                                 prefill_budget=self.prefill_budget)
 
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._slot_first_tok: List[Optional[jax.Array]] = [None] * slots
@@ -559,10 +792,17 @@ class Engine:
         # cannot stand in for this flag)
         self._slot_first_pending: List[bool] = [False] * slots
         self._slot_stale: List[int] = [0] * slots
+        # fused chunked prefill: tokens of the slot's effective prompt
+        # already covered by past chunks (the host-visible prefill
+        # cursor, trailing the device's cache["len"] by one drain) and
+        # the admission-time prompt length it is counting toward
+        self._slot_seen_len: List[int] = [0] * slots
+        self._slot_plen: List[int] = [0] * slots
         self.cache = self._empty_cache()
-        self.state = sampling.make_slot_state(slots, seed,
-                                              hist_cap=self._hist_cap,
-                                              spec=spec_cfg is not None)
+        self.state = sampling.make_slot_state(
+            slots, seed, hist_cap=self._hist_cap,
+            spec=spec_cfg is not None,
+            prompt_cap=max_len if self.chunked_prefill else 0)
         self._key = jax.random.PRNGKey(seed + 1)
         self.finished: List[Request] = []
         self.rejected: List[Request] = []
@@ -729,6 +969,20 @@ class Engine:
                 f"{req.max_new_tokens} exceeds max_len={self.max_len} "
                 f"and {self.cfg.name} has non-windowed attention; raise "
                 "max_len or lower max_new_tokens")
+        if self.chunked_prefill:
+            if not req.prompt:
+                raise ValueError("chunked_prefill requires a non-empty "
+                                 "prompt")
+            if len(req.prompt) + req.max_new_tokens > self.max_len:
+                # the fused chunk streams prompt tokens from a per-slot
+                # [max_len] staging buffer; a preempted request replays
+                # its generated tail as prompt on resume, so the whole
+                # prompt+generation span must fit even for windowed archs
+                raise ValueError(
+                    f"prompt length {len(req.prompt)} + max_new_tokens "
+                    f"{req.max_new_tokens} exceeds max_len={self.max_len}: "
+                    "chunked_prefill stages prompts in a max_len-sized "
+                    "buffer; raise max_len or pass chunked_prefill=False")
         try:
             self.scheduler.validate(req)
         except PagePoolExhausted as e:
@@ -823,6 +1077,23 @@ class Engine:
         rows = {g.key: jnp.asarray(
             np.stack([en["rows"][g.key] for en in ent]).astype(np.int32))
             for g in self.spec.groups}
+        if self.chunked_prefill:
+            # fused admission is pure bookkeeping: table rows + prompt
+            # staging; the chunk step itself prefills
+            self.cache, self.state = self.executor.admit(
+                self.cache, self.state,
+                jnp.asarray([en["slot"] for en in ent], jnp.int32),
+                jnp.asarray([en["start"] for en in ent], jnp.int32),
+                jnp.asarray([en["plen"] for en in ent], jnp.int32),
+                rows,
+                jnp.asarray(np.stack([en["prompt"] for en in ent]),
+                            jnp.int32),
+                jnp.asarray([en["out_len0"] for en in ent], jnp.int32),
+                jnp.asarray([en["max_new"] for en in ent], jnp.int32),
+                jnp.asarray([en["eos"] for en in ent], jnp.int32),
+                jnp.asarray([en["temp"] for en in ent], jnp.float32),
+                jnp.asarray(vf))
+            return
         drafts = None
         if self.drafter is not None and self.drafter.kind == "model":
             drafts = tuple(en["draft"] for en in ent)
@@ -856,6 +1127,19 @@ class Engine:
         key_before = jnp.array(self.state["key"])   # copy: state is donated
         trash_rows = {g.key: np.full((g.ring_blocks,), g.trash_page,
                                      np.int32) for g in self.spec.groups}
+        if self.chunked_prefill:
+            # fused mode: no prefill buckets exist.  ONE inert admission
+            # compiles the bookkeeping splice, ONE chunk compiles the
+            # fused executable — total steady-state compile count 2.
+            entry = {"slot": 0, "start": 0, "plen": 0, "rows": trash_rows,
+                     "prompt": np.zeros((self.max_len,), np.int32),
+                     "out_len0": 1, "max_new": 0, "eos": -1, "temp": 0.0}
+            self._batched_admit([entry], [False])
+            _, self.cache, self.state = self.executor.chunk(
+                self.params, self.draft_params, self.cache, self.state)
+            self.cache = self.executor.free_slot(self.cache, jnp.int32(0))
+            self.state = dict(self.state, key=key_before)
+            return
         for b in self.buckets:
             tokens = jnp.zeros((1, b), jnp.int32)
             length = jnp.zeros((1,), jnp.int32)
@@ -985,6 +1269,8 @@ class Engine:
         self._slot_first_tok[slot] = None
         self._slot_first_pending[slot] = False
         self._slot_stale[slot] = 0
+        self._slot_seen_len[slot] = 0
+        self._slot_plen[slot] = 0
         if self.chaos is not None:
             self.chaos.clear_stall(slot)
         self.scheduler.release(slot)
@@ -1022,7 +1308,14 @@ class Engine:
         req.preemptions += 1
         self.fault_counters["preemptions"] += 1
         self.fault_counters[f"{why}_preemptions"] += 1
-        self.scheduler.preserve(slot, req)
+        upto = None
+        if self.chunked_prefill \
+                and self._slot_seen_len[slot] < self._slot_plen[slot]:
+            # preempted mid-prefill: only the pages the host has SEEN
+            # covered are certainly written (a chaos-stalled drain may
+            # trail the device); preserve exactly that prefix
+            upto = self._slot_seen_len[slot]
+        self.scheduler.preserve(slot, req, upto=upto)
         self._clear_slot(slot)
         self.scheduler.requeue(req)
 
@@ -1064,6 +1357,37 @@ class Engine:
             req, slot = adm.req, adm.slot
             prompt = req.effective_prompt   # resume: replay emitted tail
             plen = len(prompt)
+            if self.chunked_prefill:
+                # fused chunked prefill: no prefill dispatch at all.  The
+                # admission stages the prompt and rewinds the slot's len
+                # to the cursor (shared-prefix / resume boundary); the
+                # next chunks stream prefill_budget tokens per micro-step
+                # through the fused executable.  No flush-before-CoW
+                # dance: fused admissions write no KV, and the radix
+                # index only ever names fully-written pages (deferred
+                # insert), so a CoW source is always materialized.
+                if adm.cow is not None:
+                    _blk, src, dst = adm.cow
+                    self.cache = self.executor.copy_page(
+                        self.cache, jnp.int32(src), jnp.int32(dst),
+                        self.scheduler.share_key)
+                pbuf = np.zeros((self.max_len,), np.int32)
+                pbuf[:plen] = prompt
+                eos = -1 if req.eos_id is None else int(req.eos_id)
+                pend.append({"slot": slot, "start": adm.suffix_start,
+                             "plen": plen, "rows": adm.rows,
+                             "prompt": pbuf,
+                             "out_len0": len(req.out_tokens),
+                             "max_new": req.max_new_tokens, "eos": eos,
+                             "temp": self._req_temp(req)})
+                pvalid.append(True)
+                if req.preemptions > 0:
+                    self.fault_counters["resumes"] += 1
+                self._slot_req[slot] = req
+                self._slot_seen_len[slot] = adm.suffix_start
+                self._slot_plen[slot] = plen
+                self._slot_stale[slot] = 0
+                continue
             self._key, sub = jax.random.split(self._key)
             temp = jnp.asarray([self._req_temp(req)], jnp.float32)
             s = adm.suffix_start
@@ -1151,9 +1475,16 @@ class Engine:
         their other referents) and the slot's page-table rows are pointed
         at the trash pages, so its dead tail writes cannot touch
         re-leased pages."""
-        toks_np, out_len, active, firsts = jax.device_get(
-            (toks, self.state["out_len"], self.state["active"],
-             [self._slot_first_tok[i] for i in range(self.slots)]))
+        fetch = (toks, self.state["out_len"], self.state["active"],
+                 [self._slot_first_tok[i] for i in range(self.slots)])
+        if self.chunked_prefill:
+            # also drain the prefill cursor (cache["len"], capped by the
+            # prompt length per slot below) in the SAME transfer
+            toks_np, out_len, active, firsts, cache_len = jax.device_get(
+                fetch + (self.cache["len"],))
+        else:
+            toks_np, out_len, active, firsts = jax.device_get(fetch)
+            cache_len = None
         self.host_syncs += 1
         watchdog: List[int] = []
         for slot in range(self.slots):
@@ -1170,6 +1501,21 @@ class Engine:
                         and self._slot_stale[slot] >= self.stall_patience:
                     watchdog.append(slot)
                 continue
+            progressed = False
+            if self.chunked_prefill:
+                # prefill cursor: past the prompt end, len counts decoded
+                # tokens — those drain through out_len as usual
+                plen0 = self._slot_plen[slot]
+                seen = min(int(cache_len[slot]), plen0)
+                if seen > self._slot_seen_len[slot]:
+                    progressed = True   # mid-prefill progress ≠ a stall
+                    prev = self._slot_seen_len[slot]
+                    self._slot_seen_len[slot] = seen
+                    if prev < plen0 <= seen:
+                        # prefill completed this chunk: NOW every prompt
+                        # page is written, so the prompt becomes visible
+                        # to the radix prefix index (deferred insert)
+                        self.scheduler.index_slot(slot, req, plen0)
             if self._slot_first_pending[slot]:
                 # prefill-sampled token (resumes arrive with a non-empty
                 # out_tokens, so presence of output cannot gate this)
@@ -1184,7 +1530,7 @@ class Engine:
                 assert len(vals) <= k, (slot, len(vals), k)
                 req.out_tokens.extend(vals[-k:])
                 self._slot_stale[slot] = 0
-            elif self.stall_patience:
+            elif self.stall_patience and not progressed:
                 self._slot_stale[slot] += 1
                 if self._slot_stale[slot] >= self.stall_patience:
                     watchdog.append(slot)

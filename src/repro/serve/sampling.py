@@ -52,7 +52,7 @@ def sample(logits: jax.Array, key: jax.Array, *,
 
 
 def make_slot_state(slots: int, seed: int = 0, hist_cap: int = 0,
-                    spec: bool = False) -> dict:
+                    spec: bool = False, prompt_cap: int = 0) -> dict:
     """Device-side per-slot bookkeeping for the fused decode step.
 
     tokens:   last token fed/emitted per slot (decode input)
@@ -70,7 +70,13 @@ def make_slot_state(slots: int, seed: int = 0, hist_cap: int = 0,
     has no use for it) adds ``hist`` [slots, hist_cap + 1], each slot's
     full token history (prompt + emitted — the lookup corpus; the extra
     column is a spill cell that absorbs masked/overflow scatter writes)
-    with ``hist_len`` valid entries."""
+    with ``hist_len`` valid entries.
+
+    ``prompt_cap > 0`` (fused chunked-prefill engines) adds ``prompt``
+    [slots, prompt_cap] — the slot's full (effective) prompt, fed to the
+    fused chunk a budgeted slice at a time — and ``plen``, its length.
+    The prefill cursor itself is the cache ``len``; a slot is mid-prefill
+    while ``len < plen``."""
     zi = jnp.zeros((slots,), jnp.int32)
     state = {
         "tokens": zi,
@@ -88,26 +94,47 @@ def make_slot_state(slots: int, seed: int = 0, hist_cap: int = 0,
     if hist_cap:
         state["hist"] = jnp.zeros((slots, hist_cap + 1), jnp.int32)
         state["hist_len"] = jnp.zeros((slots,), jnp.int32)
+    if prompt_cap:
+        state["prompt"] = jnp.zeros((slots, prompt_cap), jnp.int32)
+        state["plen"] = jnp.zeros((slots,), jnp.int32)
     return state
 
 
-def decode_update(state: dict, nxt: jax.Array, new_key: jax.Array) -> tuple:
+def decode_update(state: dict, nxt: jax.Array, new_key: jax.Array,
+                  commit: Optional[jax.Array] = None) -> tuple:
     """One step of on-device slot bookkeeping.
 
     ``nxt`` [B] are freshly sampled tokens.  Returns ``(state', emitted)``
-    where ``emitted`` is ``nxt`` for active slots and -1 elsewhere — the
-    host decodes the batched [T, B] history after the fact, so no per-token
-    sync is needed for EOS/max-token termination.
-    """
+    where ``emitted`` is ``nxt`` for committing slots and -1 elsewhere —
+    the host decodes the batched [T, B] history after the fact, so no
+    per-token sync is needed for EOS/max-token termination.
+
+    ``commit`` [B] bool narrows which slots take the token this step
+    (default: every active slot).  The fused chunked-prefill step passes
+    ``active & (pure decode | prefill just completed)`` so mid-prefill
+    slots — whose row-``S-1`` logits predict a mid-prompt continuation,
+    not an output token — advance their cursor without emitting.  When a
+    drafting history buffer is present the committed token is appended to
+    it (the fused path has no separate admission-time seeding step for
+    the first sampled token)."""
     active = state["active"]
-    out_len = state["out_len"] + active.astype(jnp.int32)
-    hit_eos = active & (nxt == state["eos"])
+    if commit is None:
+        commit = active
+    out_len = state["out_len"] + commit.astype(jnp.int32)
+    hit_eos = commit & (nxt == state["eos"])
     exhausted = out_len >= state["max_new"]
-    done = active & (hit_eos | exhausted)
-    tokens = jnp.where(active, nxt, state["tokens"])
-    emitted = jnp.where(active, nxt, -1)
+    done = commit & (hit_eos | exhausted)
+    tokens = jnp.where(commit, nxt, state["tokens"])
+    emitted = jnp.where(commit, nxt, -1)
     new_state = dict(state, tokens=tokens, out_len=out_len,
                      active=active & ~done, key=new_key)
+    if "hist" in state:    # n-gram drafter corpus: append committed token
+        hist, cap = state["hist"], state["hist"].shape[1] - 1
+        b = hist.shape[0]
+        pos = jnp.where(commit, jnp.minimum(state["hist_len"], cap), cap)
+        new_state["hist"] = hist.at[jnp.arange(b), pos].set(
+            jnp.maximum(jnp.where(commit, nxt, 0), 0))
+        new_state["hist_len"] = state["hist_len"] + commit.astype(jnp.int32)
     return new_state, emitted
 
 
@@ -187,7 +214,8 @@ def spec_accept(logits: jax.Array, drafts: jax.Array,
 
 
 def spec_update(state: dict, cand: jax.Array, n_acc: jax.Array,
-                new_key: jax.Array) -> tuple:
+                new_key: jax.Array,
+                commit: Optional[jax.Array] = None) -> tuple:
     """Multi-token analogue of ``decode_update``: commit up to ``n_acc+1``
     tokens per active slot, clamped to the remaining generation budget and
     truncated at the first EOS.  Appends the committed tokens to the
@@ -195,12 +223,20 @@ def spec_update(state: dict, cand: jax.Array, n_acc: jax.Array,
     ``(state', emitted [B,K+1], n_emit [B])`` where ``emitted`` carries the
     committed tokens left-aligned with -1 padding (what the scan stacks
     for the host drain) and ``n_emit`` is how far the cache ``len`` may
-    advance — rejected drafts roll back simply by not being counted."""
+    advance — rejected drafts roll back simply by not being counted.
+
+    ``commit`` [B] bool narrows which slots take this round's verdict
+    (default: every active slot).  The fused chunked-prefill step passes
+    ``active & ~prefilling`` — drafting stays disabled for a slot until
+    its prefill cursor reaches the prompt end, and a mid-prefill slot
+    contributes nothing to the speculative telemetry counters."""
     active = state["active"]
+    if commit is None:
+        commit = active
     b, k1 = cand.shape
     idx = jnp.arange(k1)[None, :]
     rem = jnp.maximum(state["max_new"] - state["out_len"], 0)
-    n0 = jnp.where(active, jnp.minimum(n_acc + 1, rem), 0)
+    n0 = jnp.where(commit, jnp.minimum(n_acc + 1, rem), 0)
     iseos = (cand == state["eos"][:, None]) & (idx < n0[:, None])
     big = k1 + 1
     epos = jnp.min(jnp.where(iseos, idx, big), axis=1)
@@ -208,22 +244,22 @@ def spec_update(state: dict, cand: jax.Array, n_acc: jax.Array,
     emitted = jnp.where(idx < n_emit[:, None], cand, -1)
     out_len = state["out_len"] + n_emit
     hit_eos = epos + 1 <= n0
-    done = active & (hit_eos | (out_len >= state["max_new"]))
+    done = commit & (hit_eos | (out_len >= state["max_new"]))
     last = jnp.take_along_axis(
         cand, jnp.clip(n_emit - 1, 0)[:, None], axis=1)[:, 0]
-    tokens = jnp.where(active & (n_emit > 0), last, state["tokens"])
-    n_active = jnp.sum(active.astype(jnp.int32))
+    tokens = jnp.where(commit & (n_emit > 0), last, state["tokens"])
+    n_active = jnp.sum(commit.astype(jnp.int32))
     # acceptance accounting over USABLE drafts: a budget-clamped final
     # step can emit at most ``rem`` tokens, so drafts past that could
     # never be used and should not count as rejections
-    usable = jnp.where(active, jnp.minimum(k1 - 1, rem), 0)
+    usable = jnp.where(commit, jnp.minimum(k1 - 1, rem), 0)
     new_state = dict(
         state, tokens=tokens, out_len=out_len, active=active & ~done,
         key=new_key,
         spec_steps=state["spec_steps"] + n_active,
         spec_drafted=state["spec_drafted"] + jnp.sum(usable),
         spec_accepted=state["spec_accepted"]
-        + jnp.sum(jnp.where(active, jnp.minimum(n_acc, n_emit), 0)),
+        + jnp.sum(jnp.where(commit, jnp.minimum(n_acc, n_emit), 0)),
         spec_emitted=state["spec_emitted"] + jnp.sum(n_emit))
     if "hist" in state:    # n-gram drafter: append to the lookup corpus
         hist, cap = state["hist"], state["hist"].shape[1] - 1

@@ -351,11 +351,17 @@ class Scheduler:
     """FIFO continuous-batching policy over ``slots`` cache slots and
     per-pool-group page budgets, with radix-indexed prefix sharing."""
 
-    def __init__(self, spec: CacheSpec, *, prefix_sharing: bool = True):
+    def __init__(self, spec: CacheSpec, *, prefix_sharing: bool = True,
+                 defer_radix_insert: bool = False):
         self.spec = spec
         self.pools: Dict[str, PagePool] = {
             g.key: PagePool(g.num_pages) for g in spec.groups
         } if spec.has_paged else {}
+        # fused chunked prefill defers radix indexing to prefill
+        # COMPLETION (Engine calls index_slot): at admission time none of
+        # the prompt's pages are written yet, so inserting then would let
+        # a same-boundary match attend to garbage
+        self.defer_radix_insert = bool(defer_radix_insert)
         self.share_key: Optional[str] = (
             spec.share_group_key
             if prefix_sharing and spec.prefix_sharing_capable else None)
@@ -537,7 +543,8 @@ class Scheduler:
                 lease[key] = fresh
             rows[key] = row
 
-        if self.radix is not None and self.share_key in rows:
+        if self.radix is not None and self.share_key in rows \
+                and not self.defer_radix_insert:
             self.radix.insert(prompt, rows[self.share_key],
                               self.pools[self.share_key])
 
@@ -592,23 +599,45 @@ class Scheduler:
         for key, pages in self._leases.pop(slot, {}).items():
             self.pools[key].free(pages)
 
-    def preserve(self, slot: int, req: Request) -> int:
+    def preserve(self, slot: int, req: Request,
+                 upto: Optional[int] = None) -> int:
         """Index a slot's pages in the radix tree just before a
         preemption releases them, so re-admission recovers the work via
         suffix prefill instead of recomputing it.  Only tokens whose KV
         has actually been written are indexed: every prompt token, plus
         every generated token except the last emitted one (its KV is
         written by the decode step that *consumes* it, which has not run
-        from the host's point of view).  Returns radix nodes created."""
+        from the host's point of view).  ``upto`` overrides that rule
+        with an explicit written-token count — fused chunked prefill
+        passes its prefill cursor when preempting a slot mid-prefill.
+        Returns radix nodes created."""
         if self.radix is None:
             return 0
         rows = self._rows.get(slot)
         if rows is None or self.share_key not in rows:
             return 0
         valid = req.effective_prompt
-        if req.out_tokens:
+        if upto is not None:
+            valid = valid[:upto]
+        elif req.out_tokens:
             valid = valid[:-1]
         return self.radix.insert(valid, rows[self.share_key],
+                                 self.pools[self.share_key])
+
+    def index_slot(self, slot: int, req: Request, plen: int) -> int:
+        """Deferred radix indexing for fused chunked prefill: called by
+        the Engine at the drain that observes a slot's prefill cursor
+        reach its prompt end — the instant every prompt page is actually
+        written.  Indexes exactly the admission-time effective prompt
+        (``plen`` tokens: later decoded tokens ride the same pages but
+        are not prefix-stable).  Returns radix nodes created."""
+        if self.radix is None:
+            return 0
+        rows = self._rows.get(slot)
+        if rows is None or self.share_key not in rows:
+            return 0
+        return self.radix.insert(req.effective_prompt[:plen],
+                                 rows[self.share_key],
                                  self.pools[self.share_key])
 
     def can_progress(self, live_slots: int) -> bool:

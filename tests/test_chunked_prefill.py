@@ -1,0 +1,287 @@
+"""Fused mixed prefill+decode chunks (Sarathi-style chunked prefill).
+
+The fused mode deletes every prefill executable: each chunk micro-step
+runs all decode rows plus up to ``prefill_budget`` prompt tokens per
+admitting slot through ONE executable, with prompt context reads
+streaming pool-direct through the paged attention path.  Token parity
+against the legacy two-executable engine is the oracle throughout —
+including un-aligned budgets, windowed ring wrap, speculation, and
+preempt-then-resume mid-prefill."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model_defs
+from repro.models import module as m
+from repro.serve.engine import Engine, Request
+from repro.serve.spec import SpecConfig
+
+
+def _model(arch="internlm2-1.8b", **kw):
+    cfg = reduced(get_config(arch), **kw)
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    return cfg, params
+
+
+def _serve(cfg, params, prompts, max_new, slots=3, max_len=96, **kw):
+    eng = Engine(cfg, params, slots=slots, max_len=max_len,
+                 sync_interval=4, seed=0, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=max_new))
+    done = eng.run(max_steps=50_000)
+    assert len(done) == len(prompts), [r.status for r in done]
+    return {r.rid: list(r.out_tokens) for r in done}, eng
+
+
+PROMPTS = [[(7 * j + i) % 200 + 1 for j in range(3 + 9 * i)]
+           for i in range(5)]            # lengths 3, 12, 21, 30, 39
+
+
+# ---------------------------------------------------------------------------
+# Mixed-chunk parity vs the two-executable engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("budget", [3, 8, 13])
+def test_mixed_chunk_parity_unaligned_budgets(budget):
+    """Token-identical to the legacy engine for budgets smaller than a
+    page (3 < P=8), page-aligned (8), and straddling a page boundary
+    (13): the per-slot right-aligned row layout and per-row position
+    masks must hold at any prompt-slice/page phase."""
+    cfg, params = _model()
+    legacy, _ = _serve(cfg, params, PROMPTS, 10, chunked_prefill=False)
+    fused, eng = _serve(cfg, params, PROMPTS, 10, chunked_prefill=True,
+                        prefill_budget=budget)
+    assert fused == legacy
+    assert eng.prefill_compiles == 0
+    assert eng.suffix_prefill_compiles == 0
+    assert eng.decode_compiles == 1
+    assert eng.admit_compiles == 1
+
+
+def test_mixed_chunk_parity_gemma2_ring_wrap():
+    """Windowed arch: generation runs ``window + 8`` tokens so the
+    sliding-window ring wraps mid-serve; the fused chunk's per-slot
+    ``cache_len`` keeps every ring-validity mask exact while neighbours
+    sit mid-prefill."""
+    cfg, params = _model("gemma2-2b")
+    w = min(b.window for b in cfg.blocks if b.window is not None)
+    prompts = [[3, 1, 4, 1, 5], [2, 7, 1, 8], [3, 1, 4, 1, 5, 9]]
+    legacy, _ = _serve(cfg, params, prompts, w + 8, chunked_prefill=False)
+    fused, eng = _serve(cfg, params, prompts, w + 8, chunked_prefill=True,
+                        prefill_budget=4)
+    assert fused == legacy
+    assert eng.decode_compiles == 1 and eng.prefill_compiles == 0
+
+
+def test_fused_pool_direct_prefill_attention_parity_and_hlo():
+    """paged_kernel=True: the fused executable reads prompt context
+    pool-direct.  Token parity with the gather build AND a textual HLO
+    check that the gathered ring intermediates are absent from the one
+    fused executable (prefill context reads included — there is no other
+    executable they could hide in)."""
+    cfg, params = _model()
+    gather, _ = _serve(cfg, params, PROMPTS, 8, chunked_prefill=True,
+                       prefill_budget=13, paged_kernel=False)
+    pooled, eng = _serve(cfg, params, PROMPTS, 8, chunked_prefill=True,
+                         prefill_budget=13, paged_kernel=True)
+    assert pooled == gather
+    ex = eng.executor
+    with ex._ctx():
+        hlo = ex._chunk_fn.lower(eng.params, eng.draft_params, eng.cache,
+                                 eng.state).compile().as_text()
+    spec = eng.spec
+    kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    for g in spec.groups:
+        ring = g.ring_blocks * spec.page_size
+        assert f"[{spec.slots},{g.ring_blocks},{spec.page_size},{kv},{dh}]" \
+            not in hlo
+        assert f"[{spec.slots},{kv},{ring},{dh}]" not in hlo
+
+
+# ---------------------------------------------------------------------------
+# Compile-count telemetry: ONE fused executable (+ admission splice)
+# ---------------------------------------------------------------------------
+
+def test_fused_warmup_two_executables_and_inert():
+    """Fused warmup compiles exactly the fused chunk + the admission
+    bookkeeping splice — zero prefill executables exist — stays
+    semantically inert, and steady-state serving adds no compiles for
+    ANY prompt length (no buckets to miss)."""
+    cfg, params = _model()
+    eng = Engine(cfg, params, slots=2, max_len=96, sync_interval=4)
+    assert eng.chunked_prefill     # "auto" resolves on for this arch
+    eng.warmup()
+    assert (eng.prefill_compiles, eng.suffix_prefill_compiles,
+            eng.decode_compiles, eng.admit_compiles) == (0, 0, 1, 1)
+    assert not bool(np.asarray(eng.state["active"]).any())
+    for i, plen in enumerate([1, 5, 17, 40, 63]):   # no bucket ladder
+        eng.submit(Request(rid=i, prompt=[(i + j) % 150 + 1
+                                          for j in range(plen)],
+                           max_new_tokens=4))
+    done = eng.run(max_steps=50_000)
+    assert len(done) == 5
+    assert (eng.prefill_compiles, eng.suffix_prefill_compiles,
+            eng.decode_compiles, eng.admit_compiles) == (0, 0, 1, 1)
+
+
+def test_fused_steady_state_sync_free():
+    """The fused chunk performs zero device->host transfers; the drain
+    reads tokens AND the prefill cursor in ONE batched transfer."""
+    cfg, params = _model()
+    eng = Engine(cfg, params, slots=2, max_len=96, prefill_budget=8)
+    assert eng.chunked_prefill
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=32))
+    eng.submit(Request(rid=1, prompt=[(3 * j) % 99 + 1 for j in range(20)],
+                       max_new_tokens=32))
+    eng._admit()
+    with jax.transfer_guard_device_to_host("disallow"):
+        toks = eng.step_chunk()
+        toks2 = eng.step_chunk()
+    eng._drain(jnp.concatenate([toks, toks2]))
+    assert eng.host_syncs == 1 and eng.steps == 2 * eng.sync_interval
+    # slot 0 (3-token prompt) completed prefill on micro-step 1, then
+    # decoded every remaining micro-step
+    r0 = eng._slot_req[0]
+    assert len(r0.out_tokens) == 2 * eng.sync_interval
+
+
+# ---------------------------------------------------------------------------
+# Speculation x chunked prefill (satellite: drafting gated on prefill end)
+# ---------------------------------------------------------------------------
+
+def test_spec_k4_drafting_disabled_until_prefill_complete():
+    """K=4 regression: a slot mid-prefill must neither emit tokens nor
+    advance the speculative counters — drafting starts only once its
+    prefill cursor reaches the prompt end — and the final output is
+    token-identical to the legacy speculative engine."""
+    cfg, params = _model()
+    prompt = [(5 * j) % 180 + 1 for j in range(20)]
+    eng = Engine(cfg, params, slots=1, max_len=96, sync_interval=1,
+                 seed=0, spec=SpecConfig(k=4), prefill_budget=4)
+    assert eng.chunked_prefill
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+    saw_mid_prefill = False
+    # chunk_rows = max(budget=4, K+1=5) = 5 prompt tokens per micro-step
+    for _ in range(3):                      # 3 chunks x 5 tokens < 20
+        eng.step()
+        req = eng._slot_req[0]
+        assert req is not None and not req.out_tokens
+        assert 0 < eng._slot_seen_len[0] < len(prompt)
+        assert eng.spec_stats()["spec_steps"] == 0
+        assert eng.spec_stats()["drafted_tokens"] == 0
+        saw_mid_prefill = True
+    (done,) = eng.run(max_steps=50_000)
+    assert saw_mid_prefill and len(done.out_tokens) == 8
+    assert eng.spec_stats()["spec_steps"] > 0    # drafting did engage
+    cfg2, params2 = _model()
+    legacy, _ = _serve(cfg2, params2, [prompt], 8, slots=1,
+                       chunked_prefill=False, spec=SpecConfig(k=4))
+    assert list(done.out_tokens) == legacy[0]
+
+
+def test_spec_fused_statistics_match_legacy():
+    """Beyond token parity: acceptance/emission counters of the fused
+    engine are IDENTICAL to the legacy engine's (the fused step runs the
+    same draft/verify/accept round for decoding slots)."""
+    cfg, params = _model()
+    prompts = [[1, 2, 3, 4, 5] * 3, [9, 8, 7, 6] * 4]
+    legacy, el = _serve(cfg, params, prompts, 16, chunked_prefill=False,
+                        spec="ngram")
+    fused, ef = _serve(cfg, params, prompts, 16, chunked_prefill=True,
+                       prefill_budget=8, spec="ngram")
+    assert fused == legacy
+    ls, fs = el.spec_stats(), ef.spec_stats()
+    for key in ("spec_steps", "drafted_tokens", "accepted_tokens",
+                "emitted_tokens"):
+        assert ls[key] == fs[key], (key, ls[key], fs[key])
+
+
+# ---------------------------------------------------------------------------
+# Preemption / resume mid-prefill
+# ---------------------------------------------------------------------------
+
+def test_preempt_then_resume_mid_prefill_token_parity():
+    """Preempting a slot whose prefill is underway preserves exactly the
+    host-confirmed written prefix in the radix index; the resume recovers
+    it as a prefix hit and the final output matches an undisturbed
+    run."""
+    cfg, params = _model()
+    prompt = list(range(1, 41))
+    eng = Engine(cfg, params, slots=1, max_len=96, sync_interval=1,
+                 seed=0, prefill_budget=4)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+    eng.step()
+    eng.step()
+    assert 0 < eng._slot_seen_len[0] < len(prompt)    # mid-prefill
+    eng._preempt_slot(0, "pressure")
+    (done,) = eng.run(max_steps=50_000)
+    undisturbed, _ = _serve(cfg, params, [prompt], 8, slots=1,
+                            chunked_prefill=False)
+    assert list(done.out_tokens) == undisturbed[0]
+    fs = eng.fault_stats()
+    assert fs["resumes"] == 1
+    assert fs["recovered_prefill_fraction"] > 0.0
+    assert eng.leaked_pages() == 0
+
+
+def test_fused_prefix_sharing_deferred_indexing():
+    """A prompt enters the radix index only when its prefill COMPLETES:
+    a same-boundary duplicate cannot share (its pages are not written
+    yet), a later wave shares fully."""
+    cfg, params = _model()
+    head = [(3 * j) % 200 + 1 for j in range(24)]
+    eng = Engine(cfg, params, slots=2, max_len=96, prefill_budget=8,
+                 sync_interval=4, seed=0)
+    for i in range(2):       # same boundary: no sharing possible
+        eng.submit(Request(rid=i, prompt=head + [30 + i],
+                           max_new_tokens=6))
+    eng.run(max_steps=50_000)
+    assert eng.prefix_stats()["prefix_hits"] == 0
+    eng.submit(Request(rid=2, prompt=head + [77], max_new_tokens=6))
+    (r2,) = [r for r in eng.run(max_steps=50_000) if r.rid == 2]
+    ps = eng.prefix_stats()
+    assert ps["prefix_hits"] == 1
+    assert ps["prefill_tokens_skipped"] == 24
+    legacy, _ = _serve(cfg, params, [head + [77]], 6, slots=2,
+                       chunked_prefill=False)
+    assert list(r2.out_tokens) == legacy[0]
+
+
+# ---------------------------------------------------------------------------
+# Contracts
+# ---------------------------------------------------------------------------
+
+def test_fused_submit_contracts():
+    cfg, params = _model()
+    eng = Engine(cfg, params, slots=1, max_len=32)
+    assert eng.chunked_prefill
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(Request(rid=0, prompt=[], max_new_tokens=4))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(rid=1, prompt=list(range(1, 31)),
+                           max_new_tokens=8))
+    from dataclasses import replace
+    cfgw = reduced(get_config("gemma2-2b"))
+    cfgw = replace(cfgw, blocks=tuple(       # every layer windowed →
+        replace(b, window=b.window or 8)     # legacy would allow long
+        for b in cfgw.blocks))               # generations past max_len
+    paramsw = m.init_params(model_defs(cfgw), jax.random.PRNGKey(0),
+                            jnp.float32)
+    engw = Engine(cfgw, paramsw, slots=1, max_len=32)
+    assert engw.chunked_prefill and cfgw.supports_long_context
+    with pytest.raises(ValueError, match="chunked_prefill"):
+        # the fused prompt staging buffer caps the whole span
+        engw.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=40))
+    with pytest.raises(ValueError, match="prefill_budget"):
+        Engine(cfg, params, slots=1, max_len=32, prefill_budget=0)
+    # non-capable archs fall back to legacy under "auto" and refuse an
+    # explicit opt-in
+    cfgr, paramsr = _model("rwkv6-7b")
+    engr = Engine(cfgr, paramsr, slots=1, max_len=32)
+    assert not engr.chunked_prefill
+    with pytest.raises(ValueError, match="chunked_prefill"):
+        Engine(cfgr, paramsr, slots=1, max_len=32, chunked_prefill=True)

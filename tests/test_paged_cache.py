@@ -346,8 +346,12 @@ def test_multi_token_append_into_cow_shared_page_rolls_back():
     cfg, params = _model("internlm2-1.8b")
     prefix = [(3 * j) % 200 + 1 for j in range(16)]
     tail = [50, 51, 52, 53, 54, 55, 56, 57]
+    # legacy prefill path: same-wave sharing (rid=1 attaches rid=0's
+    # pages while both admit together) needs eager radix indexing, which
+    # fused chunked prefill defers to prefill completion
     eng = Engine(cfg, params, slots=2, max_len=64, page_size=8,
-                 spec=SpecConfig(draft="ngram", k=4))
+                 spec=SpecConfig(draft="ngram", k=4),
+                 chunked_prefill=False)
     eng.submit(Request(rid=0, prompt=prefix + tail, max_new_tokens=6))
     eng.submit(Request(rid=1, prompt=prefix + tail[:3] + [99],
                        max_new_tokens=6))
@@ -358,7 +362,8 @@ def test_multi_token_append_into_cow_shared_page_rolls_back():
     # solo oracle: the CoW'd slot's output is unaffected by sharing +
     # speculative rollback
     solo = Engine(cfg, params, slots=2, max_len=64, page_size=8,
-                  spec=SpecConfig(draft="ngram", k=4))
+                  spec=SpecConfig(draft="ngram", k=4),
+                  chunked_prefill=False)
     solo.submit(Request(rid=1, prompt=prefix + tail[:3] + [99],
                         max_new_tokens=6))
     (s,) = solo.run()

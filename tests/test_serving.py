@@ -187,10 +187,12 @@ def test_bucketed_prefill_matches_unpadded(arch):
 
 
 def test_prefill_retrace_bounded_by_buckets():
-    """Mixed prompt lengths compile at most len(buckets) prefill
-    executables and exactly one decode executable."""
+    """Legacy two-executable mode: mixed prompt lengths compile at most
+    len(buckets) prefill executables and exactly one decode executable
+    (fused chunked prefill — the default — compiles zero prefill
+    executables; tests/test_chunked_prefill.py covers that mode)."""
     cfg, params = _model("internlm2-1.8b")
-    eng = Engine(cfg, params, slots=3, max_len=64)
+    eng = Engine(cfg, params, slots=3, max_len=64, chunked_prefill=False)
     lengths = [1, 2, 3, 5, 7, 8, 9, 11, 13, 4, 6, 12]
     for i, plen in enumerate(lengths):
         eng.submit(Request(rid=i, prompt=[(i + j) % cfg.vocab_size
@@ -222,7 +224,7 @@ def test_steady_state_decode_is_sync_free():
     zero-copy so it cannot fire); the host_syncs accounting below is the
     backend-independent check."""
     cfg, params = _model("internlm2-1.8b")
-    eng = Engine(cfg, params, slots=2, max_len=64)
+    eng = Engine(cfg, params, slots=2, max_len=64, chunked_prefill=False)
     eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=32))
     eng.submit(Request(rid=1, prompt=[4, 5], max_new_tokens=32))
     eng._admit()
@@ -240,9 +242,10 @@ def test_steady_state_decode_is_sync_free():
 def test_warmup_precompiles_and_stays_inert():
     """warmup() compiles every bucket + the decode chunk without
     activating slots, and later serving adds no new compiles for bucketed
-    lengths."""
+    lengths (legacy mode; the fused mode's 2-executable warmup is covered
+    in tests/test_chunked_prefill.py)."""
     cfg, params = _model("internlm2-1.8b")
-    eng = Engine(cfg, params, slots=2, max_len=64)
+    eng = Engine(cfg, params, slots=2, max_len=64, chunked_prefill=False)
     eng.warmup()
     n_prefill, n_decode = eng.prefill_compiles, eng.decode_compiles
     assert n_prefill == len(eng.buckets) and n_decode == 1
@@ -296,7 +299,8 @@ def test_chunked_prefill_reuses_buckets():
     bucket-growth recompile, token output identical to teacher
     forcing."""
     cfg, params = _model("internlm2-1.8b")
-    eng = Engine(cfg, params, slots=2, max_len=64, buckets=[8])
+    eng = Engine(cfg, params, slots=2, max_len=64, buckets=[8],
+                 chunked_prefill=False)
     prompt = [(7 * j) % 200 + 1 for j in range(30)]
     eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
     (r,) = eng.run()
@@ -318,7 +322,8 @@ def test_chunked_prefill_matches_single_shot():
     prompts = [[(11 * j) % 250 + 1 for j in range(27)], [3, 1, 4]]
     outs = []
     for buckets in ([8], None):
-        eng = Engine(cfg, params, slots=2, max_len=64, buckets=buckets)
+        eng = Engine(cfg, params, slots=2, max_len=64, buckets=buckets,
+                     chunked_prefill=False)
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
         outs.append({r.rid: r.out_tokens for r in eng.run()})
@@ -329,7 +334,8 @@ def test_chunked_prefill_non_capable_arch_grows_bucket():
     """Archs without the suffix machinery (windowed layers) keep the old
     fallback: the bucket list grows and output stays correct."""
     cfg, params = _model("gemma2-2b")
-    eng = Engine(cfg, params, slots=1, max_len=96, buckets=[8])
+    eng = Engine(cfg, params, slots=1, max_len=96, buckets=[8],
+                 chunked_prefill=False)
     prompt = [(5 * j) % 200 + 1 for j in range(22)]
     eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
     (r,) = eng.run()

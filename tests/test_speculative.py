@@ -290,14 +290,25 @@ def test_spec_with_prefix_sharing_matches_exclusive():
     cfg, params = _model("internlm2-1.8b")
     prefix = [(3 * j) % 200 + 1 for j in range(16)]
     tail = [50, 51, 52, 53, 54, 55, 56, 57]
-    reqs = [(prefix + tail, 8),                  # indexes 3 full pages
-            (prefix + tail[:3] + [99], 8),       # partial page-2 match: CoW
+    seed = [(prefix + tail, 8)]                  # indexes 3 full pages
+    reqs = [(prefix + tail[:3] + [99], 8),       # partial page-2 match: CoW
             (prefix + tail, 8),                  # full re-hit
             (prefix + tail[:2] + [7, 8], 8)]     # second partial match
-    excl, _ = _run(cfg, params, SpecConfig(k=4), reqs, slots=2, max_len=64,
-                   prefix_sharing=False)
-    shared, eng = _run(cfg, params, SpecConfig(k=4), reqs, slots=2,
-                       max_len=64)
+    # two waves: fused chunked prefill indexes the seed prompt's pages at
+    # prefill completion, so the sharers must arrive after it finishes
+    excl_eng = Engine(cfg, params, spec=SpecConfig(k=4), slots=2,
+                      max_len=64, prefix_sharing=False)
+    eng = Engine(cfg, params, spec=SpecConfig(k=4), slots=2, max_len=64)
+    excl, shared = {}, {}
+    for wave in (seed, reqs):
+        for e, out in ((excl_eng, excl), (eng, shared)):
+            rs = [Request(rid=len(out) + i, prompt=list(p),
+                          max_new_tokens=mx)
+                  for i, (p, mx) in enumerate(wave)]
+            for r in rs:
+                e.submit(r)
+            done = e.run(max_steps=100_000)
+            out.update({r.rid: r.out_tokens for r in done})
     assert shared == excl
     ps = eng.prefix_stats()
     assert ps["prefix_hits"] >= 3 and ps["cow_copies"] >= 2
