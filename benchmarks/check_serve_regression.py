@@ -29,8 +29,18 @@ in the same CI job) against the committed baseline run and fails when:
   decode-token latency advantage under long-prompt arrivals fell below
   1.3x, a prefill executable reappeared (fused mode must compile
   exactly one decode chunk + one admission splice), the fused chunk
-  stopped being sync-free, or the gathered-ring shapes reappeared in
-  the fused executable's HLO;
+  stopped being sync-free, the gathered-ring shapes reappeared in
+  the fused executable's HLO, or TTFT telemetry went vacuous / the
+  fused TTFT p99 blew past 15x the legacy engine's (streaming
+  admissions stopped making prefill progress);
+* the quantized-pool workload regressed — int8 pools fell back to
+  fp32, greedy-token agreement with fp32 pools fell below 0.99 on the
+  chain-overfit model, the teacher-forced max logit error exceeded
+  0.25, the equal-HBM capacity demo stopped fitting >= 1.8x the
+  concurrent slots in at-most-the-fp32 pool bytes (or never reached
+  full occupancy), preemption-resume or CoW-sharing outputs diverged,
+  pages leaked, the chunk stopped being sync-free, or the decode
+  executable retraced;
 * a **gated metric key is missing** from a workload the candidate run
   claims to include — a silently-dropped metric must read as a
   regression, not as a pass through a forgiving ``.get`` default (the
@@ -93,7 +103,8 @@ def check(runs, threshold: float) -> int:
 
     if _require(cand, failures, "engine", [
             "decode_sync_free", "ref_tokens_per_s", "new_tokens_per_s",
-            "new_decode_compiles"]):
+            "new_decode_compiles", "pool_bytes_per_live_token",
+            "kv_dtype", "peak_live_slots"]):
         ref_scale = cand["ref_tokens_per_s"] / base["ref_tokens_per_s"]
         expected = base["new_tokens_per_s"] * ref_scale
         floor = (1.0 - threshold) * expected
@@ -127,7 +138,8 @@ def check(runs, threshold: float) -> int:
     if "prefix_outputs_match_exclusive" in cand:
         _require(cand, failures, "prefix-sharing", [
             "prefix_hit_rate", "prefix_pages_saved",
-            "prefix_decode_sync_free", "prefix_decode_compiles"])
+            "prefix_decode_sync_free", "prefix_decode_compiles",
+            "prefix_pool_bytes_per_live_token", "prefix_peak_live_slots"])
         if not cand["prefix_outputs_match_exclusive"]:
             failures.append(
                 "prefix-hit correctness regressed: shared-prefix outputs "
@@ -166,7 +178,9 @@ def check(runs, threshold: float) -> int:
             "paged_kernel_outputs_match", "paged_kernel_gather_free",
             "gather_path_materializes_ring",
             "paged_kernel_decode_sync_free",
-            "paged_kernel_decode_compiles", "paged_gather_tokens_per_s"])
+            "paged_kernel_decode_compiles", "paged_gather_tokens_per_s",
+            "paged_kernel_pool_bytes_per_live_token",
+            "paged_kernel_peak_live_slots"])
         if not cand.get("paged_kernel_outputs_match", False):
             failures.append(
                 "paged-kernel correctness regressed: pool-direct outputs "
@@ -212,7 +226,8 @@ def check(runs, threshold: float) -> int:
         _require(cand, failures, "speculative", [
             "spec_outputs_match", "spec_acceptance_rate",
             "spec_baseline_decode_tokens_per_s", "spec_decode_sync_free",
-            "spec_decode_compiles", "spec_admit_compiles"])
+            "spec_decode_compiles", "spec_admit_compiles",
+            "spec_pool_bytes_per_live_token", "spec_peak_live_slots"])
         if not cand.get("spec_outputs_match", False):
             failures.append(
                 "speculative correctness regressed: drafted outputs "
@@ -262,7 +277,8 @@ def check(runs, threshold: float) -> int:
     if "ft_goodput" in cand:
         _require(cand, failures, "fault-tolerance", [
             "ft_outputs_match", "ft_preemptions", "ft_leaked_pages",
-            "ft_decode_sync_free", "ft_decode_compiles"])
+            "ft_decode_sync_free", "ft_decode_compiles",
+            "ft_pool_bytes_per_live_token", "ft_peak_live_slots"])
         if not cand.get("ft_outputs_match", False):
             failures.append(
                 "fault-tolerance correctness regressed: preempted-then-"
@@ -309,7 +325,10 @@ def check(runs, threshold: float) -> int:
         _require(cand, failures, "chunked-prefill", [
             "cp_outputs_match", "cp_fused_prefill_compiles",
             "cp_fused_decode_compiles", "cp_fused_admit_compiles",
-            "cp_fused_decode_sync_free", "cp_fused_gather_free"])
+            "cp_fused_decode_sync_free", "cp_fused_gather_free",
+            "cp_fused_ttft_p50_s", "cp_fused_ttft_p99_s",
+            "cp_legacy_ttft_p50_s", "cp_legacy_ttft_p99_s",
+            "cp_pool_bytes_per_live_token", "cp_peak_live_slots"])
         if not cand.get("cp_outputs_match", False):
             failures.append(
                 "chunked-prefill correctness regressed: fused mixed-chunk "
@@ -346,6 +365,25 @@ def check(runs, threshold: float) -> int:
             failures.append(
                 "fused chunk executable materializes gathered-ring "
                 "shapes — prompt context reads must stay pool-direct")
+        # TTFT is the price of streaming: it may lag the legacy full-
+        # prefill dispatch, but boundedly — a runaway ratio means the
+        # prefill budget stopped making progress (e.g. admissions
+        # starved), and a zero TTFT means the measurement went vacuous.
+        # Same-machine ratio, so no normalization is needed.
+        f_p99 = cand.get("cp_fused_ttft_p99_s", 0.0)
+        l_p99 = cand.get("cp_legacy_ttft_p99_s", 0.0)
+        if not (f_p99 > 0.0 and l_p99 > 0.0
+                and cand.get("cp_fused_ttft_p50_s", 0.0) > 0.0
+                and cand.get("cp_legacy_ttft_p50_s", 0.0) > 0.0):
+            failures.append(
+                "chunked-prefill TTFT telemetry vacuous: a percentile "
+                f"is missing or zero (fused p99 {f_p99:.4f}s, legacy "
+                f"p99 {l_p99:.4f}s)")
+        elif f_p99 > 15.0 * l_p99:
+            failures.append(
+                "chunked-prefill TTFT p99 regressed: fused "
+                f"{f_p99:.3f}s > 15x legacy {l_p99:.3f}s — streaming "
+                "admissions stopped making prefill progress")
         print(f"chunked prefill: p99_ratio=x{ratio:.2f} "
               f"(legacy "
               f"{cand.get('cp_legacy_chunk_token_p99_ms', 0.0):.2f}ms "
@@ -361,6 +399,99 @@ def check(runs, threshold: float) -> int:
         failures.append("candidate run dropped the chunked-prefill "
                         "workload (cp_* fields missing)")
 
+    # ---- quantized-pool gates (int8 KV page pool workload, same run).
+    # 8-bit pools must be invisible in the tokens of a decision-
+    # confident (chain-overfit) model, pay for themselves in capacity
+    # at equal HBM bytes, and survive the fault paths (preemption
+    # resume, CoW sharing) without leaking pages or precision.
+    if "qp_greedy_match" in cand:
+        _require(cand, failures, "quantized-pool", [
+            "qp_kv_dtype", "qp_max_logit_err",
+            "qp_fp32_pool_bytes", "qp_quant_pool_bytes",
+            "qp_equal_bytes_slot_ratio", "qp_equal_bytes_peak_live_slots",
+            "qp_equal_bytes_slots", "qp_preemptions",
+            "qp_preempt_outputs_match", "qp_preempt_leaked_pages",
+            "qp_cow_outputs_match", "qp_prefix_hits",
+            "qp_decode_sync_free", "qp_decode_compiles",
+            "qp_pool_bytes_per_live_token", "qp_peak_live_slots"])
+        if cand.get("qp_kv_dtype") == "fp32":
+            failures.append(
+                "quantized-pool workload ran on fp32 pools — the 8-bit "
+                "path silently fell back (kv_dtype probe regressed)")
+        if not cand.get("qp_greedy_match", 0.0) >= 0.99:
+            failures.append(
+                "quantized-pool greedy parity < 0.99 vs fp32 pools on "
+                "the chain-overfit model "
+                f"({cand.get('qp_greedy_match', 0.0):.4f} over "
+                f"{cand.get('qp_total_positions')} positions) — dequant "
+                "noise is eating real decision margins")
+        if not cand.get("qp_max_logit_err", 1e9) <= 0.25:
+            failures.append(
+                "quantized-pool teacher-forced max logit error > 0.25 "
+                f"({cand.get('qp_max_logit_err', 0.0):.4f}) — the 8-bit "
+                "pool's precision loss grew beyond quantization noise")
+        if cand.get("qp_quant_pool_bytes", 0) \
+                > cand.get("qp_fp32_pool_bytes", 0):
+            failures.append(
+                "quantized pool used MORE page-pool bytes than the fp32 "
+                f"baseline ({cand.get('qp_quant_pool_bytes')} > "
+                f"{cand.get('qp_fp32_pool_bytes')}) — the equal-HBM "
+                "capacity claim is vacuous")
+        slot_ratio = cand.get("qp_equal_bytes_slot_ratio", 0.0)
+        if not slot_ratio >= 1.8:
+            failures.append(
+                "quantized pool concurrent-slot ratio < 1.8x at equal "
+                f"HBM bytes (x{slot_ratio:.2f})")
+        if cand.get("qp_equal_bytes_peak_live_slots", 0) \
+                != cand.get("qp_equal_bytes_slots", -1):
+            failures.append(
+                "quantized equal-bytes engine never reached full slot "
+                "occupancy (peak "
+                f"{cand.get('qp_equal_bytes_peak_live_slots')} of "
+                f"{cand.get('qp_equal_bytes_slots')}) — the capacity "
+                "ratio was not demonstrated concurrently")
+        if not cand.get("qp_preemptions", 0) >= 1:
+            failures.append(
+                "quantized-pool preemption run inert: the oversubscribed "
+                "int8 pool produced no preemptions")
+        if not cand.get("qp_preempt_outputs_match", False):
+            failures.append(
+                "quantized-pool preemption-resume outputs diverged from "
+                "the calm int8 run at temperature 0")
+        if cand.get("qp_preempt_leaked_pages", 0) != 0:
+            failures.append(
+                "quantized-pool preemption run leaked pages "
+                f"({cand.get('qp_preempt_leaked_pages')})")
+        if not cand.get("qp_cow_outputs_match", False):
+            failures.append(
+                "quantized-pool CoW/prefix-sharing outputs diverged from "
+                "exclusive ownership — shared-page scale rows are not "
+                "copied with their pages")
+        if not cand.get("qp_prefix_hits", 0) >= 1:
+            failures.append(
+                "quantized-pool CoW parity vacuous: the sharing engine "
+                "recorded no prefix hits")
+        if not cand.get("qp_decode_sync_free", True):
+            failures.append("quantized-pool decode chunk performed a "
+                            "device->host transfer")
+        if cand.get("qp_decode_compiles", 1) != 1:
+            failures.append(
+                "quantized-pool workload retraced the decode chunk "
+                f"({cand.get('qp_decode_compiles')} compiles) — 8-bit "
+                "pools must reuse the one executable")
+        print(f"quantized pool [{cand.get('qp_kv_dtype')}]: "
+              f"greedy_match={cand.get('qp_greedy_match', 0.0):.4f} "
+              f"logit_err={cand.get('qp_max_logit_err', 0.0):.4f} "
+              f"slots x{cand.get('qp_equal_bytes_slot_ratio', 0.0):.1f} "
+              f"({cand.get('qp_quant_pool_bytes')}B <= "
+              f"{cand.get('qp_fp32_pool_bytes')}B) "
+              f"preempt={cand.get('qp_preemptions')} "
+              f"cow_match={cand.get('qp_cow_outputs_match')} "
+              f"leaked={cand.get('qp_preempt_leaked_pages')}")
+    elif "qp_greedy_match" in base:
+        failures.append("candidate run dropped the quantized-pool "
+                        "workload (qp_* fields missing)")
+
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
@@ -372,7 +503,10 @@ def check(runs, threshold: float) -> int:
           "fault tolerance preempts/resumes token-identically with "
           "goodput >= 0.8 and zero leaked pages, chunked prefill "
           "token-identical with >= 1.3x p99 decode-token latency under "
-          "long-prompt arrivals and zero prefill executables")
+          "long-prompt arrivals, bounded TTFT, and zero prefill "
+          "executables, quantized int8 pool token-parity >= 0.99 with "
+          ">= 1.8x concurrent slots at equal HBM bytes and clean "
+          "preemption/CoW fault paths")
     return 0
 
 

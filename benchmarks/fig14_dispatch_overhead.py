@@ -49,6 +49,16 @@ percentiles for both engines are reported ungated — streaming a prompt
 through small chunks trades first-token latency for neighbour decode
 latency, and the record keeps both sides of that trade visible.
 
+``quantized_pool_comparison`` measures the int8 KV page pool against
+fp32 pools on a chain-overfit model (confident greedy decisions, so
+token agreement measures the pool, not init noise): positional greedy
+parity (gated >= 0.99), teacher-forced max logit error, >= 1.8x
+concurrent slots at equal-or-fewer page-pool bytes (scale rows billed),
+preemption-resume and CoW prefix-sharing parity on 8-bit pools, zero
+leaked pages, and the sync-free single-executable decode invariants.
+Every gated workload additionally records ``*_pool_bytes_per_live_token``
+/ ``*_kv_dtype`` / ``*_peak_live_slots`` pool-economics telemetry.
+
 The five trajectory workloads above pin ``chunked_prefill=False``: their
 committed BENCH baselines measure the legacy two-executable admission
 path, and the fused path's economics (S-row decode micro-steps) are
@@ -178,6 +188,7 @@ def shared_prefix_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     else:
         eng._drain(toks)
     rec["prefix_decode_sync_free"] = sync_free
+    rec.update(_pool_telemetry(eng, "prefix_"))
 
     emit("fig14.prefix_hit_rate", rec["prefix_hit_rate"],
          f"tokens_skipped={rec['prefill_tokens_skipped']},"
@@ -189,6 +200,26 @@ def shared_prefix_comparison(n_req: int = 12, max_new: int = 16) -> dict:
          rec["windowed_dense_vs_paged_ratio"],
          f"bytes_per_live_tok={rec['windowed_hbm_bytes_per_live_token']:.0f}")
     return rec
+
+
+def _pool_telemetry(eng, prefix: str) -> dict:
+    """Pool-economics telemetry every gated workload records: bytes of
+    leased page pool (at stored precision, scale rows included) per live
+    token sampled mid-flight via a probe request, the pool precision,
+    and the engine-lifetime concurrent-slot high-water."""
+    from repro.serve.engine import Request
+
+    eng.submit(Request(rid=990_001, prompt=[1, 2, 3], max_new_tokens=4))
+    eng._admit()
+    ms = eng.memory_stats()
+    eng.run(max_steps=100_000)
+    eng.finished = []
+    return {
+        f"{prefix}pool_bytes_per_live_token":
+            ms["pool_bytes_per_live_token"],
+        f"{prefix}kv_dtype": ms["kv_dtype"],
+        f"{prefix}peak_live_slots": eng.memory_stats()["peak_live_slots"],
+    }
 
 
 def _decode_executable(eng):
@@ -325,6 +356,7 @@ def paged_kernel_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         "paged_kernel_num_pages": kw["num_pages"],
         "paged_kernel_table_blocks": paged.spec.max_blocks,
     }
+    rec.update(_pool_telemetry(paged, "paged_kernel_"))
     emit("fig14.paged_kernel_speedup", rec["paged_kernel_speedup"],
          f"paged={paged_tps:.0f}tok/s,gather={gather_tps:.0f}tok/s,"
          f"backend={rec['paged_kernel_backend']}")
@@ -455,6 +487,7 @@ def speculative_comparison(max_new: int = 48) -> dict:
         "spec_decode_compiles": spec.decode_compiles,
         "spec_admit_compiles": spec.admit_compiles,
     }
+    rec.update(_pool_telemetry(spec, "spec_"))
     emit("fig14.spec_acceptance", rec["spec_acceptance_rate"],
          f"tokens_per_step={rec['spec_tokens_per_step']:.2f},"
          f"match={outputs_match}")
@@ -574,6 +607,7 @@ def fault_tolerance_comparison(n_req: int = 8, max_new: int = 16) -> dict:
         "ft_decode_compiles": eng.decode_compiles,
         "ft_decode_sync_free": sync_free,
     }
+    rec.update(_pool_telemetry(eng, "ft_"))
     emit("fig14.ft_goodput", goodput,
          f"preemptions={fs['preemptions']},"
          f"resumes={fs['resumes']},"
@@ -732,6 +766,7 @@ def chunked_prefill_comparison(n_arrivals: int = 3,
         "cp_fused_decode_sync_free": sync_free,
         "cp_fused_gather_free": gather_free,
     }
+    rec.update(_pool_telemetry(fused, "cp_"))
     emit("fig14.cp_p99_ratio", p99_ratio,
          f"fused_p99={fused_p99:.2f}ms,legacy_p99={legacy_p99:.2f}ms,"
          f"match={outputs_match}")
@@ -739,6 +774,230 @@ def chunked_prefill_comparison(n_arrivals: int = 3,
          f"legacy_jitter={rec['cp_legacy_jitter']:.2f},"
          f"ttft_p99={rec['cp_fused_ttft_p99_s']:.2f}s/"
          f"{rec['cp_legacy_ttft_p99_s']:.2f}s")
+    return rec
+
+
+def quantized_pool_comparison(n_req: int = 8, max_new: int = 48) -> dict:
+    """Quantized (int8) KV page pool vs fp32 pools: quality + capacity.
+
+    Greedy-parity needs a model whose argmax is *confident*: at random
+    init the top1-top2 logit gap (~0.01) sits below the int8 dequant
+    noise (~0.03), so token agreement would measure noise, not the pool.
+    The workload therefore overfits the reduced model on a deterministic
+    token chain (``next = (cur * 31 + 17) % vocab``, 80 adamw steps,
+    ~3s) until it follows the chain exactly; quantization error is then
+    orders of magnitude below the decision margin and any disagreement
+    is a real pool bug.
+
+    Gated (check_serve_regression): positional greedy-token agreement
+    int8 vs fp32 >= 0.99 over ``n_req * max_new`` positions; max
+    absolute logit error of teacher-forced decode on int8 pools vs fp32
+    pools bounded; >= 1.8x concurrent slots at equal (or fewer) HBM
+    page-pool bytes with the slot high-water proving they were actually
+    concurrent; preemption-resume parity on an oversubscribed int8 pool
+    (>= 1 preemption, outputs identical to the calm int8 run, zero
+    leaked pages — CoW page copies carry the scale rows); prefix-shared
+    CoW parity; and the structural invariants every trajectory gates:
+    ONE decode executable, sync-free decode chunk."""
+    from repro.configs import get_config, reduced
+    from repro.models import forward_decode, forward_prefill, forward_train
+    from repro.models import model_defs
+    from repro.models import module as m
+    from repro.optim import adamw
+    from repro.serve import cache as cm
+    from repro.serve.cache import CacheSpec
+    from repro.serve.engine import Engine, Request
+
+    cfg = reduced(get_config("internlm2-1.8b"))
+    vocab = cfg.vocab_size
+    kv_dtype = "int8"
+
+    def chain(start, n):
+        toks = [start % vocab]
+        for _ in range(n - 1):
+            toks.append((toks[-1] * 31 + 17) % vocab)
+        return toks
+
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    ocfg = adamw.AdamWConfig(lr=3e-3)
+    opt = adamw.init(params, ocfg)
+
+    @jax.jit
+    def train_step(p, o, toks):
+        def loss_fn(q):
+            return forward_train(q, cfg, {"tokens": toks[:, :-1],
+                                          "labels": toks[:, 1:]})
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        new_p, new_o, _ = adamw.update(grads, o, p, ocfg)
+        return new_p, new_o, loss
+
+    loss = None
+    for it in range(80):
+        batch = jnp.asarray([chain(1 + 8 * it + bi, 33)
+                             for bi in range(8)], jnp.int32)
+        params, opt, loss = train_step(params, opt, batch)
+    train_loss = float(loss)
+
+    prompts = [chain(11 + 7 * i, 16) for i in range(n_req)]
+    kw = dict(slots=4, max_len=256, page_size=8, sync_interval=8,
+              prefix_sharing=False)
+
+    def load(eng, reqs, ttl=None):
+        for rid, p, mn in reqs:
+            eng.submit(Request(rid=rid, prompt=list(p), max_new_tokens=mn,
+                               ttl=ttl))
+        done = eng.run(max_steps=200_000)
+        out = {r.rid: list(r.out_tokens) for r in done}
+        eng.finished = []
+        return out
+
+    reqs = [(i, p, max_new) for i, p in enumerate(prompts)]
+    base = Engine(cfg, params, kv_dtype="fp32", **kw)
+    base.warmup()
+    out32 = load(base, reqs)
+
+    quant = Engine(cfg, params, kv_dtype=kv_dtype, **kw)
+    assert quant.kv_dtype == kv_dtype, quant.kv_dtype
+    quant.warmup()
+    out8 = load(quant, reqs)
+
+    total = n_req * max_new
+    agree = sum(sum(a == b for a, b in zip(out32[i], out8[i]))
+                for i in range(n_req))
+    greedy_match = agree / total
+    exact = sum(out32[i] == out8[i] for i in range(n_req))
+    follows = sum(out32[i] == chain(prompts[i][-1], max_new + 1)[1:]
+                  for i in range(n_req))
+
+    # teacher-forced logit probe: same tokens decoded against fp32 and
+    # int8 pools (prefill KV admitted through the quantizing splice, new
+    # KV through the re-quantizing RMW write) — the max absolute logit
+    # divergence is the whole model-quality cost of the 8-bit pool
+    def admitted(sp, prompt):
+        _, dense = forward_prefill(
+            params, cfg, {"tokens": jnp.asarray([prompt], jnp.int32)})
+        rows = {g.key: jnp.arange(1, g.ring_blocks + 1, dtype=jnp.int32)
+                for g in sp.groups}
+        cache = cm.admit_cache(sp, sp.init_paged_cache(), dense,
+                               jnp.int32(0), jnp.int32(0),
+                               jnp.int32(len(prompt)), rows)
+        return cache
+
+    probe = prompts[0]
+    c32 = admitted(CacheSpec.from_config(cfg, 1, 64, page_size=8), probe)
+    c8 = admitted(CacheSpec.from_config(cfg, 1, 64, page_size=8,
+                                        kv_dtype=kv_dtype), probe)
+    max_logit_err = 0.0
+    for t in chain(probe[-1], 9)[1:]:
+        tk = jnp.asarray([[t]], jnp.int32)
+        lg32, c32 = forward_decode(params, cfg, tk, c32)
+        lg8, c8 = forward_decode(params, cfg, tk, c8)
+        max_logit_err = max(max_logit_err,
+                            float(jnp.max(jnp.abs(lg32 - lg8))))
+
+    # capacity at equal HBM: size an int8 pool to AT MOST the fp32
+    # engine's page-pool bytes (scale rows included) and serve 2x the
+    # slots concurrently.  Per-page byte ratio ~3.9x (int8 + 2 fp32
+    # scale rows vs fp32), so double the slots leaves headroom.
+    budget = base.spec.paged_kv_bytes()
+    probe_a = CacheSpec.from_config(cfg, 8, 256, page_size=8,
+                                    num_pages=64, kv_dtype=kv_dtype)
+    probe_b = CacheSpec.from_config(cfg, 8, 256, page_size=8,
+                                    num_pages=65, kv_dtype=kv_dtype)
+    per_page = probe_b.paged_kv_bytes() - probe_a.paged_kv_bytes()
+    fixed = probe_a.paged_kv_bytes() - 64 * per_page
+    npages = int((budget - fixed) // per_page)
+    cap = Engine(cfg, params, slots=8, max_len=256, page_size=8,
+                 sync_interval=8, prefix_sharing=False,
+                 num_pages=npages, kv_dtype=kv_dtype)
+    quant_bytes = cap.spec.paged_kv_bytes()
+    assert quant_bytes <= budget, (quant_bytes, budget)
+    cap.warmup()
+    load(cap, [(i, p, 16) for i, p in enumerate(prompts)])
+    cap_peak = cap.memory_stats()["peak_live_slots"]
+    slot_ratio = cap.spec.slots / base.spec.slots
+    page_ratio = (base.spec.paged_kv_bytes()
+                  / CacheSpec.from_config(cfg, 4, 256, page_size=8,
+                                          kv_dtype=kv_dtype)
+                  .paged_kv_bytes())
+
+    # preemption-resume parity on quantized pools: 12-page budget vs 8
+    # worst-case pages per request -> the engine must preempt; outputs
+    # must still match the calm int8 run and no page may leak
+    pre = Engine(cfg, params, num_pages=12, kv_dtype=kv_dtype, **kw)
+    pre.warmup()
+    out_pre = load(pre, reqs, ttl=600.0)
+    pre_fs = pre.fault_stats()
+    pre_match = out_pre == out8
+    pre_leaked = pre.leaked_pages()
+
+    # CoW parity: shared chain head, per-request off-chain branch token;
+    # radix sharing + copy-on-write must be output-invisible on 8-bit
+    # pools (copy_shared_page clones the scale rows with the page)
+    head = chain(701, 16)
+    cow_reqs = [(i, head + [(40 + 13 * i) % vocab], 24)
+                for i in range(n_req)]
+    share = Engine(cfg, params, slots=4, max_len=256, page_size=8,
+                   sync_interval=8, prefix_sharing=True,
+                   kv_dtype=kv_dtype)
+    share.warmup()
+    out_share = load(share, cow_reqs)
+    excl = Engine(cfg, params, kv_dtype=kv_dtype, **kw)
+    excl.warmup()
+    out_excl = load(excl, cow_reqs)
+    ps = share.prefix_stats()
+    cow_match = out_share == out_excl
+
+    sync_free = True
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            toks = quant.step_chunk()
+    except Exception as e:  # noqa: BLE001 - classify, don't swallow
+        if "transfer" not in str(e).lower():
+            raise
+        sync_free = False
+    else:
+        quant._drain(toks)
+
+    rec = {
+        "qp_requests": n_req,
+        "qp_max_new": max_new,
+        "qp_train_loss": train_loss,
+        "qp_fp32_follows_chain": follows / n_req,
+        "qp_greedy_match": greedy_match,
+        "qp_exact_matches": exact,
+        "qp_total_positions": total,
+        "qp_max_logit_err": max_logit_err,
+        "qp_fp32_pool_bytes": int(budget),
+        "qp_quant_pool_bytes": int(quant_bytes),
+        "qp_equal_bytes_slots": cap.spec.slots,
+        "qp_baseline_slots": base.spec.slots,
+        "qp_equal_bytes_slot_ratio": slot_ratio,
+        "qp_equal_bytes_peak_live_slots": int(cap_peak),
+        "qp_equal_bytes_num_pages": npages,
+        "qp_bytes_per_page_ratio": page_ratio,
+        "qp_preemptions": pre_fs["preemptions"],
+        "qp_preempt_outputs_match": pre_match,
+        "qp_preempt_leaked_pages": int(pre_leaked),
+        "qp_cow_outputs_match": cow_match,
+        "qp_prefix_hits": ps["prefix_hits"],
+        "qp_cow_copies": ps["cow_copies"],
+        "qp_shared_attaches": ps["shared_page_attaches"],
+        "qp_decode_compiles": quant.decode_compiles,
+        "qp_decode_sync_free": sync_free,
+    }
+    rec.update(_pool_telemetry(quant, "qp_"))
+    emit("fig14.qp_greedy_match", greedy_match,
+         f"exact={exact}/{n_req},logit_err={max_logit_err:.4f},"
+         f"loss={train_loss:.3f}")
+    emit("fig14.qp_equal_bytes_slot_ratio", slot_ratio,
+         f"bytes={int(quant_bytes)}<={int(budget)},"
+         f"peak_live={int(cap_peak)}/{cap.spec.slots},"
+         f"page_ratio={page_ratio:.2f}")
+    emit("fig14.qp_fault_parity", float(pre_match and cow_match),
+         f"preemptions={pre_fs['preemptions']},leaked={int(pre_leaked)},"
+         f"cow={ps['cow_copies']},hits={ps['prefix_hits']}")
     return rec
 
 
@@ -836,6 +1095,9 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
             mem_end["dense_vs_paged_capacity_ratio"],
         "paged_kv_bytes": mem_end["paged_kv_bytes"],
         "dense_kv_bytes": mem_end["dense_kv_bytes"],
+        "pool_bytes_per_live_token": mem_live["pool_bytes_per_live_token"],
+        "kv_dtype": mem_end["kv_dtype"],
+        "peak_live_slots": mem_end["peak_live_slots"],
     }
     emit("fig14.engine_ref_steps_per_s", 1e6 / rec["ref_steps_per_s"],
          f"syncs_per_step={rec['ref_host_syncs_per_step']:.2f}")
@@ -894,6 +1156,7 @@ def main() -> None:
     rec.update(speculative_comparison())
     rec.update(fault_tolerance_comparison())
     rec.update(chunked_prefill_comparison())
+    rec.update(quantized_pool_comparison())
     path = write_bench_json("BENCH_serve.json", rec)
     print(f"# serve trajectory appended to {path}", flush=True)
 

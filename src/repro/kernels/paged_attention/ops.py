@@ -47,7 +47,9 @@ def _on_tpu() -> bool:
 def pool_attention_xla(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
                        page_table: jax.Array, cache_len: jax.Array, *,
                        window: Optional[int] = None,
-                       softcap: Optional[float] = None) -> jax.Array:
+                       softcap: Optional[float] = None,
+                       k_scale: Optional[jax.Array] = None,
+                       v_scale: Optional[jax.Array] = None) -> jax.Array:
     """Gather-free XLA lowering: attend to the whole pool under a
     scattered per-slot validity mask.
 
@@ -59,7 +61,13 @@ def pool_attention_xla(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
     the kernel's clamped denominator.  ``q`` may carry ``S`` query rows
     per slot ([B,S,H,dh], the speculative verify step); query row ``i``
     sits at absolute position ``cache_len - S + i`` and the mask is
-    evaluated per row, so a drafted query never attends past itself."""
+    evaluated per row, so a drafted query never attends past itself.
+
+    ``k_scale``/``v_scale`` [num_pages+1, Hkv]: 8-bit quantized pools.
+    Dequantization is *folded*, pool-wide — the K scale multiplies the
+    scores (before the softcap), the V scale multiplies the softmax
+    weights — so no fp32 copy of the pool is ever stored (the 8-bit→f32
+    cast is a transient XLA fuses into the einsum)."""
     squeeze = q.ndim == 3
     if squeeze:
         q = q[:, None]
@@ -69,6 +77,10 @@ def pool_attention_xla(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
     ring = nb * page_size
     g = h // hkv
     scale = dh ** -0.5
+    quant = k_scale is not None
+    if quant:
+        pool_k = pool_k.astype(jnp.float32)
+        pool_v = pool_v.astype(jnp.float32)
     t = (cache_len - 1)[:, None, None]                         # [B,1,1]
     r = (jnp.arange(nb)[:, None] * page_size
          + jnp.arange(page_size)[None, :])[None]               # [1,nb,P]
@@ -83,14 +95,20 @@ def pool_attention_xla(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
         q2 = q[:, 0].reshape(b, hkv, g, dh)
         s = jnp.einsum("bkgd,npkd->bkgnp", q2, pool_k)
         s = s.astype(jnp.float32) * scale
+        if quant:        # dequant K: fold per-page scales into the scores
+            s = s * jnp.transpose(k_scale)[None, :, None, :, None]
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
         s = jnp.where(mask[:, None, None], s, NEG_INF)
         w = jnp.exp(s - jnp.max(s, axis=(-2, -1), keepdims=True))
         w = jnp.where(mask[:, None, None], w, 0.0)
         l = jnp.maximum(jnp.sum(w, axis=(-2, -1), keepdims=True), 1e-30)
-        out = jnp.einsum("bkgnp,npkd->bkgd", (w / l).astype(pool_v.dtype),
-                         pool_v)
+        w = w / l
+        if quant:        # dequant V: fold into the softmax weights
+            w = w * jnp.transpose(v_scale)[None, :, None, :, None]
+        else:
+            w = w.astype(pool_v.dtype)
+        out = jnp.einsum("bkgnp,npkd->bkgd", w, pool_v)
         out = out.reshape(b, 1, h, dh)
         return out[:, 0] if squeeze else out
     qpos = (cache_len - sq)[:, None] + jnp.arange(sq)[None, :]  # [B,S]
@@ -105,14 +123,20 @@ def pool_attention_xla(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
     q2 = q.reshape(b, sq, hkv, g, dh)
     s = jnp.einsum("bqkgd,npkd->bkgqnp", q2, pool_k)
     s = s.astype(jnp.float32) * scale
+    if quant:                # [1,k,1,1,n,1] — scale per (page, kv head)
+        s = s * jnp.transpose(k_scale)[None, :, None, None, :, None]
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
     s = jnp.where(mask, s, NEG_INF)
     w = jnp.exp(s - jnp.max(s, axis=(-2, -1), keepdims=True))
     w = jnp.where(mask, w, 0.0)
     l = jnp.maximum(jnp.sum(w, axis=(-2, -1), keepdims=True), 1e-30)
-    out = jnp.einsum("bkgqnp,npkd->bqkgd", (w / l).astype(pool_v.dtype),
-                     pool_v)
+    w = w / l
+    if quant:
+        w = w * jnp.transpose(v_scale)[None, :, None, None, :, None]
+    else:
+        w = w.astype(pool_v.dtype)
+    out = jnp.einsum("bkgqnp,npkd->bqkgd", w, pool_v)
     return out.reshape(b, sq, h, dh)
 
 
@@ -120,30 +144,50 @@ def paged_attention(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
                     page_table: jax.Array, cache_len: jax.Array, *,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
+                    k_scale: Optional[jax.Array] = None,
+                    v_scale: Optional[jax.Array] = None,
                     interpret: bool = False) -> jax.Array:
     """Pool-direct decode attention for 1..K+1 query rows per slot
-    (``q`` [B,H,dh] or [B,S,H,dh]); see module docstring for dispatch."""
+    (``q`` [B,H,dh] or [B,S,H,dh]); ``k_scale``/``v_scale``
+    [num_pages+1, Hkv] when the pools are 8-bit quantized (dequant
+    happens inside whichever lowering runs); see module docstring for
+    dispatch."""
     if interpret or _on_tpu():
         return paged_decode_attention(
             q, pool_k, pool_v, page_table, cache_len, window=window,
-            softcap=softcap, interpret=interpret or not _on_tpu())
+            softcap=softcap, k_scale=k_scale, v_scale=v_scale,
+            interpret=interpret or not _on_tpu())
     return pool_attention_xla(q, pool_k, pool_v, page_table, cache_len,
-                              window=window, softcap=softcap)
+                              window=window, softcap=softcap,
+                              k_scale=k_scale, v_scale=v_scale)
 
 
-@functools.lru_cache(maxsize=1)
-def supported() -> bool:
+_POOL_DTYPES = {"fp32": jnp.float32, "int8": jnp.int8}
+
+
+@functools.lru_cache(maxsize=None)
+def supported(kv_dtype: str = "fp32") -> bool:
     """Probe, don't version-sniff: run the smallest real paged-attention
-    kernel through the Pallas toolchain (interpret mode off-TPU).  API
-    drift (grid-spec / scalar-prefetch renames beyond what compat.py
-    shims) surfaces here as a clean False instead of a trace-time
-    crash."""
+    kernel through the Pallas toolchain (interpret mode off-TPU), in the
+    pool storage dtype the engine wants (scale operands + in-kernel
+    dequant included for 8-bit dtypes).  API drift (grid-spec /
+    scalar-prefetch / DMA renames beyond what compat.py shims) surfaces
+    here as a clean False instead of a trace-time crash."""
     try:
+        if kv_dtype == "fp8_e4m3":
+            if not hasattr(jnp, "float8_e4m3fn"):
+                return False
+            pool_dt = jnp.float8_e4m3fn
+        else:
+            pool_dt = _POOL_DTYPES[kv_dtype]
         q = jnp.zeros((1, 2, 8), jnp.float32)
-        pool = jnp.zeros((3, 4, 1, 8), jnp.float32)
+        pool = jnp.zeros((3, 4, 1, 8), pool_dt)
         pt = jnp.asarray([[0, 1]], jnp.int32)
         cl = jnp.asarray([5], jnp.int32)
+        sc = (jnp.ones((3, 1), jnp.float32)
+              if kv_dtype != "fp32" else None)
         out = paged_decode_attention(q, pool, pool, pt, cl,
+                                     k_scale=sc, v_scale=sc,
                                      interpret=not _on_tpu())
         return out.shape == (1, 2, 8)
     except Exception:

@@ -28,10 +28,14 @@ NEG_INF = -1e30
 def paged_attention_ref(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
                         page_table: jax.Array, cache_len: jax.Array, *,
                         window: Optional[int] = None,
-                        softcap: Optional[float] = None) -> jax.Array:
+                        softcap: Optional[float] = None,
+                        k_scale: Optional[jax.Array] = None,
+                        v_scale: Optional[jax.Array] = None) -> jax.Array:
     """q [B,H,dh] or [B,S,H,dh] (S query rows, newest last); pools
     [num_pages+1,P,Hkv,dh]; page_table [B,nb]; cache_len [B] (incl. the
-    newest query token) -> output shaped like ``q``."""
+    newest query token); ``k_scale``/``v_scale`` [num_pages+1, Hkv] when
+    the pools are 8-bit quantized (gathered pages are dequantized before
+    attending) -> output shaped like ``q``."""
     squeeze = q.ndim == 3
     if squeeze:
         q = q[:, None]
@@ -42,6 +46,9 @@ def paged_attention_ref(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
     g = h // hkv
     gk = pool_k[page_table]                       # [B, nb, P, Hkv, dh]
     gv = pool_v[page_table]
+    if k_scale is not None:    # dequant: scale per (page, kv head)
+        gk = gk.astype(jnp.float32) * k_scale[page_table][:, :, None, :, None]
+        gv = gv.astype(jnp.float32) * v_scale[page_table][:, :, None, :, None]
     ck = jnp.moveaxis(gk.reshape(b, ring, hkv, dh), 1, 2)
     cv = jnp.moveaxis(gv.reshape(b, ring, hkv, dh), 1, 2)
     t = (cache_len - 1)[:, None]

@@ -51,6 +51,14 @@ def main() -> None:
                          "dense cache's token capacity).  Sliding-window "
                          "groups are always window-sized: slots x "
                          "ceil(window/page_size) pages each")
+    ap.add_argument("--kv-dtype", choices=["auto", "fp32", "int8",
+                                           "fp8_e4m3"], default="auto",
+                    help="paged KV pool storage precision: 8-bit pools "
+                         "('int8'/'fp8_e4m3') store per-page fp32 scales "
+                         "alongside and dequantize inside the attention "
+                         "read (in-kernel on TPU).  'auto'/'fp32' keep "
+                         "full-precision pools; an unsupported 8-bit "
+                         "dtype falls back to fp32 with a notice")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable radix prefix sharing / copy-on-write "
                          "page reuse (exclusive page ownership)")
@@ -144,7 +152,11 @@ def main() -> None:
                  chaos=chaos,
                  chunked_prefill={"auto": "auto", "on": True,
                                   "off": False}[args.chunked_prefill],
-                 prefill_budget=args.prefill_budget)
+                 prefill_budget=args.prefill_budget,
+                 kv_dtype=args.kv_dtype)
+    if eng.kv_dtype != eng.requested_kv_dtype:
+        print(f"kv-dtype: '{eng.requested_kv_dtype}' unsupported on this "
+              f"toolchain -> fp32 pools")
     if args.warmup:
         t0 = time.perf_counter()
         eng.warmup()
@@ -180,6 +192,7 @@ def main() -> None:
         f"{k}:{v['num_pages']}p{'w' if v['windowed'] else ''}"
         for k, v in ms["pool_groups"].items())
     print(f"paged KV: page_size={ms['page_size']} pools=[{groups}] "
+          f"kv_dtype={ms.get('kv_dtype', 'fp32')} "
           f"peak_pages_in_use={ms['peak_pages_in_use']} "
           f"dense/paged capacity ratio="
           f"{ms['dense_vs_paged_capacity_ratio']:.2f} "

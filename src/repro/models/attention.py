@@ -269,6 +269,68 @@ def page_group_key(ring_blocks: int) -> str:
     return f"ring{ring_blocks}"
 
 
+def kv_pool_qmax(pool_dtype) -> Optional[float]:
+    """Symmetric quantization range of an 8-bit pool dtype.
+
+    ``None`` means the pool is not quantized (fp32/bf16 pools store K/V
+    directly and carry no scale pool)."""
+    dt = jnp.dtype(pool_dtype)
+    if dt == jnp.dtype(jnp.int8):
+        return 127.0
+    if hasattr(jnp, "float8_e4m3fn") and dt == jnp.dtype(jnp.float8_e4m3fn):
+        return 448.0
+    return None
+
+
+def quantize_pages(x: jax.Array, pool_dtype) -> Tuple[jax.Array, jax.Array]:
+    """Quantize full pages to an 8-bit pool dtype with per-(page, kv-head)
+    symmetric amax scales.
+
+    x [..., P, Hkv, dh] fp32 -> (q [..., P, Hkv, dh] ``pool_dtype``,
+    scale [..., Hkv] fp32) with ``x ~= q * scale``.  The scale floor keeps
+    all-zero pages (and the trash page) at a finite, tiny scale so the
+    dequantized pool never produces inf/nan — zero pages round-trip to
+    exact zeros."""
+    qmax = kv_pool_qmax(pool_dtype)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-3, -1))
+    scale = jnp.maximum(amax, 1e-30) / qmax
+    y = x.astype(jnp.float32) / scale[..., None, :, None]
+    y = jnp.clip(y, -qmax, qmax)     # pre-clip: round(127.49) must not hit 128
+    if jnp.dtype(pool_dtype) == jnp.dtype(jnp.int8):
+        y = jnp.round(y)
+    return y.astype(pool_dtype), scale
+
+
+def dequantize_pages(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_pages`: q [..., P, Hkv, dh] 8-bit,
+    scale [..., Hkv] -> fp32 [..., P, Hkv, dh]."""
+    return q.astype(jnp.float32) * scale[..., None, :, None]
+
+
+def rmw_quantized_pages(pool: jax.Array, scales: jax.Array,
+                        phys: jax.Array, new_vals: jax.Array,
+                        wrote: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Re-quantizing read-modify-write of whole pages.
+
+    Gathers the ``phys`` pages [...] from ``pool`` [npg+1, P, Hkv, dh],
+    dequantizes them with ``scales`` [npg+1, Hkv], overlays ``new_vals``
+    [..., P, Hkv, dh] where ``wrote`` [..., P] is set, recomputes each
+    page's amax scale and scatters pages + scales back.  Partial-page
+    writes therefore re-quantize the whole page — the only correct RMW
+    when the page's amax may have changed.
+
+    Distinct non-trash entries of ``phys`` must name distinct pages (the
+    scheduler's exclusive-write invariant; shared pages go copy-on-write
+    at admission).  Duplicate *trash* entries race benignly: the trash
+    page's contents are never attended (every consumer masks table
+    entries equal to the trash id) and its scale stays finite."""
+    ex = dequantize_pages(pool[phys], scales[phys])
+    merged = jnp.where(wrote[..., None, None], new_vals.astype(jnp.float32),
+                       ex)
+    q, s = quantize_pages(merged, pool.dtype)
+    return pool.at[phys].set(q), scales.at[phys].set(s)
+
+
 def prefix_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                              ck: jax.Array, cv: jax.Array, off: jax.Array,
                              *, softcap: Optional[float] = None
@@ -321,7 +383,11 @@ def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
     the plain decode step; ``S == K+1`` is the speculative verify step).
 
     cache: {"pk","pv": [num_pages+1, P, Hkv, dh], "pt": [B, ring_blocks],
-    optional "wm": [B] bool write mask}.  Writes the new KV through the
+    optional "wm": [B] bool write mask, optional "ks","vs":
+    [num_pages+1, Hkv] per-page per-kv-head scales when the pool is
+    8-bit quantized — writes then re-quantize whole pages (RMW) and the
+    read side dequantizes, so fp32 K/V never exists at pool width}.
+    Writes the new KV through the
     page table (write-then-attend, so every query token attends to
     itself and the drafted tokens before it), then either gathers the
     slot's logical ring and masks by ring validity (default), or — with
@@ -351,8 +417,17 @@ def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
     beyond ``len``, and the next step's writes land on the same (page,
     offset) cells."""
     pool_k, pool_v, pt = cache["pk"], cache["pv"], cache["pt"]
+    ks, vs = cache.get("ks"), cache.get("vs")    # per-page scales (8-bit pool)
+    quant = ks is not None
     b, s = q.shape[0], q.shape[1]
     page_size = pool_k.shape[1]
+
+    def _result(out, pool_k, pool_v, ks, vs):
+        new = {"pk": pool_k, "pv": pool_v}
+        if quant:
+            new["ks"], new["vs"] = ks, vs
+        return out, new
+
     if s == 1:
         blocks = paged_ring_blocks(window, pt.shape[1], page_size)
         ring = blocks * page_size
@@ -368,21 +443,36 @@ def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
         # distinct live slots own every page they write (host invariant:
         # shared pages go copy-on-write at admission); idle/dead slots map
         # to the shared trash page where last-write-wins races are harmless
-        pool_k = pool_k.at[phys, off].set(k_new.astype(pool_k.dtype))
-        pool_v = pool_v.at[phys, off].set(v_new.astype(pool_v.dtype))
+        if quant:
+            bi = jnp.arange(b)
+            wrote = jnp.zeros((b, page_size), bool).at[bi, off].set(True)
+            shape = (b, page_size) + k_new.shape[1:]
+            nk = jnp.zeros(shape, jnp.float32).at[bi, off].set(
+                k_new.astype(jnp.float32))
+            nv = jnp.zeros(shape, jnp.float32).at[bi, off].set(
+                v_new.astype(jnp.float32))
+            pool_k, ks = rmw_quantized_pages(pool_k, ks, phys, nk, wrote)
+            pool_v, vs = rmw_quantized_pages(pool_v, vs, phys, nv, wrote)
+        else:
+            pool_k = pool_k.at[phys, off].set(k_new.astype(pool_k.dtype))
+            pool_v = pool_v.at[phys, off].set(v_new.astype(pool_v.dtype))
         if paged_kernel:
             from repro.kernels.paged_attention import paged_attention
             out = paged_attention(q[:, 0], pool_k, pool_v, pt[:, :blocks],
-                                  cache_len, window=window, softcap=softcap)
-            return out[:, None], {"pk": pool_k, "pv": pool_v}
+                                  cache_len, window=window, softcap=softcap,
+                                  k_scale=ks, v_scale=vs)
+            return _result(out[:, None], pool_k, pool_v, ks, vs)
         gk = pool_k[pt[:, :blocks]]        # [B, blocks, P, Hkv, dh]
         gv = pool_v[pt[:, :blocks]]
+        if quant:
+            gk = dequantize_pages(gk, ks[pt[:, :blocks]])
+            gv = dequantize_pages(gv, vs[pt[:, :blocks]])
         ck = jnp.moveaxis(gk.reshape(b, ring, *gk.shape[3:]), 1, 2)
         cv = jnp.moveaxis(gv.reshape(b, ring, *gv.shape[3:]), 1, 2)
         valid = ring_valid(cache_len, ring, window)
         out = decode_attention(q, ck, cv, cache_len, softcap=softcap,
                                valid=valid)
-        return out, {"pk": pool_k, "pv": pool_v}
+        return _result(out, pool_k, pool_v, ks, vs)
     # ---- multi-token verify step (speculative decoding); the table is
     # the layer's own group table, so its width IS the ring width
     blocks = pt.shape[1]
@@ -399,17 +489,47 @@ def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
         # [B] slot mask (verify step) or [B,S] per-row mask (fused mixed
         # prefill+decode chunk: leading pad rows write to trash)
         ok &= wm if wm.ndim == 2 else wm[:, None]
-    phys = jnp.where(ok, phys, trash)
     off = g_pos % page_size
-    pool_k = pool_k.at[phys, off].set(kk.astype(pool_k.dtype))
-    pool_v = pool_v.at[phys, off].set(vv.astype(pool_v.dtype))
+    if quant:
+        # page-granular RMW: the S tokens of a row touch at most
+        # J = ceil((S-1)/P) + 1 consecutive logical pages starting at the
+        # page of the earliest token.  Scatter tokens into per-page
+        # overlays, then re-quantize each touched page once.
+        J = (s - 1) // page_size + 2
+        base = g_pos[:, :1] // page_size                 # [B,1] earliest page
+        jtok = g_pos // page_size - base                 # [B,S] in [0, J)
+        lp = base + jnp.arange(J)[None, :]               # [B,J] logical pages
+        bi = jnp.arange(b)[:, None]
+        page_live = jnp.zeros((b, J), bool).at[bi, jtok].max(ok)
+        if J > blocks:
+            # a ring narrower than the touched span aliases: of logical
+            # pages congruent mod `blocks`, only the newest may be written
+            page_live &= jnp.arange(J)[None, :] + blocks >= J
+        pphys = jnp.take_along_axis(pt, lp % blocks, axis=1)     # [B,J]
+        pphys = jnp.where(page_live, pphys, trash)
+        wrote = jnp.zeros((b, J, page_size), bool).at[bi, jtok, off].max(ok)
+        shape = (b, J, page_size) + kk.shape[2:]
+        nk = jnp.zeros(shape, jnp.float32).at[bi, jtok, off].set(
+            kk.astype(jnp.float32))
+        nv = jnp.zeros(shape, jnp.float32).at[bi, jtok, off].set(
+            vv.astype(jnp.float32))
+        pool_k, ks = rmw_quantized_pages(pool_k, ks, pphys, nk, wrote)
+        pool_v, vs = rmw_quantized_pages(pool_v, vs, pphys, nv, wrote)
+    else:
+        phys = jnp.where(ok, phys, trash)
+        pool_k = pool_k.at[phys, off].set(kk.astype(pool_k.dtype))
+        pool_v = pool_v.at[phys, off].set(vv.astype(pool_v.dtype))
     if paged_kernel:
         from repro.kernels.paged_attention import paged_attention
         out = paged_attention(q, pool_k, pool_v, pt, cache_len,
-                              window=window, softcap=softcap)
-        return out, {"pk": pool_k, "pv": pool_v}
+                              window=window, softcap=softcap,
+                              k_scale=ks, v_scale=vs)
+        return _result(out, pool_k, pool_v, ks, vs)
     gk = pool_k[pt]                    # [B, blocks, P, Hkv, dh]
     gv = pool_v[pt]
+    if quant:
+        gk = dequantize_pages(gk, ks[pt])
+        gv = dequantize_pages(gv, vs[pt])
     ck = jnp.moveaxis(gk.reshape(b, ring, *gk.shape[3:]), 1, 2)
     cv = jnp.moveaxis(gv.reshape(b, ring, *gv.shape[3:]), 1, 2)
     u = ring_token_positions(cache_len, ring)                   # [B, ring]
@@ -418,7 +538,7 @@ def paged_decode_step(q: jax.Array, kk: jax.Array, vv: jax.Array,
         valid &= u[:, None, :] > g_pos[:, :, None] - window
     out = decode_attention(q, ck, cv, cache_len, softcap=softcap,
                            valid=valid)
-    return out, {"pk": pool_k, "pv": pool_v}
+    return _result(out, pool_k, pool_v, ks, vs)
 
 
 # ---------------------------------------------------------------------------
@@ -485,6 +605,9 @@ def apply(params: Dict, x: jax.Array, *, cfg: ModelConfig,
         # attention group) and prefill only the suffix against it.
         gk = ctx["pk"][ctx["row"]]              # [Cb, P, Hkv, dh]
         gv = ctx["pv"][ctx["row"]]
+        if ctx.get("ks") is not None:           # quantized pool: dequant the
+            gk = dequantize_pages(gk, ctx["ks"][ctx["row"]])  # gathered pages
+            gv = dequantize_pages(gv, ctx["vs"][ctx["row"]])
         cb, psz = gk.shape[0], gk.shape[1]
         ck = gk.reshape(1, cb * psz, *gk.shape[2:])
         cv = gv.reshape(1, cb * psz, *gv.shape[2:])

@@ -339,6 +339,7 @@ def forward_prefill(params, cfg: ModelConfig, batch: Dict, *,
         positions = ctx["off"] + positions
         ctx_list = [None if lc is None else
                     {"pk": lc["pk"], "pv": lc["pv"],
+                     "ks": lc.get("ks"), "vs": lc.get("vs"),
                      "row": ctx["row"], "off": ctx["off"]}
                     for lc in ctx["layers"]]
     enc_kv_list = None

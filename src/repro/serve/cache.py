@@ -69,6 +69,31 @@ from repro.parallel import sharding as sh
 PAGED_KV = "paged_kv"    # block-paged KV ring (attention mixers)
 STATE = "state"          # constant-size recurrent state (mamba2 / rwkv6)
 
+# ---- pool precision: K/V pages may be stored 8-bit with per-page,
+# per-kv-head fp32 scales in a parallel scale pool ("ks"/"vs"); every
+# producer re-quantizes whole pages (attention.rmw_quantized_pages) and
+# every consumer dequantizes in the attention path, so fp32 K/V never
+# materializes at pool width.
+KV_DTYPES = ("fp32", "int8", "fp8_e4m3")
+
+
+def kv_dtype_supported(kv_dtype: str) -> bool:
+    """Capability gate: can this jax build store pools in ``kv_dtype``?
+    fp8 needs a toolchain with ``jnp.float8_e4m3fn``; engines fall back
+    to fp32 pools when this is False."""
+    if kv_dtype in ("fp32", "int8"):
+        return True
+    return kv_dtype == "fp8_e4m3" and hasattr(jnp, "float8_e4m3fn")
+
+
+def kv_pool_dtype(kv_dtype: str):
+    """jnp dtype the K/V pools are stored in for ``kv_dtype``."""
+    if kv_dtype == "int8":
+        return jnp.int8
+    if kv_dtype == "fp8_e4m3":
+        return jnp.float8_e4m3fn
+    return jnp.float32
+
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
@@ -119,13 +144,16 @@ class CacheSpec:
     # so an in-flight verify step can never wrap a draft write onto a
     # token still inside an earlier query's window (serve/spec)
     spec_tokens: int = 0
+    # pool storage precision: "fp32" | "int8" | "fp8_e4m3" (KV_DTYPES)
+    kv_dtype: str = "fp32"
 
     # ------------------------------------------------------------ factory
     @classmethod
     def from_config(cls, cfg: ModelConfig, slots: int, max_len: int, *,
                     page_size: int = 8,
                     num_pages: Optional[int] = None,
-                    spec_tokens: int = 0) -> "CacheSpec":
+                    spec_tokens: int = 0,
+                    kv_dtype: str = "fp32") -> "CacheSpec":
         if cfg.cross_attention:
             raise ValueError(
                 f"{cfg.name}: cross-attention cache structures (enc_kv) are "
@@ -134,6 +162,14 @@ class CacheSpec:
                 "via examples/whisper_transcribe.py's direct loop.")
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
+        if not kv_dtype_supported(kv_dtype):
+            raise ValueError(
+                f"kv_dtype={kv_dtype!r} is unsupported by this jax build "
+                "(no jnp.float8_e4m3fn); gate on kv_dtype_supported() and "
+                "fall back to fp32 pools")
         if page_size & (page_size - 1):
             # fail HERE with an actionable message: a non-power-of-two
             # page used to survive until the paged-attention kernel's
@@ -199,7 +235,8 @@ class CacheSpec:
                   for ls in layers]
         spec = cls(cfg=cfg, slots=slots, max_len=max_len,
                    page_size=page_size, num_pages=num_pages, layers=layers,
-                   groups=groups, spec_tokens=spec_tokens)
+                   groups=groups, spec_tokens=spec_tokens,
+                   kv_dtype=kv_dtype)
         # the compiled decode path re-derives each layer's ring width from
         # (window, widest table width, page size, spec slack) — attention.
         # paged_ring_blocks.  Verify the two formulas agree HERE so any
@@ -267,15 +304,34 @@ class CacheSpec:
         """Physical id of the widest group's write-discard page."""
         return self.widest_group.trash_page
 
+    @property
+    def quantized(self) -> bool:
+        """True when K/V pages are stored 8-bit with a parallel scale pool."""
+        return self.kv_dtype != "fp32"
+
+    @property
+    def pool_dtype(self):
+        return kv_pool_dtype(self.kv_dtype)
+
+    @property
+    def kv_dtype_bytes(self) -> int:
+        """Bytes per stored pool element (scales accounted separately)."""
+        return 1 if self.quantized else 4
+
     def pool_shape_for(self, group: PoolGroup) -> Tuple[int, int, int, int]:
         return (group.num_pages + 1, self.page_size,
                 self.cfg.num_kv_heads, self.cfg.resolved_head_dim)
+
+    def scale_shape_for(self, group: PoolGroup) -> Tuple[int, int]:
+        """Per-page, per-kv-head scale pool parallel to the page pool."""
+        return (group.num_pages + 1, self.cfg.num_kv_heads)
 
     @property
     def pool_shape(self) -> Tuple[int, int, int, int]:
         return self.pool_shape_for(self.widest_group)
 
     POOL_AXES = (sh.PAGES, None, None, None)
+    SCALE_AXES = (sh.PAGES, None)
     TABLE_AXES = (sh.BATCH, None)
 
     def blocks_needed(self, plen: int, max_new: int) -> Dict[str, int]:
@@ -293,17 +349,28 @@ class CacheSpec:
     def init_paged_cache(self, dtype=jnp.float32) -> Dict[str, Any]:
         """Zeroed paged decode cache.  Page-table entries start at each
         group's trash page, so an unadmitted slot's decode writes are
-        discarded."""
+        discarded.  Quantized specs store the pools in ``pool_dtype`` and
+        add per-page scale pools "ks"/"vs" (fp32; ``dtype`` still governs
+        the dense STATE leaves)."""
+        pool_dt = self.pool_dtype if self.quantized else dtype
         layer_caches: List[Optional[Dict]] = []
         for ls in self.layers:
             if ls is None:
                 layer_caches.append(None)
             elif ls.kind == PAGED_KV:
-                shape = self.pool_shape_for(self.groups[ls.group])
-                layer_caches.append({
-                    "pk": jnp.zeros(shape, dtype),
-                    "pv": jnp.zeros(shape, dtype),
-                })
+                group = self.groups[ls.group]
+                shape = self.pool_shape_for(group)
+                entry = {
+                    "pk": jnp.zeros(shape, pool_dt),
+                    "pv": jnp.zeros(shape, pool_dt),
+                }
+                if self.quantized:
+                    sshape = self.scale_shape_for(group)
+                    # scale floor, not zero: an unwritten page dequantizes
+                    # to exact zeros and never divides by zero on RMW
+                    entry["ks"] = jnp.full(sshape, 1e-30, jnp.float32)
+                    entry["vs"] = jnp.full(sshape, 1e-30, jnp.float32)
+                layer_caches.append(entry)
             else:
                 layer_caches.append({
                     k: jnp.zeros(shp, dtype)
@@ -348,9 +415,15 @@ class CacheSpec:
             if ls is None:
                 per_layer.append(None)
             elif ls.kind == PAGED_KV:
-                shape = self.pool_shape_for(self.groups[ls.group])
-                per_layer.append({"pk": (shape, self.POOL_AXES),
-                                  "pv": (shape, self.POOL_AXES)})
+                group = self.groups[ls.group]
+                shape = self.pool_shape_for(group)
+                entry = {"pk": (shape, self.POOL_AXES),
+                         "pv": (shape, self.POOL_AXES)}
+                if self.quantized:
+                    sshape = self.scale_shape_for(group)
+                    entry["ks"] = (sshape, self.SCALE_AXES)
+                    entry["vs"] = (sshape, self.SCALE_AXES)
+                per_layer.append(entry)
             else:
                 per_layer.append(dict(ls.state))
         return {
@@ -373,14 +446,20 @@ class CacheSpec:
 
     # ------------------------------------------------------- memory stats
     def group_page_bytes(self, group: PoolGroup,
-                         dtype_bytes: int = 4) -> int:
+                         dtype_bytes: Optional[int] = None) -> int:
         """HBM bytes one physical page of ``group`` costs across every
-        member layer (each page id backs a K and a V block per layer)."""
+        member layer (each page id backs a K and a V block per layer).
+        Defaults to the spec's own pool precision; quantized pools also
+        pay the per-page fp32 scale rows (one per kv head, K and V)."""
+        if dtype_bytes is None:
+            dtype_bytes = self.kv_dtype_bytes
         n = sum(1 for ls in self.layers
                 if ls is not None and ls.kind == PAGED_KV
                 and self.groups[ls.group] is group)
         per_layer = (2 * self.page_size * self.cfg.num_kv_heads
                      * self.cfg.resolved_head_dim * dtype_bytes)
+        if self.quantized and dtype_bytes == self.kv_dtype_bytes:
+            per_layer += 2 * self.cfg.num_kv_heads * 4   # ks/vs scale rows
         return n * per_layer
 
     def dense_kv_bytes(self, dtype_bytes: int = 4) -> int:
@@ -394,7 +473,7 @@ class CacheSpec:
                       * self.cfg.resolved_head_dim * dtype_bytes)
         return total
 
-    def paged_kv_bytes(self, dtype_bytes: int = 4) -> int:
+    def paged_kv_bytes(self, dtype_bytes: Optional[int] = None) -> int:
         return sum(g.num_pages * self.group_page_bytes(g, dtype_bytes)
                    for g in self.groups)
 
@@ -415,7 +494,13 @@ class CacheSpec:
             "page_size": self.page_size,
             "num_pages": self.total_pages(),
             "pages_in_use": sum(pages_in_use.values()),
+            "kv_dtype": self.kv_dtype,
             "hbm_bytes_per_live_token": (
+                in_use_bytes / live_tokens if live_tokens else 0.0),
+            # the trajectory metric the quantized-pool capacity claim is
+            # tracked by: leased pool bytes (at stored precision, scales
+            # included) per live token
+            "pool_bytes_per_live_token": (
                 in_use_bytes / live_tokens if live_tokens else 0.0),
             "dense_vs_paged_capacity_ratio": (
                 dense / paged if paged else 1.0),
@@ -439,8 +524,9 @@ def splice_paged_layer(pool_k: jax.Array, pool_v: jax.Array,
                        pre_k: jax.Array, pre_v: jax.Array,
                        pages_row: jax.Array, start: jax.Array,
                        valid_len: jax.Array, ring_blocks: int,
-                       page_size: int, trash_page: int
-                       ) -> Tuple[jax.Array, jax.Array]:
+                       page_size: int, trash_page: int,
+                       scale_k: Optional[jax.Array] = None,
+                       scale_v: Optional[jax.Array] = None) -> Tuple:
     """Write a batch-1 prefill KV ``[1, Hkv, bucket, dh]`` into the pool
     as one token-granular scatter.
 
@@ -454,7 +540,14 @@ def splice_paged_layer(pool_k: jax.Array, pool_v: jax.Array,
     positions (``i >= valid_len``, bucketed prefill) and — for windowed
     rings that wrap *within* one prefill — every token that is not the
     newest occupant of its ring slot, which keeps the scatter free of
-    conflicting valid writes."""
+    conflicting valid writes.
+
+    With ``scale_k``/``scale_v`` (quantized pools, [num_pages+1, Hkv])
+    the splice becomes page-granular: tokens are grouped into the logical
+    pages they touch, each touched page is dequantized, overlaid, and
+    re-quantized with a fresh amax scale (partial-page copy-on-write
+    keeps its earlier tokens through the read-modify-write), and a
+    4-tuple ``(pool_k, pool_v, scale_k, scale_v)`` is returned."""
     k = jnp.swapaxes(pre_k[0], 0, 1)   # [bucket, Hkv, dh]
     v = jnp.swapaxes(pre_v[0], 0, 1)
     bucket = k.shape[0]
@@ -464,9 +557,34 @@ def splice_paged_layer(pool_k: jax.Array, pool_v: jax.Array,
     ring = ring_blocks * page_size
     if bucket > ring:   # static: only wrap-capable shapes pay the mask
         keep &= g >= start + valid_len - ring
+    off = g % page_size
+    if scale_k is not None:
+        # page-granular quantizing RMW (see attention.rmw_quantized_pages):
+        # the bucket spans at most ceil((bucket-1)/P)+1 consecutive
+        # logical pages starting at start's page
+        J = (bucket - 1) // page_size + 2
+        base = start // page_size
+        jtok = g // page_size - base                    # [bucket] in [0, J)
+        lp = base + jnp.arange(J)
+        page_live = jnp.zeros((J,), bool).at[jtok].max(keep)
+        if J > ring_blocks:
+            # ring narrower than the span: of logical pages congruent mod
+            # ring_blocks only the newest occupant may be written
+            page_live &= jnp.arange(J) + ring_blocks >= J
+        phys = jnp.where(page_live, pages_row[lp % ring_blocks], trash_page)
+        wrote = jnp.zeros((J, page_size), bool).at[jtok, off].max(keep)
+        shape = (J, page_size) + k.shape[1:]
+        nk = jnp.zeros(shape, jnp.float32).at[jtok, off].set(
+            k.astype(jnp.float32))
+        nv = jnp.zeros(shape, jnp.float32).at[jtok, off].set(
+            v.astype(jnp.float32))
+        pool_k, scale_k = attention.rmw_quantized_pages(
+            pool_k, scale_k, phys, nk, wrote)
+        pool_v, scale_v = attention.rmw_quantized_pages(
+            pool_v, scale_v, phys, nv, wrote)
+        return pool_k, pool_v, scale_k, scale_v
     phys = jnp.where(keep, pages_row[(g // page_size) % ring_blocks],
                      trash_page)
-    off = g % page_size
     pool_k = pool_k.at[phys, off].set(k.astype(pool_k.dtype))
     pool_v = pool_v.at[phys, off].set(v.astype(pool_v.dtype))
     return pool_k, pool_v
@@ -512,11 +630,19 @@ def admit_cache(spec: CacheSpec, cache: Dict, one_cache: Dict,
             new_layers.append(big)
         elif ls.kind == PAGED_KV:
             group = spec.groups[ls.group]
-            pk, pv = splice_paged_layer(
-                big["pk"], big["pv"], small["k"], small["v"],
-                rows[group.key], start, valid, ls.ring_blocks,
-                spec.page_size, group.trash_page)
-            new_layers.append({"pk": pk, "pv": pv})
+            if "ks" in big:     # quantized pool: re-quantizing splice
+                pk, pv, sk, sv = splice_paged_layer(
+                    big["pk"], big["pv"], small["k"], small["v"],
+                    rows[group.key], start, valid, ls.ring_blocks,
+                    spec.page_size, group.trash_page,
+                    scale_k=big["ks"], scale_v=big["vs"])
+                new_layers.append({"pk": pk, "pv": pv, "ks": sk, "vs": sv})
+            else:
+                pk, pv = splice_paged_layer(
+                    big["pk"], big["pv"], small["k"], small["v"],
+                    rows[group.key], start, valid, ls.ring_blocks,
+                    spec.page_size, group.trash_page)
+                new_layers.append({"pk": pk, "pv": pv})
         else:
             entry = {}
             for k in big:
@@ -587,10 +713,14 @@ def copy_shared_page(spec: CacheSpec, cache: Dict, group_key: str,
     for ls, big in zip(spec.layers, cache["layers"]):
         if (ls is not None and ls.kind == PAGED_KV
                 and spec.groups[ls.group].key == group_key):
-            new_layers.append({
+            entry = {
                 "pk": big["pk"].at[dst].set(big["pk"][src]),
                 "pv": big["pv"].at[dst].set(big["pv"][src]),
-            })
+            }
+            if "ks" in big:     # quantized pool: the copy carries scales
+                entry["ks"] = big["ks"].at[dst].set(big["ks"][src])
+                entry["vs"] = big["vs"].at[dst].set(big["vs"][src])
+            new_layers.append(entry)
         else:
             new_layers.append(big)
     return dict(cache, layers=new_layers)

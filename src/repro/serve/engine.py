@@ -622,7 +622,12 @@ class Engine:
     page streaming on TPU, pool-wide masked attention elsewhere — the
     gather buffer never exists), ``False`` = gather-then-attend, and
     ``"auto"`` = kernel on a probe-passing TPU toolchain, gather
-    elsewhere.  ``spec`` turns on speculative decoding (``"ngram"``, a
+    elsewhere.  ``kv_dtype`` selects the pool storage precision
+    (``"fp32"`` | ``"int8"`` | ``"fp8_e4m3"``; ``"auto"`` == fp32): 8-bit
+    pools carry per-page, per-kv-head scales and dequantize inside the
+    attention path — ~4x page-pool capacity at a bounded logit error,
+    with an fp32 fallback when the capability gate fails.  ``spec``
+    turns on speculative decoding (``"ngram"``, a
     draft-config name, or a ``serve/spec.SpecConfig``): drafted
     multi-token steps verified in the fused chunk, output
     token-identical at temperature 0 — attention-only archs only
@@ -646,7 +651,8 @@ class Engine:
                  stall_patience: int = 0,
                  chaos: Optional[ChaosMonkey] = None,
                  chunked_prefill: Any = "auto",
-                 prefill_budget: int = 32):
+                 prefill_budget: int = 32,
+                 kv_dtype: str = "auto"):
         if cfg.cross_attention:
             raise NotImplementedError(
                 "Engine serves decoder-only archs; whisper uses "
@@ -752,9 +758,23 @@ class Engine:
         cache_slack = (max(spec_cfg.k if spec_cfg else 0, chunk_rows - 1)
                        if self.chunked_prefill
                        else (spec_cfg.k if spec_cfg else 0))
+        # ---- pool precision (quantized KV page pool).  "auto" == fp32.
+        # An explicitly requested 8-bit dtype falls back to fp32 pools
+        # when the capability gate fails (jax build without fp8, or the
+        # arch has no paged layers to quantize) instead of erroring —
+        # precision is a perf knob, not a correctness contract.
+        requested = "fp32" if kv_dtype == "auto" else kv_dtype
+        if requested not in cache_mod.KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be 'auto' or one of {cache_mod.KV_DTYPES}, "
+                f"got {kv_dtype!r}")
+        self.requested_kv_dtype = requested
+        if not cache_mod.kv_dtype_supported(requested):
+            requested = "fp32"
+        self.kv_dtype = requested
         self.spec = CacheSpec.from_config(
             cfg, slots, max_len, page_size=page_size, num_pages=num_pages,
-            spec_tokens=cache_slack)
+            spec_tokens=cache_slack, kv_dtype=self.kv_dtype)
         if paged_kernel == "auto":
             # pool-direct attention is the TPU hot path (compiled Pallas
             # kernel, gated on the runtime toolchain probe).  Off-TPU the
@@ -765,7 +785,7 @@ class Engine:
             from repro.kernels import paged_attention as paged_ops
             paged_kernel = (self.spec.has_paged
                             and jax.default_backend() == "tpu"
-                            and paged_ops.supported())
+                            and paged_ops.supported(self.spec.kv_dtype))
         self.paged_kernel = bool(paged_kernel) and self.spec.has_paged
         if spec_cfg is not None and not self.spec.has_paged:
             raise ValueError(
@@ -808,6 +828,9 @@ class Engine:
         self.rejected: List[Request] = []
         self.steps = 0
         self.host_syncs = 0
+        # high-water mark of concurrently occupied slots (the capacity
+        # metric the quantized-pool bench reports per workload)
+        self.peak_live_slots = 0
 
         # ---- robustness: preemption / deadlines / admission control
         self.preemption = bool(preemption)
@@ -871,6 +894,8 @@ class Engine:
         stats = self.spec.memory_stats(
             self.scheduler.pages_in_use_by_group, live)
         stats["peak_pages_in_use"] = self.scheduler.peak_pages_in_use
+        stats["live_slots"] = sum(r is not None for r in self._slot_req)
+        stats["peak_live_slots"] = self.peak_live_slots
         return stats
 
     def prefix_stats(self) -> Dict[str, Any]:
@@ -1455,6 +1480,9 @@ class Engine:
             self._slot_first_pending[slot] = True
             self._slot_stale[slot] = 0
         flush()
+        self.peak_live_slots = max(
+            self.peak_live_slots,
+            sum(r is not None for r in self._slot_req))
 
     def step_chunk(self) -> jax.Array:
         """Dispatch one fused decode chunk.  No host synchronization —

@@ -298,3 +298,187 @@ def test_page_size_rejected_at_spec_construction():
     # the boundary cases stay constructible
     CacheSpec.from_config(cfg, slots=2, max_len=64, page_size=64)
     CacheSpec.from_config(wcfg, slots=2, max_len=64, page_size=16)
+
+
+# ---------------------------------------------------------------- quantized
+def _qdtypes():
+    """Pool storage dtypes the toolchain can serve quantized."""
+    from repro.serve.cache import KV_DTYPES, kv_dtype_supported
+
+    return [d for d in KV_DTYPES if d != "fp32" and kv_dtype_supported(d)]
+
+
+def _quantize_case(case, kv_dtype):
+    """Quantize a ``_case`` pool pair into (q-pools, scale pools)."""
+    from repro.models.attention import quantize_pages
+    from repro.serve.cache import kv_pool_dtype
+
+    q, pk, pv, pt = case
+    dt = kv_pool_dtype(kv_dtype)
+    qk, sk = quantize_pages(pk, dt)
+    qv, sv = quantize_pages(pv, dt)
+    return q, qk, qv, sk, sv, pt
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+@pytest.mark.parametrize("mode", ["full", "window", "softcap"])
+def test_quantized_kernel_vs_ref(kv_dtype, mode):
+    """In-kernel dequant (scales folded into scores / PV inside the
+    Pallas kernel) must match the gather-then-dequant oracle bit-for-bit
+    up to fp accumulation order — same quantized pools on both sides."""
+    if kv_dtype not in _qdtypes():
+        pytest.skip(f"{kv_dtype} pools unsupported on this toolchain")
+    if not supported(kv_dtype):
+        pytest.skip("no Pallas-capable backend/toolchain for "
+                    f"{kv_dtype} pools")
+    kw = {"full": {}, "window": {"window": 12},
+          "softcap": {"softcap": 20.0}}[mode]
+    page_size, nb = 4, 4
+    ring = page_size * nb
+    q, qk, qv, sk, sv, pt = _quantize_case(
+        _case(3, 4, 2, 16, page_size, nb, 4 * nb, seed=5), kv_dtype)
+    cl = jnp.asarray([ring - 3, 1 + page_size, 2 * ring + 5], jnp.int32)
+    got = paged_decode_attention(q, qk, qv, pt, cl, k_scale=sk, v_scale=sv,
+                                 interpret=_interpret(), **kw)
+    want = paged_attention_ref(q, qk, qv, pt, cl, k_scale=sk, v_scale=sv,
+                               **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+@pytest.mark.parametrize("s", [1, 3])
+def test_quantized_pool_lowering_vs_ref(kv_dtype, s):
+    """The XLA pool-wide lowering's folded dequant (scales into scores /
+    softmax weights, no fp32 pool ever stored) vs the oracle — single
+    and multi-query (speculative verify) row counts."""
+    if kv_dtype not in _qdtypes():
+        pytest.skip(f"{kv_dtype} pools unsupported on this toolchain")
+    page_size, nb = 4, 4
+    ring = page_size * nb
+    q, qk, qv, sk, sv, pt = _quantize_case(
+        _case(3, 4, 2, 16, page_size, nb, 4 * nb, seed=60 + s), kv_dtype)
+    if s > 1:
+        q = jnp.repeat(q[:, None], s, axis=1) * (1 + jnp.arange(s)[
+            None, :, None, None] * 0.1)
+    cl = jnp.asarray([ring - 3, s + 1, 2 * ring + 5], jnp.int32)
+    got = pool_attention_xla(q, qk, qv, pt, cl, k_scale=sk, v_scale=sv)
+    want = paged_attention_ref(q, qk, qv, pt, cl, k_scale=sk, v_scale=sv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_quantized_reconstruction_error_bounded_through_attention():
+    """Quantized-pool attention vs the fp32 pool it was quantized from:
+    the output error must stay within the per-page quantization step
+    propagated through softmax (weights sum to 1, so the V error bound
+    is max over pages of amax/qmax; scores perturb weights smoothly)."""
+    page_size, nb = 4, 4
+    case = _case(2, 4, 2, 16, page_size, nb, 3 * nb, seed=13)
+    q, pk, pv, pt = case
+    cl = jnp.asarray([11, 2 * page_size * nb + 3], jnp.int32)
+    want = paged_attention_ref(q, pk, pv, pt, cl)
+    for kv_dtype in _qdtypes():
+        qq, qk, qv, sk, sv, _ = _quantize_case(case, kv_dtype)
+        got = paged_attention_ref(qq, qk, qv, pt, cl,
+                                  k_scale=sk, v_scale=sv)
+        err = float(jnp.max(jnp.abs(got - want)))
+        # amax/qmax per page; int8 grid is ~1/127 of amax, fp8 coarser
+        step = {"int8": 1.0 / 127.0, "fp8_e4m3": 1.0 / 16.0}[kv_dtype]
+        bound = float(jnp.max(jnp.abs(pv))) * step * 4 \
+            + float(jnp.max(jnp.abs(pk))) * step * 4
+        assert err < bound, (kv_dtype, err, bound)
+
+
+def test_quantized_trash_page_invariance():
+    """Corrupting the trash page AND its scale rows must not change
+    quantized-pool attention output; an all-trash row returns exactly
+    0 in every lowering."""
+    if not _qdtypes():
+        pytest.skip("no quantized pool dtypes on this toolchain")
+    page_size, nb = 8, 4
+    q, qk, qv, sk, sv, pt = _quantize_case(
+        _case(3, 4, 2, 16, page_size, nb, 3 * nb, seed=3, trash_tail=2),
+        "int8")
+    trash = qk.shape[0] - 1
+    pt = pt.at[1].set(trash)                      # slot 1: never admitted
+    cl = jnp.asarray([2 * page_size + 1, 5, page_size * nb], jnp.int32)
+    out1 = pool_attention_xla(q, qk, qv, pt, cl, k_scale=sk, v_scale=sv)
+    bad_k = qk.at[trash].set(127)
+    bad_v = qv.at[trash].set(-127)
+    bad_sk = sk.at[trash].set(1e4)
+    bad_sv = sv.at[trash].set(1e4)
+    out2 = pool_attention_xla(q, bad_k, bad_v, pt, cl,
+                              k_scale=bad_sk, v_scale=bad_sv)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out2[1]), 0.0)
+    out3 = paged_attention_ref(q, bad_k, bad_v, pt, cl,
+                               k_scale=bad_sk, v_scale=bad_sv)
+    np.testing.assert_allclose(np.asarray(out3), np.asarray(out1),
+                               rtol=2e-4, atol=2e-4)
+    if supported("int8"):
+        out4 = paged_decode_attention(q, bad_k, bad_v, pt, cl,
+                                      k_scale=bad_sk, v_scale=bad_sv,
+                                      interpret=_interpret())
+        np.testing.assert_allclose(np.asarray(out4), np.asarray(out1),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_array_equal(np.asarray(out4[1]), 0.0)
+
+
+def test_quantized_model_paged_decode_step_kernel_vs_gather():
+    """paged_decode_step on a quantized cache: kernel and gather paths
+    must agree on the attention output AND the re-quantized pool + scale
+    writes (the RMW write path is shared, so pools must be identical)."""
+    from repro.models import attention
+
+    if not _qdtypes():
+        pytest.skip("no quantized pool dtypes on this toolchain")
+    b, h, hkv, dh, page_size, nb = 2, 4, 2, 16, 4, 4
+    q = jax.random.normal(KEY, (b, 1, h, dh)) * 0.5
+    kk = jax.random.normal(jax.random.fold_in(KEY, 1), (b, 1, hkv, dh)) * 0.5
+    vv = jax.random.normal(jax.random.fold_in(KEY, 2), (b, 1, hkv, dh))
+    _, qk, qv, sk, sv, pt = _quantize_case(
+        _case(b, h, hkv, dh, page_size, nb, 3 * nb, seed=9), "int8")
+    cl = jnp.asarray([6, 13], jnp.int32)
+    outs = {}
+    for paged_kernel in (False, True):
+        if paged_kernel and not supported("int8"):
+            pytest.skip("no Pallas toolchain for int8 pools")
+        cache = {"pk": qk, "pv": qv, "pt": pt, "ks": sk, "vs": sv}
+        out, new = attention.paged_decode_step(
+            q, kk, vv, cache, cl, window=None, softcap=None,
+            paged_kernel=paged_kernel)
+        outs[paged_kernel] = (out, new["pk"], new["pv"], new["ks"],
+                              new["vs"])
+    np.testing.assert_allclose(np.asarray(outs[False][0]),
+                               np.asarray(outs[True][0]),
+                               rtol=2e-4, atol=2e-4)
+    for a, b_ in zip(outs[False][1:], outs[True][1:]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_quantized_engine_token_parity_kernel_vs_gather():
+    """int8 pools end to end: pool-direct and gather engines run the
+    same quantization (identical pool writes), so greedy tokens must
+    match exactly — and no pages may leak."""
+    from repro.configs import get_config, reduced
+    from repro.models import model_defs
+    from repro.models import module as m
+    from repro.serve.engine import Engine
+
+    if "int8" not in _qdtypes():
+        pytest.skip("int8 pools unsupported on this toolchain")
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    kw = dict(slots=3, max_len=64, sync_interval=8, prefix_sharing=False,
+              kv_dtype="int8")
+    gather = Engine(cfg, params, paged_kernel=False, **kw)
+    out_gather = _run_engine(gather)
+    assert gather.leaked_pages() == 0
+    if supported("int8"):
+        paged = Engine(cfg, params, paged_kernel=True, **kw)
+        out_paged = _run_engine(paged)
+        assert paged.leaked_pages() == 0
+        assert out_paged == out_gather

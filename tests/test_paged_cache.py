@@ -450,3 +450,187 @@ def test_engine_accepts_rules_single_device():
     plain.submit(Request(rid=0, prompt=[5, 6, 7], max_new_tokens=6))
     (p,) = plain.run()
     assert r.out_tokens == p.out_tokens
+
+
+# ------------------------------------------------------ quantized KV pools
+def _supported_qdtypes():
+    from repro.serve.cache import KV_DTYPES, kv_dtype_supported
+
+    return [d for d in KV_DTYPES if d != "fp32" and kv_dtype_supported(d)]
+
+
+@pytest.mark.parametrize("page_size", [4, 8, 16])
+@pytest.mark.parametrize("hkv", [1, 2, 4])
+def test_quantize_roundtrip_bounded_error(page_size, hkv):
+    """Property sweep: per-(page, kv-head) symmetric quantization across
+    page sizes and head counts must reconstruct within one quantization
+    step of that page's amax — including tiny (1e-20) and huge (1e8)
+    amax pages and exactly-zero pages (which must come back exactly 0,
+    never NaN from a zero scale)."""
+    from repro.models.attention import dequantize_pages, quantize_pages
+    from repro.serve.cache import kv_pool_dtype
+
+    npg, dh = 6, 8
+    rng = np.random.RandomState(page_size * 10 + hkv)
+    x = jnp.asarray(rng.randn(npg, page_size, hkv, dh).astype(np.float32))
+    x = x.at[1].multiply(1e-20)          # tiny amax
+    x = x.at[2].multiply(1e8)            # huge amax
+    x = x.at[3].set(0.0)                 # zero page -> zero scale floor
+    for kv_dtype in _supported_qdtypes():
+        qmax = {"int8": 127.0, "fp8_e4m3": 448.0}[kv_dtype]
+        q, scale = quantize_pages(x, kv_pool_dtype(kv_dtype))
+        y = dequantize_pages(q, scale)
+        assert not np.any(np.isnan(np.asarray(y))), kv_dtype
+        np.testing.assert_array_equal(np.asarray(y[3]), 0.0)
+        amax = np.max(np.abs(np.asarray(x)), axis=(1, 3))   # [npg, hkv]
+        # int8: uniform grid, error <= amax/qmax per (page, head).
+        # fp8_e4m3: 3 mantissa bits -> relative error <= 1/16 of amax
+        step = amax / qmax if kv_dtype == "int8" else amax / 16.0
+        err = np.max(np.abs(np.asarray(y - x)), axis=(1, 3))
+        assert np.all(err <= step + 1e-30), (kv_dtype, err, step)
+
+
+def test_quantize_scale_shape_and_trash_invariance():
+    """Scales are per (page, kv head); quantizing must not mix pages —
+    overwriting one page (the trash row) leaves every other page's
+    quantized block and scale bit-identical."""
+    from repro.models.attention import quantize_pages
+
+    npg, P, hkv, dh = 5, 4, 2, 8
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(npg, P, hkv, dh).astype(np.float32))
+    q1, s1 = quantize_pages(x, jnp.int8)
+    assert s1.shape == (npg, hkv)
+    q2, s2 = quantize_pages(x.at[npg - 1].set(1e6), jnp.int8)
+    np.testing.assert_array_equal(np.asarray(q1[:-1]), np.asarray(q2[:-1]))
+    np.testing.assert_array_equal(np.asarray(s1[:-1]), np.asarray(s2[:-1]))
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+def test_quantized_splice_parity_with_fp32(kv_dtype):
+    """admit_cache on a quantized spec must land the same KV (within
+    quantization error) as the fp32 spec — full admission and the
+    partial-page read-modify-write suffix admission (start mid-page
+    re-quantizes the boundary page without losing its earlier tokens).
+    The trash page is excluded: fp32 scatters masked tokens there, the
+    quantized RMW zeros it; both are write-discard garbage."""
+    from repro.models.attention import dequantize_pages
+    from repro.serve import cache as cm
+
+    if kv_dtype not in _supported_qdtypes():
+        pytest.skip(f"{kv_dtype} pools unsupported on this toolchain")
+    cfg, _ = _model("internlm2-1.8b")
+    spec32 = CacheSpec.from_config(cfg, 2, 64, page_size=8)
+    spec8 = CacheSpec.from_config(cfg, 2, 64, page_size=8,
+                                  kv_dtype=kv_dtype)
+    rows = {g.key: jnp.arange(1, g.ring_blocks + 1, dtype=jnp.int32)
+            for g in spec32.groups}
+
+    def one_cache(seed):
+        r = np.random.RandomState(seed)
+        layers = []
+        for entry in spec32.init_paged_cache()["layers"]:
+            if entry is not None and "pk" in entry:
+                hkv, dh = entry["pk"].shape[2], entry["pk"].shape[3]
+                layers.append({
+                    "k": jnp.asarray(r.randn(1, hkv, 16, dh)
+                                     .astype(np.float32)),
+                    "v": jnp.asarray(r.randn(1, hkv, 16, dh)
+                                     .astype(np.float32))})
+            else:
+                layers.append(entry)
+        return {"layers": layers}
+
+    def worst_err(Ca, Cb):
+        worst = 0.0
+        for l32, l8 in zip(Ca["layers"], Cb["layers"]):
+            if l32 is None or "pk" not in l32:
+                continue
+            trash = l32["pk"].shape[0] - 1
+            for pool, sc, ref in (("pk", "ks", "pk"), ("pv", "vs", "pv")):
+                deq = dequantize_pages(l8[pool], l8[sc])[:trash]
+                worst = max(worst, float(jnp.max(jnp.abs(
+                    deq - l32[ref][:trash]))))
+        return worst
+
+    C32, C8 = spec32.init_paged_cache(), spec8.init_paged_cache()
+    args = (jnp.int32(0), jnp.int32(0), jnp.int32(13), rows)
+    C32 = cm.admit_cache(spec32, C32, one_cache(0), *args)
+    C8 = cm.admit_cache(spec8, C8, one_cache(0), *args)
+    tol = 0.05 if kv_dtype == "int8" else 0.3
+    assert worst_err(C32, C8) < tol
+
+    # suffix admission starting mid-page: the boundary page is RMW
+    # re-quantized (earlier tokens dequantized, overlaid, re-scaled)
+    args2 = (jnp.int32(0), jnp.int32(13), jnp.int32(24), rows)
+    C32 = cm.admit_cache(spec32, C32, one_cache(7), *args2)
+    C8 = cm.admit_cache(spec8, C8, one_cache(7), *args2)
+    assert worst_err(C32, C8) < tol
+
+
+def test_quantized_copy_shared_page_copies_scales():
+    """CoW page copies on a quantized spec must carry the scale rows:
+    a copied page dequantizes identically to its source."""
+    from repro.models.attention import dequantize_pages
+    from repro.serve import cache as cm
+
+    if not _supported_qdtypes():
+        pytest.skip("no quantized pool dtypes on this toolchain")
+    cfg, _ = _model("internlm2-1.8b")
+    spec = CacheSpec.from_config(cfg, 2, 64, page_size=8, kv_dtype="int8")
+    C = spec.init_paged_cache()
+    rng = np.random.RandomState(3)
+    for entry in C["layers"]:
+        if entry is None or "pk" not in entry:
+            continue
+        shape = entry["pk"].shape
+        entry["pk"] = jnp.asarray(
+            rng.randint(-127, 128, size=shape).astype(np.int8))
+        entry["ks"] = jnp.asarray(
+            rng.rand(*entry["ks"].shape).astype(np.float32) + 0.01)
+    key = max(spec.groups, key=lambda g: g.ring_blocks).key
+    C2 = cm.copy_shared_page(spec, C, key, jnp.int32(1), jnp.int32(4))
+    for entry in C2["layers"]:
+        if entry is None or "pk" not in entry:
+            continue
+        src = dequantize_pages(entry["pk"][1][None], entry["ks"][1][None])
+        dst = dequantize_pages(entry["pk"][4][None], entry["ks"][4][None])
+        np.testing.assert_array_equal(np.asarray(src), np.asarray(dst))
+
+
+def test_quantized_spec_memory_accounting():
+    """8-bit pools cost ~1/4 the fp32 pool bytes (+ scale rows), and the
+    capacity ratio vs the dense fp32 layout reflects it — the >=1.8x
+    concurrent-slots claim rests on this accounting."""
+    cfg, _ = _model("internlm2-1.8b")
+    s32 = CacheSpec.from_config(cfg, 4, 64, page_size=8)
+    s8 = CacheSpec.from_config(cfg, 4, 64, page_size=8, kv_dtype="int8")
+    assert s8.paged_kv_bytes() < s32.paged_kv_bytes() / 2
+    m32 = s32.memory_stats({}, 0)
+    m8 = s8.memory_stats({}, 0)
+    assert m8["kv_dtype"] == "int8" and m32["kv_dtype"] == "fp32"
+    assert (m8["dense_vs_paged_capacity_ratio"]
+            >= 1.8 * m32["dense_vs_paged_capacity_ratio"])
+    # fp32-width accounting of the same spec matches the fp32 spec's
+    # pools exactly (scale rows only exist at stored precision)
+    assert s8.paged_kv_bytes(4) == s32.paged_kv_bytes()
+
+
+def test_engine_kv_dtype_validation_and_fallback():
+    """Engine(kv_dtype=...): unknown names raise; 'auto' is fp32; an
+    unsupported 8-bit dtype falls back to fp32 (capability gate, not a
+    crash) while recording what was requested."""
+    from repro.serve import cache as cm
+
+    cfg, params = _model("internlm2-1.8b")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        Engine(cfg, params, slots=2, max_len=64, kv_dtype="int4")
+    eng = Engine(cfg, params, slots=2, max_len=64, kv_dtype="auto")
+    assert eng.kv_dtype == "fp32" and eng.spec.kv_dtype == "fp32"
+    if "int8" in _supported_qdtypes():
+        eng8 = Engine(cfg, params, slots=2, max_len=64, kv_dtype="int8")
+        assert eng8.kv_dtype == "int8" and eng8.spec.quantized
+        stats = eng8.memory_stats()
+        assert stats["kv_dtype"] == "int8"
+        assert "pool_bytes_per_live_token" in stats
+        assert "peak_live_slots" in stats
