@@ -41,6 +41,14 @@ in the same CI job) against the committed baseline run and fails when:
   full occupancy), preemption-resume or CoW-sharing outputs diverged,
   pages leaked, the chunk stopped being sync-free, or the decode
   executable retraced;
+* the SLO-scheduling workload regressed (``benchmarks/fig04_scheduling
+  --slo-mix``, merged into the same run) — the least-slack policy
+  stopped beating FIFO on interactive p99 TTFT on the oversubscribed
+  mixed-class trace, goodput fell below FIFO, request outputs changed
+  across policies at temperature 0, the seeded traffic trace stopped
+  regenerating byte-identically, pages leaked, the chunk stopped being
+  sync-free, or the dynamic prefill budget retraced the decode
+  executable;
 * a **gated metric key is missing** from a workload the candidate run
   claims to include — a silently-dropped metric must read as a
   regression, not as a pass through a forgiving ``.get`` default (the
@@ -492,6 +500,75 @@ def check(runs, threshold: float) -> int:
         failures.append("candidate run dropped the quantized-pool "
                         "workload (qp_* fields missing)")
 
+    # ---- SLO-scheduling gates (fig04 --slo-mix workload merged into the
+    # same run).  The least-slack policy must actually buy interactive
+    # latency on the oversubscribed mixed-class trace — strictly better
+    # p99 TTFT than FIFO and no goodput regression — while staying
+    # invisible in the tokens and structurally clean (deterministic
+    # trace, zero leaks, one sync-free decode executable).
+    if "slo_goodput" in cand:
+        _require(cand, failures, "slo-scheduling", [
+            "slo_outputs_match", "slo_trace_deterministic",
+            "slo_interactive_ttft_p99", "slo_fifo_interactive_ttft_p99",
+            "slo_fifo_goodput", "slo_leaked_pages",
+            "slo_fifo_leaked_pages", "slo_decode_sync_free",
+            "slo_decode_compiles", "slo_budget_throttles",
+            "slo_pool_bytes_per_live_token", "slo_peak_live_slots"])
+        if not cand.get("slo_outputs_match", False):
+            failures.append(
+                "slo-scheduling token parity regressed: the SLO policy "
+                "changed request outputs vs FIFO on the same trace at "
+                "temperature 0 — policy must only reorder, never rewrite")
+        if not cand.get("slo_trace_deterministic", False):
+            failures.append(
+                "traffic trace not deterministic: two generators with "
+                "the same seed produced different traces")
+        slo_p99 = cand.get("slo_interactive_ttft_p99")
+        fifo_p99 = cand.get("slo_fifo_interactive_ttft_p99")
+        if slo_p99 is None or fifo_p99 is None:
+            failures.append(
+                "slo-scheduling interactive TTFT percentiles vacuous "
+                f"(slo {slo_p99}, fifo {fifo_p99}) — no interactive "
+                "request ever produced a first token")
+        elif not slo_p99 < fifo_p99:
+            failures.append(
+                "SLO policy no longer beats FIFO on interactive p99 TTFT "
+                f"({slo_p99} vs fifo {fifo_p99}) on the oversubscribed "
+                "mixed-class trace")
+        if cand.get("slo_goodput", 0.0) < cand.get("slo_fifo_goodput", 1.0):
+            failures.append(
+                "SLO policy goodput fell below FIFO "
+                f"({cand.get('slo_goodput')} < "
+                f"{cand.get('slo_fifo_goodput')}) — slack ordering is "
+                "costing more SLOs than it saves")
+        if cand.get("slo_leaked_pages", 0) != 0 \
+                or cand.get("slo_fifo_leaked_pages", 0) != 0:
+            failures.append(
+                "slo-scheduling run leaked pages at drain (slo "
+                f"{cand.get('slo_leaked_pages')}, fifo "
+                f"{cand.get('slo_fifo_leaked_pages')})")
+        if not cand.get("slo_decode_sync_free", True):
+            failures.append("slo-scheduling decode chunk performed a "
+                            "device->host transfer — policy must stay at "
+                            "chunk boundaries")
+        if cand.get("slo_decode_compiles", 1) != 1:
+            failures.append(
+                "slo-scheduling workload retraced the decode chunk "
+                f"({cand.get('slo_decode_compiles')} compiles) — dynamic "
+                "prefill budgets must be data, not shape")
+        print(f"slo scheduling: interactive_ttft_p99="
+              f"{cand.get('slo_interactive_ttft_p99')} vs fifo "
+              f"{cand.get('slo_fifo_interactive_ttft_p99')} "
+              f"(x{cand.get('slo_interactive_ttft_improvement', 0.0):.2f}) "
+              f"goodput={cand.get('slo_goodput')}/"
+              f"{cand.get('slo_fifo_goodput')} "
+              f"throttles={cand.get('slo_budget_throttles')} "
+              f"match={cand.get('slo_outputs_match')} "
+              f"leaked={cand.get('slo_leaked_pages')}")
+    elif "slo_goodput" in base:
+        failures.append("candidate run dropped the slo-scheduling "
+                        "workload (slo_* fields missing)")
+
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
@@ -506,7 +583,9 @@ def check(runs, threshold: float) -> int:
           "long-prompt arrivals, bounded TTFT, and zero prefill "
           "executables, quantized int8 pool token-parity >= 0.99 with "
           ">= 1.8x concurrent slots at equal HBM bytes and clean "
-          "preemption/CoW fault paths")
+          "preemption/CoW fault paths, SLO policy beats FIFO on "
+          "interactive p99 TTFT at token parity with goodput >= FIFO "
+          "on a byte-identical seeded trace")
     return 0
 
 

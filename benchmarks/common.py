@@ -50,3 +50,25 @@ def write_bench_json(filename: str, record: Dict) -> pathlib.Path:
     data.setdefault("runs", []).append({"ts": time.time(), **record})
     path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
     return path
+
+
+def merge_into_last_run(filename: str, record: Dict) -> pathlib.Path:
+    """Merge ``record`` into the LAST run of a trajectory file — for
+    workloads that live in a separate benchmark module but belong to the
+    same per-PR run (fig04 --slo-mix extends the fig14 serve record).
+    Appends a fresh run if the file has none yet."""
+    path = REPO_ROOT / filename
+    data = {"runs": []}
+    if path.exists():
+        try:
+            loaded = json.loads(path.read_text())
+        except (ValueError, OSError):
+            loaded = None
+        if isinstance(loaded, dict) and \
+                isinstance(loaded.get("runs", []), list):
+            data = loaded
+    if not data.get("runs"):
+        return write_bench_json(filename, record)
+    data["runs"][-1].update(record)
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    return path

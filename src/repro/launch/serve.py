@@ -27,6 +27,15 @@ and commits a variable number via on-device rejection sampling — output
 tokens are identical to the non-speculative engine at temperature 0.
 The summary prints the measured acceptance rate and tokens per verify
 step.
+
+``--policy slo`` switches the scheduler to least-slack-first SLO
+ordering (serve/scheduler.py classes: interactive > batch >
+best_effort) with class-aware preemption victims and dynamic prefill-
+budget throttling; ``--slo-class`` tags the synthetic workload, and
+``--traffic poisson:SEED`` / ``--traffic bursty:SEED`` replays a
+seeded deterministic mixed-class arrival trace (serve/traffic.py) on a
+virtual clock instead, printing per-class TTFT/TPOT percentiles and
+goodput from ``Engine.latency_stats()``.
 """
 
 import argparse
@@ -116,6 +125,27 @@ def main() -> None:
                     help="per-request deadline in seconds from submit; "
                          "expired requests are reaped as TIMED_OUT at "
                          "the next chunk boundary")
+    ap.add_argument("--policy", default="fifo", choices=["fifo", "slo"],
+                    help="admission/victim policy: 'slo' orders the "
+                         "queue least-slack-first by SLO class "
+                         "(interactive > batch > best_effort), picks "
+                         "lowest-class preemption victims, and throttles "
+                         "non-interactive prefill budgets when an "
+                         "interactive TTFT slack goes negative")
+    ap.add_argument("--slo-class", default=None,
+                    choices=["interactive", "batch", "best_effort"],
+                    help="SLO class for every synthetic request "
+                         "(default: best_effort; carries per-class "
+                         "TTFT/TPOT targets from serve/scheduler.py)")
+    ap.add_argument("--traffic", default=None, metavar="PROC:SEED",
+                    help="replace the synthetic workload with a seeded "
+                         "deterministic arrival trace from "
+                         "serve/traffic.py: 'poisson:SEED' or "
+                         "'bursty:SEED' (mixed SLO classes and lengths, "
+                         "virtual-clock replay, prints per-class "
+                         "TTFT/TPOT percentiles + goodput)")
+    ap.add_argument("--traffic-rate", type=float, default=8.0,
+                    help="arrivals per virtual clock unit for --traffic")
     args = ap.parse_args()
 
     import jax
@@ -139,7 +169,18 @@ def main() -> None:
     chaos = None
     if args.chaos is not None:
         chaos = ChaosMonkey.smoke(args.chaos)
+    clock = None
+    traffic_proc = traffic_seed = None
+    if args.traffic is not None:
+        from repro.serve.traffic import VirtualClock
+        traffic_proc, _, s = args.traffic.partition(":")
+        traffic_seed = int(s or 0)
+        # virtual clock: arrival times, TTFT/TPOT, and deadlines all move
+        # in trace units, one tick per chunk boundary — deterministic on
+        # any machine
+        clock = VirtualClock(dt=0.05)
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
+                 policy=args.policy, clock=clock,
                  page_size=args.page_size, num_pages=args.num_pages,
                  prefix_sharing=not args.no_prefix_sharing,
                  paged_kernel={"auto": "auto", "on": True,
@@ -169,14 +210,29 @@ def main() -> None:
                   f"{eng.buckets} + decode chunk compiled in "
                   f"{time.perf_counter() - t0:.2f}s")
     t0 = time.perf_counter()
-    head = [1 + (3 * j) % 97 for j in range(max(args.shared_prefix, 0))]
-    submitted = []
-    for i in range(args.requests):
-        req = Request(rid=i, prompt=head + [1 + i, 2, 3, 4 + i % 3],
-                      max_new_tokens=args.max_new, ttl=args.ttl)
-        submitted.append(req)
-        eng.submit(req)
-    done = eng.run(max_steps=100_000 if chaos is not None else 1000)
+    if args.traffic is not None:
+        from repro.serve.traffic import TrafficGenerator, replay
+        gen = TrafficGenerator(traffic_seed, rate=args.traffic_rate,
+                               process=traffic_proc)
+        trace = gen.generate(args.requests)
+        replay(eng, trace, clock=clock)
+        done = list(eng.finished)
+        submitted = done + list(eng.rejected)
+        print(f"traffic[{traffic_proc}:{traffic_seed}]: "
+              f"{len(trace)} arrivals over "
+              f"{trace[-1].arrival:.2f} virtual units, classes="
+              f"{sorted(set(tr.slo_class for tr in trace))}")
+    else:
+        head = [1 + (3 * j) % 97
+                for j in range(max(args.shared_prefix, 0))]
+        submitted = []
+        for i in range(args.requests):
+            req = Request(rid=i, prompt=head + [1 + i, 2, 3, 4 + i % 3],
+                          max_new_tokens=args.max_new, ttl=args.ttl,
+                          slo_class=args.slo_class or "best_effort")
+            submitted.append(req)
+            eng.submit(req)
+        done = eng.run(max_steps=100_000 if chaos is not None else 1000)
     dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
     for r in sorted(done, key=lambda r: r.rid):
@@ -232,6 +288,18 @@ def main() -> None:
             f"leaked {eng.leaked_pages()} pages at drain"
         print("chaos: clean drain (all terminal statuses, zero leaked "
               "pages)")
+    if args.traffic is not None or args.slo_class is not None \
+            or args.policy != "fifo":
+        ls = eng.latency_stats()
+        unit = "vu" if clock is not None else "s"
+        for name, c in sorted(ls["classes"].items()):
+            print(f"slo[{name}]: n={c['count']} "
+                  f"goodput={c['goodput'] if c['goodput'] is not None else '-'} "
+                  f"ttft_p50/p99={c['ttft_p50']}/{c['ttft_p99']}{unit} "
+                  f"tpot_p50/p99={c['tpot_p50']}/{c['tpot_p99']}{unit}")
+        print(f"slo overall: goodput={ls['goodput']} "
+              f"budget_throttles={ls['budget_throttles']} "
+              f"policy={args.policy}")
     ps = eng.prefix_stats()
     if ps["prefix_sharing"]:
         print(f"prefix sharing: hit_rate={ps['prefix_hit_rate']:.2f} "

@@ -43,6 +43,7 @@ per-token-sync loop as the measurement baseline and equivalence oracle for
 from __future__ import annotations
 
 import contextlib
+import math
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -59,15 +60,111 @@ from repro.serve import cache as cache_mod
 from repro.serve import sampling
 from repro.serve.cache import CacheSpec, empty_batch_cache  # noqa: F401
 from repro.serve.chaos import ChaosMonkey, GarbageDrafter  # noqa: F401
-from repro.serve.scheduler import (Admission, PagePoolExhausted,  # noqa: F401
-                                   Request, RequestRejected, RequestStatus,
-                                   Scheduler)
+from repro.serve.scheduler import (SLO_CLASSES, Admission,  # noqa: F401
+                                   PagePoolExhausted, Request,
+                                   RequestRejected, RequestStatus,
+                                   Scheduler, SLOClass)
 from repro.serve.spec import (ModelDrafter, NGramDrafter, SpecConfig,
                               check_spec_capable, spec_unsupported_reason)
 
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# Latency telemetry: percentile / goodput math over host-stamped requests.
+# Pure functions of Request timestamp fields — no device, no engine — so the
+# oracle tests in tests/test_latency_stats.py can grade them by hand.
+# ---------------------------------------------------------------------------
+
+def percentile(values: List[float], q: float) -> Optional[float]:
+    """Nearest-rank percentile (the hand-computable definition): the
+    ``ceil(q/100 * n)``-th smallest value.  None on an empty sample —
+    an undefined percentile must never masquerade as 0.0."""
+    if not values:
+        return None
+    vals = sorted(values)
+    n = len(vals)
+    rank = max(1, math.ceil(q * n / 100.0))
+    return vals[min(rank, n) - 1]
+
+
+def request_ttft(req: Request) -> Optional[float]:
+    """Submit -> first token, from the ORIGINAL submit time (preemption
+    and resume never reset it).  None until a first token is drained."""
+    if req.first_token_time is None or req.submit_time is None:
+        return None
+    return req.first_token_time - req.submit_time
+
+
+def request_tpot(req: Request) -> Optional[float]:
+    """Mean per-token delta after the first token (TPOT).  Tokens
+    drained in one chunk share a stamp, so this is the chunk-boundary
+    average, not a per-dispatch measurement.  None below 2 tokens."""
+    if len(req.token_times) < 2:
+        return None
+    span = req.token_times[-1] - req.token_times[0]
+    return span / (len(req.token_times) - 1)
+
+
+def request_slo_met(req: Request) -> bool:
+    """Did this request deliver its SLO?  Only FINISHED requests can;
+    a measured latency over target — or a target with no measurement —
+    is a miss, while an absent target (best-effort) always passes."""
+    if req.status != RequestStatus.FINISHED:
+        return False
+    for target, got in ((req.resolved_ttft_target, request_ttft(req)),
+                        (req.resolved_tpot_target, request_tpot(req))):
+        if target is None:
+            continue
+        if got is None or got > target:
+            return False
+    return True
+
+
+def compute_latency_stats(requests: List[Request]) -> Dict[str, Any]:
+    """TTFT/TPOT p50/p99 per SLO class + goodput over ``requests``.
+
+    Percentiles cover every request with the relevant measurement (a
+    still-running request's drained first token counts toward TTFT);
+    goodput is the fraction of TERMINAL requests that FINISHED meeting
+    their class (or per-request) targets — timed-out, cancelled, and
+    shed requests are SLO misses by definition, while requests still in
+    flight are not graded yet.  Classes with no samples report None
+    percentiles and goodput 0.0; so does an empty request list."""
+    by_class: Dict[str, List[Request]] = {}
+    for req in requests:
+        by_class.setdefault(req.slo_class, []).append(req)
+
+    def _summary(reqs: List[Request]) -> Dict[str, Any]:
+        ttfts = [t for t in (request_ttft(r) for r in reqs)
+                 if t is not None]
+        tpots = [t for t in (request_tpot(r) for r in reqs)
+                 if t is not None]
+        terminal = [r for r in reqs
+                    if r.status in RequestStatus.TERMINAL]
+        met = sum(request_slo_met(r) for r in terminal)
+        return {
+            "count": len(reqs),
+            "terminal": len(terminal),
+            "finished": sum(r.status == RequestStatus.FINISHED
+                            for r in reqs),
+            "slo_met": met,
+            "goodput": met / len(terminal) if terminal else 0.0,
+            "ttft_p50": percentile(ttfts, 50),
+            "ttft_p99": percentile(ttfts, 99),
+            "tpot_p50": percentile(tpots, 50),
+            "tpot_p99": percentile(tpots, 99),
+        }
+
+    stats: Dict[str, Any] = {
+        "classes": {cls: _summary(reqs)
+                    for cls, reqs in sorted(by_class.items())},
+        "overall": _summary(list(requests)),
+    }
+    stats["goodput"] = stats["overall"]["goodput"]
+    return stats
 
 
 class Executor:
@@ -441,7 +538,13 @@ class Executor:
             active = state["active"]
             rem = state["plen"] - len_
             prefilling = active & (rem > 0)
-            n = jnp.where(prefilling, jnp.minimum(rem, S), k1)
+            # per-slot dynamic prefill budget: the SLO policy shrinks a
+            # lower-priority slot's prompt slice at chunk boundaries
+            # (host->device value update, never a retrace — S stays the
+            # compiled static width and pbudget is clamped into [1, S])
+            budget = jnp.clip(state["pbudget"], 1, S) \
+                if "pbudget" in state else S
+            n = jnp.where(prefilling, jnp.minimum(rem, budget), k1)
             completing = prefilling & (rem <= S)
             gidx = len_[:, None] + col - (S - n)[:, None]
             pcap = state["prompt"].shape[1]
@@ -647,6 +750,7 @@ class Engine:
                  preemption: bool = True,
                  queue_limit: Optional[int] = None,
                  shed_policy: str = "reject",
+                 policy: str = "fifo",
                  clock: Optional[Callable[[], float]] = None,
                  stall_patience: int = 0,
                  chaos: Optional[ChaosMonkey] = None,
@@ -794,8 +898,12 @@ class Engine:
         if self.chunked_prefill and not self.spec.has_paged:
             raise ValueError(
                 f"{cfg.name}: chunked_prefill needs the paged decode cache")
+        # admission policy: "fifo" (arrival order) or "slo" (priority +
+        # least-TTFT-slack-first; class-aware preemption victims/shed)
+        self.policy = policy
         self.scheduler = Scheduler(self.spec, prefix_sharing=prefix_sharing,
-                                   defer_radix_insert=self.chunked_prefill)
+                                   defer_radix_insert=self.chunked_prefill,
+                                   policy=policy)
         self.executor = Executor(cfg, self.spec, top_k=self.top_k,
                                  sync_interval=self.sync_interval,
                                  donate=self._donate, rules=rules,
@@ -822,7 +930,15 @@ class Engine:
         self.state = sampling.make_slot_state(
             slots, seed, hist_cap=self._hist_cap,
             spec=spec_cfg is not None,
-            prompt_cap=max_len if self.chunked_prefill else 0)
+            prompt_cap=max_len if self.chunked_prefill else 0,
+            prefill_budget=(self.executor.chunk_rows
+                            if self.chunked_prefill else 0))
+        # host mirror of state["pbudget"]: the SLO boundary policy only
+        # dispatches a device update when the desired vector changes
+        self._budget_vec: Optional[List[int]] = (
+            [self.executor.chunk_rows] * slots
+            if self.chunked_prefill else None)
+        self.budget_throttles = 0
         self._key = jax.random.PRNGKey(seed + 1)
         self.finished: List[Request] = []
         self.rejected: List[Request] = []
@@ -835,9 +951,11 @@ class Engine:
         # ---- robustness: preemption / deadlines / admission control
         self.preemption = bool(preemption)
         self.queue_limit = queue_limit
-        if shed_policy not in ("reject", "block", "evict-lru-prefix"):
-            raise ValueError(f"shed_policy must be 'reject', 'block' or "
-                             f"'evict-lru-prefix', got {shed_policy!r}")
+        if shed_policy not in ("reject", "block", "evict-lru-prefix",
+                               "shed-lowest-class"):
+            raise ValueError(f"shed_policy must be 'reject', 'block', "
+                             f"'evict-lru-prefix' or 'shed-lowest-class', "
+                             f"got {shed_policy!r}")
         self.shed_policy = shed_policy
         self._clock = clock if clock is not None else time.monotonic
         self.chaos = chaos
@@ -850,8 +968,13 @@ class Engine:
             "chaos_preemptions": 0, "watchdog_preemptions": 0,
             "resumes": 0, "timed_out": 0, "cancelled": 0,
             "rejected": 0, "rejected_infeasible": 0,
-            "rejected_queue_full": 0,
+            "rejected_queue_full": 0, "rejected_shed_lower_class": 0,
         }
+        # every preemption event, in order: the victim's class plus the
+        # classes of the OTHER preemptable slots live at that instant —
+        # the chaos/SLO tests assert interactive is only ever evicted
+        # when no lower-priority victim existed
+        self.preemption_log: List[Dict[str, Any]] = []
 
     # -------------------------------------------------------------- setup
     def _empty_cache(self):
@@ -919,6 +1042,21 @@ class Engine:
             if sched.resume_replayed_tokens else 0.0)
         if self.chaos is not None:
             stats["chaos"] = self.chaos.stats()
+        return stats
+
+    def latency_stats(self) -> Dict[str, Any]:
+        """TTFT/TPOT p50/p99 per SLO class + goodput, from the host-side
+        timestamps the chunk-boundary drain stamps on every request
+        (``compute_latency_stats`` holds the math — pure, so the oracle
+        tests grade it by hand).  Covers every request this engine has
+        seen: finished, rejected, running, and still queued.  Also
+        reports the dynamic-``prefill_budget`` throttle count (SLO
+        policy on fused-chunk engines; 0 elsewhere)."""
+        reqs = (list(self.finished) + list(self.rejected)
+                + [r for r in self._slot_req if r is not None]
+                + list(self.scheduler.queue))
+        stats = compute_latency_stats(reqs)
+        stats["budget_throttles"] = self.budget_throttles
         return stats
 
     def leaked_pages(self) -> int:
@@ -1012,6 +1150,8 @@ class Engine:
             self.scheduler.validate(req)
         except PagePoolExhausted as e:
             return self._reject(req, "infeasible", str(e))
+        if req.submit_time is None:       # TTFT clock starts here; a
+            req.submit_time = self._clock()   # resume keeps the original
         if req.deadline is None and req.ttl is not None:
             req.deadline = self._clock() + req.ttl
         if self.queue_limit is not None \
@@ -1027,6 +1167,8 @@ class Engine:
         req.status = RequestStatus.REJECTED
         req.reject_reason = reason
         req.done = True
+        if req.finish_time is None:
+            req.finish_time = self._clock()
         self.fault_counters["rejected"] += 1
         self.fault_counters[f"rejected_{kind}"] += 1
         self.rejected.append(req)
@@ -1058,6 +1200,25 @@ class Engine:
             self._reap()
             self._admit()
             if room():
+                return None
+        elif self.shed_policy == "shed-lowest-class":
+            # class-aware load shedding: drop the queued request of the
+            # STRICTLY lowest-priority class (worst slack on ties) to
+            # make room for a more urgent arrival; when nothing queued
+            # outranks the arrival downward, the arrival itself sheds
+            now = self._clock()
+            queue = self.scheduler.queue
+            victim = max(
+                (r for r in queue if r.priority > req.priority),
+                key=lambda r: (r.priority, -r.ttft_slack(now)),
+                default=None)
+            if victim is not None:
+                queue.remove(victim)
+                self.fault_counters["rejected_shed_lower_class"] += 1
+                self._reject(
+                    victim, "queue_full",
+                    f"shed for higher-priority rid={req.rid} "
+                    f"({req.slo_class} over {victim.slo_class})")
                 return None
         return self._reject(
             req, "queue_full",
@@ -1269,9 +1430,13 @@ class Engine:
                 return   # eviction did not unblock the head; stop churning
 
     def _pick_victim(self) -> Optional[int]:
-        """Victim policy: fewest tokens decoded (least work lost), then
-        most radix-recoverable pages (cheapest to resume), then lowest
-        slot.  Slots at their preemption cap are never picked."""
+        """Victim policy: lowest SLO-class priority first (batch yields
+        to interactive under pool pressure — for legacy single-class
+        workloads every request grades identically, so the historical
+        order is unchanged), then fewest tokens decoded (least work
+        lost), then most radix-recoverable pages (cheapest to resume),
+        then lowest slot.  Slots at their preemption cap are never
+        picked."""
         best, best_score = None, None
         P = self.spec.page_size
         for slot in range(self.slots):
@@ -1281,7 +1446,8 @@ class Engine:
             valid = len(req.effective_prompt) - (1 if req.out_tokens else 0)
             recoverable = valid // P if self.scheduler.radix is not None \
                 else 0
-            score = (len(req.out_tokens), -recoverable, slot)
+            score = (-req.priority, len(req.out_tokens), -recoverable,
+                     slot)
             if best_score is None or score < best_score:
                 best, best_score = slot, score
         return best
@@ -1305,6 +1471,8 @@ class Engine:
     def _finish_terminal(self, req: Request, status: str) -> None:
         req.status = status
         req.done = True
+        if req.finish_time is None:
+            req.finish_time = self._clock()
         if status == RequestStatus.TIMED_OUT:
             self.fault_counters["timed_out"] += 1
         elif status == RequestStatus.CANCELLED:
@@ -1333,6 +1501,12 @@ class Engine:
         req.preemptions += 1
         self.fault_counters["preemptions"] += 1
         self.fault_counters[f"{why}_preemptions"] += 1
+        self.preemption_log.append({
+            "rid": req.rid, "slo_class": req.slo_class, "why": why,
+            "candidate_classes": [
+                r.slo_class for s2, r in enumerate(self._slot_req)
+                if r is not None and s2 != slot
+                and r.preemptions < r.max_preemptions]})
         upto = None
         if self.chunked_prefill \
                 and self._slot_seen_len[slot] < self._slot_plen[slot]:
@@ -1378,7 +1552,7 @@ class Engine:
             pend.clear()
             pvalid.clear()
 
-        for adm in self.scheduler.admissions(free):
+        for adm in self.scheduler.admissions(free, now=self._clock()):
             req, slot = adm.req, adm.slot
             prompt = req.effective_prompt   # resume: replay emitted tail
             plen = len(prompt)
@@ -1484,6 +1658,38 @@ class Engine:
             self.peak_live_slots,
             sum(r is not None for r in self._slot_req))
 
+    def _update_prefill_budgets(self) -> None:
+        """``prefill_budget`` as a dynamic SLO knob, applied at the chunk
+        boundary like every other policy: while any interactive request
+        has blown its TTFT slack and is still waiting on a first token,
+        NON-interactive slots' per-micro-step prompt slice shrinks to a
+        quarter chunk (floor 1) so the urgent prefill and the decode
+        rows get the arithmetic; full budgets restore once slack
+        recovers.  A pure host->device value update — ``pbudget`` is
+        data, not shape, so the one fused executable never retraces, and
+        nothing here reads from the device."""
+        if not self.chunked_prefill or self.policy != "slo":
+            return
+        S = self.executor.chunk_rows
+        now = self._clock()
+
+        def urgent(r: Request) -> bool:
+            return (r.priority == 0 and r.first_token_time is None
+                    and r.ttft_slack(now) < 0.0)
+
+        pressure = any(urgent(r) for r in self.scheduler.queue) or any(
+            r is not None and urgent(r) for r in self._slot_req)
+        throttled = max(1, S // 4)
+        vec = [throttled if (pressure and r is not None
+                             and r.priority > 0) else S
+               for r in self._slot_req]
+        if vec != self._budget_vec:
+            if pressure:
+                self.budget_throttles += 1
+            self._budget_vec = vec
+            self.state = dict(self.state,
+                              pbudget=jnp.asarray(vec, jnp.int32))
+
     def step_chunk(self) -> jax.Array:
         """Dispatch one fused decode chunk.  No host synchronization —
         safe to call under ``jax.transfer_guard_device_to_host``."""
@@ -1514,6 +1720,7 @@ class Engine:
             toks_np, out_len, active, firsts = jax.device_get(fetch)
             cache_len = None
         self.host_syncs += 1
+        now = self._clock()   # one host clock read stamps every token
         watchdog: List[int] = []
         for slot in range(self.slots):
             req = self._slot_req[slot]
@@ -1548,6 +1755,9 @@ class Engine:
                 # prefill-sampled token (resumes arrive with a non-empty
                 # out_tokens, so presence of output cannot gate this)
                 req.out_tokens.append(int(firsts[slot][0]))
+                req.token_times.append(now)
+                if req.first_token_time is None:
+                    req.first_token_time = now
                 self._slot_first_pending[slot] = False
             k = int(out_len[slot]) - len(req.out_tokens)
             if k > 0:
@@ -1557,6 +1767,12 @@ class Engine:
                 vals = [int(t) for t in toks_np[:, slot] if t >= 0]
                 assert len(vals) <= k, (slot, len(vals), k)
                 req.out_tokens.extend(vals[-k:])
+                req.token_times.extend([now] * len(vals[-k:]))
+                if req.first_token_time is None and req.token_times:
+                    # TTFT from the ORIGINAL submit_time — a request
+                    # preempted mid-prefill and resumed later keeps its
+                    # submit stamp, so the wait is charged to it
+                    req.first_token_time = now
                 self._slot_stale[slot] = 0
             elif self.stall_patience and not progressed:
                 self._slot_stale[slot] += 1
@@ -1566,6 +1782,7 @@ class Engine:
             if not active[slot]:
                 req.status = RequestStatus.FINISHED
                 req.done = True
+                req.finish_time = now
                 self.finished.append(req)
                 self._slot_req[slot] = None
                 self._slot_first_tok[slot] = None
@@ -1594,11 +1811,21 @@ class Engine:
                     if self._slot_req[i] is not None]
             self.chaos.tick(live)
             for slot in self.chaos.storm_victims(live):
+                if self.policy == "slo":
+                    # chaos decides THAT a preemption storm hits; under
+                    # the SLO policy the class-aware victim rule decides
+                    # WHO — interactive slots are evicted last, exactly
+                    # as under genuine pool pressure
+                    picked = self._pick_victim()
+                    if picked is None:
+                        continue
+                    slot = picked
                 if self._slot_req[slot] is not None:
                     self._preempt_slot(slot, "chaos")
         self._admit()
+        self._update_prefill_budgets()
         if not self._live():
-            if not self.scheduler.can_progress(0):
+            if not self.scheduler.can_progress(0, now=self._clock()):
                 head = self.queue[0]
                 raise PagePoolExhausted(
                     f"wedged: rid={head.rid} cannot be admitted "

@@ -52,7 +52,8 @@ def sample(logits: jax.Array, key: jax.Array, *,
 
 
 def make_slot_state(slots: int, seed: int = 0, hist_cap: int = 0,
-                    spec: bool = False, prompt_cap: int = 0) -> dict:
+                    spec: bool = False, prompt_cap: int = 0,
+                    prefill_budget: int = 0) -> dict:
     """Device-side per-slot bookkeeping for the fused decode step.
 
     tokens:   last token fed/emitted per slot (decode input)
@@ -76,7 +77,12 @@ def make_slot_state(slots: int, seed: int = 0, hist_cap: int = 0,
     [slots, prompt_cap] — the slot's full (effective) prompt, fed to the
     fused chunk a budgeted slice at a time — and ``plen``, its length.
     The prefill cursor itself is the cache ``len``; a slot is mid-prefill
-    while ``len < plen``."""
+    while ``len < plen``.  ``prefill_budget > 0`` additionally adds
+    ``pbudget`` [slots] — the per-slot cap on prompt tokens per
+    micro-step, initialized to the compiled chunk width.  The fused chunk
+    clamps it to ``[1, S]``, so the SLO policy can shrink a batch slot's
+    budget at a chunk boundary (one host->device value update) without
+    retracing: ``S`` stays the static shape."""
     zi = jnp.zeros((slots,), jnp.int32)
     state = {
         "tokens": zi,
@@ -97,6 +103,8 @@ def make_slot_state(slots: int, seed: int = 0, hist_cap: int = 0,
     if prompt_cap:
         state["prompt"] = jnp.zeros((slots, prompt_cap), jnp.int32)
         state["plen"] = jnp.zeros((slots,), jnp.int32)
+    if prefill_budget:
+        state["pbudget"] = jnp.full((slots,), prefill_budget, jnp.int32)
     return state
 
 

@@ -80,6 +80,31 @@ class RequestStatus:
     TERMINAL = frozenset({FINISHED, TIMED_OUT, CANCELLED, REJECTED})
 
 
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One service class: admission priority (lower = more urgent) plus
+    the latency contract its requests are graded against — TTFT (submit
+    to first token) and TPOT (mean per-token delta after the first), in
+    engine-clock units.  ``None`` targets always pass (best-effort)."""
+
+    name: str
+    priority: int
+    ttft_target: Optional[float]
+    tpot_target: Optional[float]
+
+
+#: Built-in multi-tenant service classes.  ``interactive`` outranks
+#: ``batch`` outranks ``best_effort`` at admission and is preempted
+#: last under pool pressure; per-request ``ttft_target``/``tpot_target``
+#: override the class defaults (which are wall-seconds on a real clock,
+#: virtual units under ``serve/traffic.VirtualClock``).
+SLO_CLASSES: Dict[str, SLOClass] = {
+    "interactive": SLOClass("interactive", 0, 1.0, 0.1),
+    "batch": SLOClass("batch", 1, 20.0, 1.0),
+    "best_effort": SLOClass("best_effort", 2, None, None),
+}
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -92,17 +117,60 @@ class Request:
     deadline: Optional[float] = None
     ttl: Optional[float] = None
     max_preemptions: int = 3
+    # --- SLO class + latency contract (None target -> class default;
+    # a class absent from SLO_CLASSES grades as best_effort) ---
+    slo_class: str = "best_effort"
+    ttft_target: Optional[float] = None
+    tpot_target: Optional[float] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     status: str = RequestStatus.QUEUED
     preemptions: int = 0
     cancel_requested: bool = False
     reject_reason: Optional[str] = None
+    # --- latency telemetry, host-stamped (submit at Engine.submit; first
+    # token and per-token times at the chunk-boundary drain, so no new
+    # device syncs).  submit_time survives preemption: TTFT is measured
+    # from the ORIGINAL submit, never from a resume. ---
+    submit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    _seq: int = 0   # scheduler-assigned arrival order (slack tiebreak)
 
     def cancel(self) -> None:
         """Request cooperative cancellation; the engine reaps the slot
         (or drops the queue entry) at the next chunk boundary."""
         self.cancel_requested = True
+
+    @property
+    def slo(self) -> SLOClass:
+        return SLO_CLASSES.get(self.slo_class, SLO_CLASSES["best_effort"])
+
+    @property
+    def priority(self) -> int:
+        """Admission priority (lower = more urgent)."""
+        return self.slo.priority
+
+    @property
+    def resolved_ttft_target(self) -> Optional[float]:
+        return self.ttft_target if self.ttft_target is not None \
+            else self.slo.ttft_target
+
+    @property
+    def resolved_tpot_target(self) -> Optional[float]:
+        return self.tpot_target if self.tpot_target is not None \
+            else self.slo.tpot_target
+
+    def ttft_slack(self, now: float) -> float:
+        """Time remaining until this request's TTFT target is blown
+        (negative = already late; +inf when it has no target).  Least
+        slack first is the SLO admission order within a priority band."""
+        target = self.resolved_ttft_target
+        if target is None:
+            return float("inf")
+        submitted = self.submit_time if self.submit_time is not None else 0.0
+        return target - (now - submitted)
 
     # A preempted request resumes by replaying everything it has already
     # emitted as prompt tail: prefill of ``prompt + out_tokens`` samples
@@ -348,11 +416,28 @@ class RadixIndex:
 
 
 class Scheduler:
-    """FIFO continuous-batching policy over ``slots`` cache slots and
-    per-pool-group page budgets, with radix-indexed prefix sharing."""
+    """Continuous-batching policy over ``slots`` cache slots and
+    per-pool-group page budgets, with radix-indexed prefix sharing.
+
+    ``policy`` selects the admission order:
+
+    * ``"fifo"`` (default) — strict arrival order; when the head's
+      reservation does not fit, later requests do not jump it.
+    * ``"slo"`` — priority then least-TTFT-slack-first: at every chunk
+      boundary the queue is ordered by ``(SLO-class priority, ttft
+      slack, arrival)`` at the boundary's ``now``, so an interactive
+      request running out of slack jumps queued batch work while two
+      same-class requests keep FIFO order.  The first candidate that
+      does not fit still blocks admission (pages it is waiting on must
+      not be nibbled away by lower-priority work); victim selection for
+      pressure preemption is the Engine's, also class-aware."""
 
     def __init__(self, spec: CacheSpec, *, prefix_sharing: bool = True,
-                 defer_radix_insert: bool = False):
+                 defer_radix_insert: bool = False, policy: str = "fifo"):
+        if policy not in ("fifo", "slo"):
+            raise ValueError(
+                f"policy must be 'fifo' or 'slo', got {policy!r}")
+        self.policy = policy
         self.spec = spec
         self.pools: Dict[str, PagePool] = {
             g.key: PagePool(g.num_pages) for g in spec.groups
@@ -385,6 +470,11 @@ class Scheduler:
         self.resume_admissions = 0
         self.resume_recovered_tokens = 0
         self.resume_replayed_tokens = 0
+        # arrival-order sequence for slack ties + admission-order log
+        # [(boundary, rid, priority, slack)] the property tests replay
+        self._seq = 0
+        self._boundary = 0
+        self.admission_log: List[Tuple[int, int, int, float]] = []
 
     # ------------------------------------------------------------ compat
     @property
@@ -412,6 +502,8 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         self.validate(req)   # may raise PagePoolExhausted
         req.status = RequestStatus.QUEUED
+        self._seq += 1
+        req._seq = self._seq
         self.queue.append(req)
 
     def requeue(self, req: Request) -> None:
@@ -565,17 +657,36 @@ class Scheduler:
         return Admission(slot=-1, req=req, rows=rows, suffix_start=s,
                          cow=cow, lease=lease)
 
-    def admissions(self, free_slots: List[int]) -> Iterator[Admission]:
-        """Yield admissions while the queue head fits.  Strictly FIFO:
-        when the head's reservation does not fit, later (smaller)
-        requests do NOT jump it — head-of-line backpressure keeps
-        admission order fair."""
+    def admission_order(self, now: float) -> List[Request]:
+        """The queue in this boundary's admission order: FIFO under the
+        default policy; ``(priority, ttft slack, arrival)`` under
+        ``"slo"``.  Slack is evaluated once at ``now`` so the order is a
+        consistent snapshot even while yields interleave."""
+        if self.policy != "slo":
+            return list(self.queue)
+        return sorted(self.queue,
+                      key=lambda r: (r.priority, r.ttft_slack(now), r._seq))
+
+    def admissions(self, free_slots: List[int],
+                   now: float = 0.0) -> Iterator[Admission]:
+        """Yield admissions while the next request in admission order
+        fits.  When it does not fit, later (smaller) requests do NOT
+        jump it — head-of-line backpressure keeps the order fair (FIFO)
+        and keeps lower-priority work from nibbling away the pages a
+        blocked urgent request is waiting on (SLO)."""
         free_slots = list(free_slots)
-        while self.queue and free_slots:
-            adm = self._plan(self.queue[0])
+        self._boundary += 1
+        order = self.admission_order(now)
+        while order and free_slots:
+            head = order[0]
+            adm = self._plan(head)
             if adm is None:
                 return                       # wait for an eviction
-            self.queue.pop(0)
+            order.pop(0)
+            self.queue.remove(head)
+            self.admission_log.append(
+                (self._boundary, head.rid, head.priority,
+                 head.ttft_slack(now)))
             adm.slot = free_slots.pop(0)
             self._leases[adm.slot] = adm.lease
             self._rows[adm.slot] = adm.rows
@@ -640,14 +751,14 @@ class Scheduler:
                                  rows[self.share_key],
                                  self.pools[self.share_key])
 
-    def can_progress(self, live_slots: int) -> bool:
+    def can_progress(self, live_slots: int, now: float = 0.0) -> bool:
         """False when the engine is wedged: nothing is running and the
-        queue head still cannot be admitted even after draining every
-        evictable radix page (should be impossible given the submit()
-        capacity check — a guard, not a policy)."""
+        admission-order head still cannot be admitted even after draining
+        every evictable radix page (should be impossible given the
+        submit() capacity check — a guard, not a policy)."""
         if not self.queue or live_slots:
             return True
-        head = self.queue[0]
+        head = self.admission_order(now)[0]
         need = self.spec.blocks_needed(len(head.effective_prompt),
                                        head.effective_max_new)
         for key, n in need.items():

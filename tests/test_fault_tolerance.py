@@ -251,3 +251,51 @@ def test_chaos_smoke_drains_clean(seed):
                len(r.out_tokens) == 8 for r in reqs)
     assert eng.leaked_pages() == 0
     assert eng.decode_compiles == 1
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_chaos_slo_mix_preempts_interactive_last(seed):
+    """Chaos storm + mixed SLO classes under the slo policy: every
+    forced preemption must pick the lowest-class victim available —
+    an interactive slot is evicted only when NO lower-priority slot
+    was preemptable at that boundary — and the storm still drains
+    clean (all terminal, zero leaked pages, one decode executable)."""
+    from repro.serve.scheduler import SLO_CLASSES
+
+    cfg, params = _model("internlm2-1.8b")
+    # storm-heavy schedule: the smoke preset's 10% per-boundary storm
+    # rate can fire zero times in a short drain; this case exists to
+    # exercise victim selection, so make storms near-certain and give
+    # each request enough chunks (max_new=16 @ sync_interval=4) that
+    # chaos sees live slots at many boundaries
+    eng = Engine(cfg, params, slots=3, max_len=64, page_size=8,
+                 num_pages=12, sync_interval=4, policy="slo",
+                 chaos=ChaosMonkey(seed, p_preempt=0.6,
+                                   p_deny_admission=0.1,
+                                   p_sharing_fault=0.25))
+    classes = ["interactive", "batch", "best_effort"]
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=16, ttl=600.0,
+                    slo_class=classes[i % 3])
+            for i, p in enumerate(_prompts(9))]
+    for r in reqs:
+        assert eng.submit(r) is None
+    eng.run(max_steps=100_000)
+    assert all(r.status in RequestStatus.TERMINAL for r in reqs)
+    assert all(r.status == RequestStatus.FINISHED and
+               len(r.out_tokens) == 16 for r in reqs)
+    assert eng.leaked_pages() == 0
+    assert eng.decode_compiles == 1
+    # class-ordering invariant, replayed from the preemption log: when
+    # an interactive slot was evicted, every other preemptable live
+    # slot was interactive too (batch/best_effort always yield first)
+    assert eng.preemption_log, "chaos storm produced no preemptions"
+    inter_prio = SLO_CLASSES["interactive"].priority
+    for ev in eng.preemption_log:
+        victim_prio = SLO_CLASSES[ev["slo_class"]].priority
+        others = [SLO_CLASSES[c].priority
+                  for c in ev["candidate_classes"]]
+        assert all(victim_prio >= p for p in others), (
+            f"preempted {ev['slo_class']} ({ev['why']}) while a "
+            f"lower-priority slot was live: {ev['candidate_classes']}")
+        if victim_prio == inter_prio:
+            assert all(p == inter_prio for p in others)

@@ -1,0 +1,259 @@
+"""Hand-computed oracle tests for the latency/goodput math behind
+``Engine.latency_stats()`` (nearest-rank percentiles, TTFT from the
+ORIGINAL submit time across preemption, per-class goodput), plus the
+deterministic SLO-policy tests that need no optional deps: admission
+ordering by (priority, slack, arrival) and the engine-level
+interactive-first admission + dynamic prefill-budget throttle."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model_defs
+from repro.models import module as m
+from repro.serve.cache import CacheSpec
+from repro.serve.engine import (Engine, compute_latency_stats, percentile,
+                                request_slo_met, request_tpot,
+                                request_ttft)
+from repro.serve.scheduler import (Request, RequestStatus, SLO_CLASSES,
+                                   Scheduler)
+
+
+# ---------------------------------------------------------------------------
+# percentile: nearest-rank, hand-computed oracle
+# ---------------------------------------------------------------------------
+
+def test_percentile_nearest_rank_oracle():
+    assert percentile([], 50) is None
+    assert percentile([], 99) is None
+    assert percentile([7.0], 1) == 7.0          # single sample: any q
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([7.0], 99) == 7.0
+    vals = [float(v) for v in range(1, 11)]      # 1..10
+    assert percentile(vals, 50) == 5.0           # ceil(0.5*10)=5th
+    assert percentile(vals, 90) == 9.0
+    assert percentile(vals, 99) == 10.0          # ceil(.99*10)=10th
+    assert percentile(vals, 100) == 10.0
+    assert percentile([4.0, 1.0, 3.0, 2.0], 50) == 2.0   # unsorted input
+    assert percentile([1.0, 2.0, 3.0, 4.0], 25) == 1.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 26) == 2.0   # rank boundary
+
+
+def _req(cls="interactive", status=RequestStatus.FINISHED, submit=0.0,
+         first=None, times=(), rid=0, ttft_target=None, tpot_target=None):
+    r = Request(rid=rid, prompt=[1, 2, 3], max_new_tokens=8,
+                slo_class=cls, ttft_target=ttft_target,
+                tpot_target=tpot_target)
+    r.status = status
+    r.submit_time = submit
+    r.first_token_time = first
+    r.token_times = list(times)
+    return r
+
+
+def test_request_ttft_and_tpot_oracle():
+    r = _req(submit=2.0, first=5.0, times=[5.0, 6.0, 8.0])
+    assert request_ttft(r) == 3.0
+    assert request_tpot(r) == pytest.approx((8.0 - 5.0) / 2)
+    assert request_ttft(_req(first=None)) is None        # no token yet
+    assert request_tpot(_req(times=[4.0])) is None       # < 2 tokens
+    r2 = _req(submit=None, first=4.0)
+    assert request_ttft(r2) is None
+
+
+def test_slo_met_target_resolution():
+    # class default targets apply when the request carries none
+    ok = _req(submit=0.0, first=0.5, times=[0.5, 0.55, 0.6])
+    assert ok.resolved_ttft_target == SLO_CLASSES["interactive"].ttft_target
+    assert request_slo_met(ok)
+    # per-request override beats the class default
+    tight = _req(submit=0.0, first=0.5, times=[0.5, 0.55, 0.6],
+                 ttft_target=0.1)
+    assert not request_slo_met(tight)
+    # absent target (best_effort) always passes once FINISHED
+    be = _req(cls="best_effort", first=None)
+    assert request_slo_met(be)
+    # a target with NO measurement is a miss, not a pass
+    silent = _req(cls="interactive", first=None)
+    assert not request_slo_met(silent)
+    # non-FINISHED terminal states never meet their SLO
+    dead = _req(status=RequestStatus.TIMED_OUT, first=0.1,
+                times=[0.1, 0.15])
+    assert not request_slo_met(dead)
+
+
+def test_stats_zero_finished_and_empty():
+    stats = compute_latency_stats([])
+    assert stats["classes"] == {}
+    assert stats["goodput"] == 0.0
+    assert stats["overall"]["ttft_p50"] is None
+    # queued-only: nothing terminal, nothing measured — all None/0
+    queued = _req(status=RequestStatus.QUEUED, first=None)
+    stats = compute_latency_stats([queued])
+    c = stats["classes"]["interactive"]
+    assert c["count"] == 1 and c["terminal"] == 0 and c["finished"] == 0
+    assert c["goodput"] == 0.0
+    assert c["ttft_p50"] is None and c["tpot_p99"] is None
+
+
+def test_stats_single_request_oracle():
+    r = _req(submit=1.0, first=1.25, times=[1.25, 1.31, 1.35])
+    stats = compute_latency_stats([r])
+    c = stats["classes"]["interactive"]
+    assert c["ttft_p50"] == c["ttft_p99"] == 0.25
+    assert c["tpot_p50"] == pytest.approx(0.05)
+    # both interactive targets met (ttft 0.25 <= 1.0, tpot 0.05 <= 0.1)
+    assert c["goodput"] == 1.0 and stats["goodput"] == 1.0
+    # the same tokens spread 0.25s apart blow the 0.1 tpot target
+    slow = _req(submit=1.0, first=1.25, times=[1.25, 1.5, 1.75])
+    assert compute_latency_stats([slow])["goodput"] == 0.0
+
+
+def test_stats_all_timed_out_class_and_mixed_goodput():
+    # an all-timed-out class: percentiles may exist (first tokens were
+    # drained) but goodput is 0 — terminal non-FINISHED is a miss
+    dead = [_req(cls="batch", status=RequestStatus.TIMED_OUT, submit=0.0,
+                 first=1.0 + i, times=[1.0 + i, 2.0 + i], rid=i)
+            for i in range(3)]
+    ok = _req(cls="interactive", submit=0.0, first=0.2,
+              times=[0.2, 0.25, 0.3], rid=10)
+    stats = compute_latency_stats(dead + [ok])
+    assert stats["classes"]["batch"]["goodput"] == 0.0
+    assert stats["classes"]["batch"]["ttft_p99"] == 3.0
+    assert stats["classes"]["interactive"]["goodput"] == 1.0
+    # overall: 1 of 4 terminal requests met its SLO
+    assert stats["goodput"] == 0.25
+
+
+def test_ttft_measured_from_original_submit_across_preemption():
+    """A mid-flight preempted-then-resumed request keeps its ORIGINAL
+    submit_time: TTFT covers the whole queue+preemption wait, not the
+    time since resume."""
+    r = _req(submit=10.0, first=None, times=[])
+    r.preemptions = 1                    # preempted before first token
+    r.status = RequestStatus.PREEMPTED
+    assert request_ttft(r) is None       # not measured yet
+    # resume: first token finally drains at t=50
+    r.status = RequestStatus.FINISHED
+    r.first_token_time = 50.0
+    r.token_times = [50.0, 51.0]
+    assert request_ttft(r) == 40.0       # from t=10, NOT from resume
+    stats = compute_latency_stats([r])
+    assert stats["classes"]["interactive"]["ttft_p50"] == 40.0
+
+
+# ---------------------------------------------------------------------------
+# deterministic SLO-policy ordering (no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+def test_slo_orders_by_priority_then_slack_then_arrival():
+    cfg = reduced(get_config("internlm2-1.8b"))
+    spec = CacheSpec.from_config(cfg, slots=4, max_len=64, page_size=8)
+    s = Scheduler(spec, prefix_sharing=False, policy="slo")
+    batch = Request(rid=0, prompt=[1, 2], max_new_tokens=4,
+                    slo_class="batch", submit_time=0.0)
+    inter_late = Request(rid=1, prompt=[1, 2], max_new_tokens=4,
+                         slo_class="interactive", submit_time=5.0)
+    inter_early = Request(rid=2, prompt=[1, 2], max_new_tokens=4,
+                          slo_class="interactive", submit_time=1.0)
+    best = Request(rid=3, prompt=[1, 2], max_new_tokens=4,
+                   slo_class="best_effort", submit_time=0.0)
+    for r in (batch, inter_late, inter_early, best):
+        s.submit(r)
+    order = [r.rid for r in s.admission_order(now=6.0)]
+    # interactive first, least slack (earlier submit) first among them,
+    # then batch, then best_effort
+    assert order == [2, 1, 0, 3]
+    # unknown classes degrade to best_effort instead of crashing
+    weird = Request(rid=4, prompt=[1], max_new_tokens=2,
+                    slo_class="no-such-class")
+    assert weird.priority == SLO_CLASSES["best_effort"].priority
+    assert weird.ttft_slack(100.0) == float("inf")
+    # invalid policy is rejected at construction
+    with pytest.raises(ValueError):
+        Scheduler(spec, policy="priority")
+
+
+def test_engine_slo_policy_admits_interactive_first_and_throttles():
+    """Engine-level integration: with a full pool of batch work and a
+    deep queue, a late interactive arrival (a) jumps the admission
+    queue under policy='slo' and (b) while its TTFT slack is negative
+    the non-interactive slots' prefill budgets are throttled on
+    device — visible in ``budget_throttles`` and the pbudget vector."""
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    clk = {"t": 0.0}
+    eng = Engine(cfg, params, slots=2, max_len=64, page_size=8,
+                 sync_interval=4, policy="slo", prefix_sharing=False,
+                 clock=lambda: clk["t"], chunked_prefill=True)
+    assert eng.chunked_prefill
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=[1 + i, 2, 3],
+                           max_new_tokens=24, slo_class="batch"))
+    eng.step()                      # two batch slots live, two queued
+    assert all(r is not None for r in eng._slot_req)
+    # interactive arrives, then waits in queue past its TTFT target
+    clk["t"] = 50.0
+    urgent = Request(rid=10, prompt=[9, 9, 9], max_new_tokens=4,
+                     slo_class="interactive")
+    eng.submit(urgent)
+    clk["t"] = 52.0                 # queued past the 1.0 TTFT target
+    assert urgent.ttft_slack(clk["t"]) < 0.0
+    eng.step()
+    # budget throttle engaged while the urgent request waits/streams
+    assert eng.budget_throttles >= 1
+    S = eng.executor.chunk_rows
+    vec = [int(v) for v in jax.device_get(eng.state["pbudget"])]
+    assert any(v == max(1, S // 4) for v in vec), vec
+    done = eng.run(max_steps=10_000)
+    assert {r.rid for r in done} == {0, 1, 2, 3, 10}
+    # pressure gone: budgets restored to the full chunk width
+    vec = [int(v) for v in jax.device_get(eng.state["pbudget"])]
+    assert vec == [S] * eng.spec.slots
+    # the interactive rid was admitted before the two still-queued
+    # batch rids despite arriving after them
+    admits = [rid for _, rid, _, _ in eng.scheduler.admission_log]
+    assert admits.index(10) < admits.index(2)
+    assert admits.index(10) < admits.index(3)
+    assert eng.leaked_pages() == 0
+    ls = eng.latency_stats()
+    assert set(ls["classes"]) == {"batch", "interactive"}
+    assert ls["classes"]["interactive"]["finished"] == 1
+    assert ls["budget_throttles"] == eng.budget_throttles
+
+
+def test_shed_lowest_class_evicts_queued_lower_priority():
+    """shed-lowest-class at a full queue: an incoming interactive
+    request sheds the worst queued lower-class request instead of being
+    rejected itself; an incoming best_effort finds no lower class and
+    is rejected as usual."""
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    eng = Engine(cfg, params, slots=1, max_len=64, page_size=8,
+                 prefix_sharing=False, queue_limit=2,
+                 shed_policy="shed-lowest-class")
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=30))
+    eng.step()                                # rid 0 occupies the slot
+    assert eng.submit(Request(rid=1, prompt=[1, 2], max_new_tokens=4,
+                              slo_class="batch")) is None
+    assert eng.submit(Request(rid=2, prompt=[1, 2], max_new_tokens=4,
+                              slo_class="best_effort")) is None
+    # queue full (limit 2): interactive sheds the best_effort entry
+    urgent = Request(rid=3, prompt=[1, 2], max_new_tokens=4,
+                     slo_class="interactive")
+    assert eng.submit(urgent) is None
+    assert [r.rid for r in eng.queue] == [1, 3]
+    shed = [r for r in eng.rejected if r.rid == 2]
+    assert len(shed) == 1
+    assert shed[0].status == RequestStatus.REJECTED
+    assert eng.fault_counters["rejected_shed_lower_class"] == 1
+    # best_effort incoming with no lower class queued: rejected itself
+    rej = eng.submit(Request(rid=4, prompt=[1, 2], max_new_tokens=4,
+                             slo_class="best_effort"))
+    assert rej is not None
+    done = eng.run(max_steps=10_000)
+    assert {r.rid for r in done} == {0, 1, 3}
+    assert eng.leaked_pages() == 0

@@ -1,0 +1,198 @@
+"""Property-based SLO-scheduler invariants (hypothesis) + engine-level
+SLO policy behavior: random interleavings of submit/cancel/preempt/
+release across classes never starve an admitted request, never leak
+pages, and always admit in slack order among feasible requests; the
+Engine's slo policy favors interactive admissions and throttles
+non-interactive prefill budgets when interactive TTFT slack goes
+negative."""
+
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, do not error
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.configs import get_config, reduced
+from repro.serve.cache import CacheSpec
+from repro.serve.scheduler import (PagePoolExhausted, Request,
+                                   RequestStatus, SLO_CLASSES, Scheduler)
+
+CLASSES = sorted(SLO_CLASSES)
+
+
+def _scheduler(policy, slots=4):
+    cfg = reduced(get_config("internlm2-1.8b"))
+    spec = CacheSpec.from_config(cfg, slots=slots, max_len=64, page_size=8)
+    return Scheduler(spec, prefix_sharing=False, policy=policy)
+
+
+class _Harness:
+    """Pure-host Scheduler driver: mirrors the Engine's slot/lease
+    bookkeeping (admit into free slots, release on finish, requeue on
+    preempt) without any device work, so hypothesis can hammer it."""
+
+    def __init__(self, policy, slots=4):
+        self.sched = _scheduler(policy, slots)
+        self.slots = slots
+        self.live = {}
+        self.now = 0.0
+        self.next_rid = 0
+        self.submitted = []
+
+    def free_slots(self):
+        return [s for s in range(self.slots) if s not in self.live]
+
+    def submit(self, cls, plen, max_new):
+        req = Request(rid=self.next_rid, prompt=list(range(1, plen + 1)),
+                      max_new_tokens=max_new, slo_class=cls,
+                      submit_time=self.now)
+        self.next_rid += 1
+        try:
+            self.sched.submit(req)
+        except PagePoolExhausted:
+            return
+        self.submitted.append(req)
+
+    def admit(self):
+        for adm in self.sched.admissions(self.free_slots(), now=self.now):
+            self.live[adm.slot] = adm.req
+
+    def release(self, pick):
+        if not self.live:
+            return
+        slot = sorted(self.live)[pick % len(self.live)]
+        req = self.live.pop(slot)
+        req.status = RequestStatus.FINISHED
+        self.sched.release(slot)
+
+    def preempt(self, pick):
+        if not self.live:
+            return
+        slot = sorted(self.live)[pick % len(self.live)]
+        req = self.live.pop(slot)
+        self.sched.release(slot)
+        req.preemptions += 1
+        if req.preemptions <= 2:
+            self.sched.requeue(req)
+        else:
+            req.status = RequestStatus.FINISHED
+
+    def cancel(self, pick):
+        if not self.sched.queue:
+            return
+        req = self.sched.queue[pick % len(self.sched.queue)]
+        self.sched.queue.remove(req)
+        req.status = RequestStatus.CANCELLED
+
+    def drain(self):
+        """Admit/release to completion — must terminate (no starvation)
+        because every blocked head fits the empty pool by ``validate``."""
+        for _ in range(20 * (len(self.submitted) + 1)):
+            if not self.sched.queue and not self.live:
+                return True
+            self.now += 1.0
+            self.admit()
+            self.release(0)
+        return False
+
+
+_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.sampled_from(CLASSES),
+                  st.integers(2, 12), st.integers(1, 16)),
+        st.tuples(st.just("admit")),
+        st.tuples(st.just("release"), st.integers(0, 7)),
+        st.tuples(st.just("preempt"), st.integers(0, 7)),
+        st.tuples(st.just("cancel"), st.integers(0, 7)),
+        st.tuples(st.just("tick"), st.integers(1, 5)),
+    ), min_size=1, max_size=40)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_OPS, policy=st.sampled_from(["fifo", "slo"]))
+def test_random_interleavings_never_starve_or_leak(ops, policy):
+    h = _Harness(policy)
+    for op in ops:
+        if op[0] == "submit":
+            h.submit(*op[1:])
+        elif op[0] == "admit":
+            h.admit()
+        elif op[0] == "release":
+            h.release(op[1])
+        elif op[0] == "preempt":
+            h.preempt(op[1])
+        elif op[0] == "cancel":
+            h.cancel(op[1])
+        else:
+            h.now += op[1]
+    assert h.drain(), (
+        f"{policy}: queue failed to drain — an admitted request starved")
+    assert h.sched.pages_in_use == 0, (
+        f"{policy}: {h.sched.pages_in_use} pages leaked after clean drain")
+    for req in h.submitted:
+        assert req.status in (RequestStatus.FINISHED,
+                              RequestStatus.CANCELLED)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_OPS)
+def test_slo_admissions_in_slack_order_within_boundary(ops):
+    """Within every chunk boundary the slo policy admits in
+    (priority, slack) order — the admission_log replay is monotone."""
+    h = _Harness("slo")
+    for op in ops:
+        if op[0] == "submit":
+            h.submit(*op[1:])
+        elif op[0] == "admit":
+            h.admit()
+        elif op[0] == "release":
+            h.release(op[1])
+        elif op[0] == "preempt":
+            h.preempt(op[1])
+        elif op[0] == "cancel":
+            h.cancel(op[1])
+        else:
+            h.now += op[1]
+    h.drain()
+    by_boundary = {}
+    for boundary, rid, prio, slack in h.sched.admission_log:
+        by_boundary.setdefault(boundary, []).append((prio, slack, rid))
+    for boundary, entries in by_boundary.items():
+        keys = [(p, s) for p, s, _ in entries]
+        assert keys == sorted(keys), (
+            f"boundary {boundary} admitted out of slack order: {entries}")
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_OPS)
+def test_fifo_admissions_in_arrival_order(ops):
+    """The default policy must stay byte-for-byte FIFO: the admission
+    log's rids are a subsequence-respecting arrival order within each
+    drain of the queue (requeued preemption victims re-enter at the
+    back with their original _seq, so we assert per-boundary order by
+    queue position instead of globally)."""
+    h = _Harness("fifo")
+    for op in ops:
+        if op[0] == "submit":
+            h.submit(*op[1:])
+        elif op[0] == "admit":
+            h.admit()
+        elif op[0] == "release":
+            h.release(op[1])
+        elif op[0] == "preempt":
+            h.preempt(op[1])
+        elif op[0] == "cancel":
+            h.cancel(op[1])
+        else:
+            h.now += op[1]
+    # under FIFO, admissions within one boundary follow queue order,
+    # and the scheduler never reorders the queue itself
+    assert h.sched.admission_order(h.now) == h.sched.queue
+    h.drain()
+    assert h.sched.pages_in_use == 0
+
+
+# deterministic (non-hypothesis) SLO policy tests live in
+# tests/test_latency_stats.py so they run even without the optional
+# hypothesis dependency this module is gated on
