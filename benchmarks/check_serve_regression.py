@@ -49,6 +49,20 @@ in the same CI job) against the committed baseline run and fails when:
   regenerating byte-identically, pages leaked, the chunk stopped being
   sync-free, or the dynamic prefill budget retraced the decode
   executable;
+* the tracing-overhead measurement regressed — the traced twin of the
+  fig14 baseline workload fell below 0.95x the untraced engine's
+  tokens/sec (a same-machine same-run ratio), the traced decode chunk
+  stopped being sync-free or retraced, the exported Perfetto JSON
+  failed schema validation (``benchmarks/check_trace.validate``), a
+  submit->terminal flow chain went incomplete, or the tracer ring
+  dropped events on a workload sized to fit it;
+* the trace-report workload regressed (``benchmarks/fig04_scheduling
+  --trace-report``, merged into the same run) — the replayed
+  VirtualClock trace stopped producing byte-identical fingerprints
+  across two runs, the exported timeline failed schema validation,
+  the oversubscribed mixed-class trace stopped preempting, per-class
+  lifecycle phase attribution went vacuous (zero total queued+running
+  seconds), or ``Engine.explain`` stopped rendering causal chains;
 * a **gated metric key is missing** from a workload the candidate run
   claims to include — a silently-dropped metric must read as a
   regression, not as a pass through a forgiving ``.get`` default (the
@@ -569,6 +583,112 @@ def check(runs, threshold: float) -> int:
         failures.append("candidate run dropped the slo-scheduling "
                         "workload (slo_* fields missing)")
 
+    # ---- tracing-overhead gates (traced twin of the fig14 baseline
+    # workload, same run).  Observability must be near-free: the traced
+    # engine runs the same workload on the same machine in the same
+    # process, so the ratio needs no normalization — and tracing must
+    # not perturb the structural invariants it exists to observe.
+    if "trace_tokens_per_s" in cand:
+        _require(cand, failures, "tracing", [
+            "trace_overhead_ratio", "trace_decode_sync_free",
+            "trace_decode_compiles", "trace_events", "trace_dropped",
+            "trace_schema_valid", "trace_complete_chains"])
+        ratio = cand.get("trace_overhead_ratio", 0.0)
+        if not ratio >= 0.95:
+            failures.append(
+                "tracing overhead > 5%: traced tokens/sec fell to "
+                f"x{ratio:.3f} of the untraced engine "
+                f"({cand.get('trace_tokens_per_s', 0.0):.0f} vs "
+                f"{cand.get('new_tokens_per_s', 0.0):.0f}) — lifecycle "
+                "events must stay host-side at chunk boundaries")
+        if not cand.get("trace_decode_sync_free", True):
+            failures.append(
+                "traced decode chunk performed a device->host transfer "
+                "— tracing added a sync to the fused executable")
+        if cand.get("trace_decode_compiles", 1) != 1:
+            failures.append(
+                "traced workload retraced the decode chunk "
+                f"({cand.get('trace_decode_compiles')} compiles) — "
+                "tracing must not change traced shapes")
+        if not cand.get("trace_events", 0) > 0:
+            failures.append(
+                "tracing vacuous: the traced workload recorded no "
+                "lifecycle events")
+        if cand.get("trace_dropped", 0) != 0:
+            failures.append(
+                "tracer ring dropped events on a workload sized to fit "
+                f"it ({cand.get('trace_dropped')} dropped)")
+        if not cand.get("trace_schema_valid", False):
+            failures.append(
+                "exported trace failed Chrome/Perfetto schema "
+                "validation (benchmarks/check_trace)")
+        if not cand.get("trace_complete_chains", False):
+            failures.append(
+                "trace lifecycle chains incomplete: a terminal request "
+                "is missing its submit->terminal flow chain")
+        print(f"tracing: overhead x{ratio:.3f} "
+              f"({cand.get('trace_tokens_per_s', 0.0):.0f} tok/s) "
+              f"events={cand.get('trace_events')} "
+              f"dropped={cand.get('trace_dropped')} "
+              f"schema_valid={cand.get('trace_schema_valid')} "
+              f"chains={cand.get('trace_complete_chains')}")
+    elif "trace_tokens_per_s" in base:
+        failures.append("candidate run dropped the tracing-overhead "
+                        "workload (trace_* fields missing)")
+
+    # ---- trace-report gates (fig04 --trace-report merged into the same
+    # run).  The replayed VirtualClock trace is the determinism anchor:
+    # byte-identical fingerprints across runs, a schema-valid timeline,
+    # real preemption pressure, and non-vacuous per-class phase
+    # attribution.
+    if "trep_events" in cand:
+        phase_keys = [f"trep_{c}_{p}_s"
+                      for c in ("interactive", "batch", "best_effort")
+                      for p in ("queued", "running", "requeued")]
+        preempt_keys = [f"trep_{c}_preemptions"
+                        for c in ("interactive", "batch", "best_effort")]
+        _require(cand, failures, "trace-report", [
+            "trep_requests", "trep_dropped",
+            "trep_fingerprint_deterministic", "trep_schema_valid",
+            "trep_preemptions", "trep_explain_ok",
+            *phase_keys, *preempt_keys])
+        if not cand.get("trep_fingerprint_deterministic", False):
+            failures.append(
+                "trace-report fingerprint not deterministic: two "
+                "VirtualClock replays of the same seeded trace produced "
+                "different event streams")
+        if not cand.get("trep_schema_valid", False):
+            failures.append(
+                "trace-report timeline failed Chrome/Perfetto schema "
+                "validation (benchmarks/check_trace)")
+        if cand.get("trep_dropped", 0) != 0:
+            failures.append(
+                "trace-report tracer ring dropped events "
+                f"({cand.get('trep_dropped')})")
+        if not cand.get("trep_preemptions", 0) >= 1:
+            failures.append(
+                "trace-report workload inert: the oversubscribed "
+                "mixed-class trace produced no preemptions")
+        busy = sum(cand.get(k, 0.0) or 0.0 for k in phase_keys)
+        if not busy > 0.0:
+            failures.append(
+                "trace-report phase attribution vacuous: zero total "
+                "queued/running/requeued seconds across all classes")
+        if not cand.get("trep_explain_ok", False):
+            failures.append(
+                "Engine.explain stopped rendering causal chains (phase "
+                "durations / terminal status missing from the text)")
+        print(f"trace report: events={cand.get('trep_events')} "
+              f"requests={cand.get('trep_requests')} "
+              f"deterministic={cand.get('trep_fingerprint_deterministic')} "
+              f"preemptions={cand.get('trep_preemptions')} "
+              f"interactive_queued_s="
+              f"{cand.get('trep_interactive_queued_s', 0.0):.3f} "
+              f"explain_ok={cand.get('trep_explain_ok')}")
+    elif "trep_events" in base:
+        failures.append("candidate run dropped the trace-report "
+                        "workload (trep_* fields missing)")
+
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
@@ -585,7 +705,9 @@ def check(runs, threshold: float) -> int:
           ">= 1.8x concurrent slots at equal HBM bytes and clean "
           "preemption/CoW fault paths, SLO policy beats FIFO on "
           "interactive p99 TTFT at token parity with goodput >= FIFO "
-          "on a byte-identical seeded trace")
+          "on a byte-identical seeded trace, tracing overhead <= 5% "
+          "with a schema-valid deterministic Perfetto timeline and "
+          "complete submit->terminal flow chains")
     return 0
 
 

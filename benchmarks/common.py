@@ -29,6 +29,27 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def assert_clean_teardown(eng, requests=(), label: str = "workload") -> int:
+    """End-of-workload invariants every gated fig14/fig04 serve workload
+    must satisfy before its numbers enter the trajectory: zero leaked
+    page references (``Engine.leaked_pages``), a drained admission
+    queue, no slot still holding a live request, and every tracked
+    request in a terminal status.  Returns the leak count (always 0 on
+    success) so call sites can record it."""
+    from repro.serve.scheduler import RequestStatus
+
+    leaked = eng.leaked_pages()
+    assert leaked == 0, f"{label}: {leaked} page refs leaked at teardown"
+    assert not eng.queue, (
+        f"{label}: {len(eng.queue)} requests still queued at teardown")
+    live = [r.rid for r in eng._slot_req if r is not None]
+    assert not live, f"{label}: slots still live at teardown: {live}"
+    bad = [(r.rid, r.status) for r in requests
+           if r.status not in RequestStatus.TERMINAL]
+    assert not bad, f"{label}: non-terminal requests at teardown: {bad}"
+    return leaked
+
+
 def write_bench_json(filename: str, record: Dict) -> pathlib.Path:
     """Append ``record`` (stamped with wall time) to a repo-root trajectory
     file ``{"runs": [...]}`` so successive PRs accumulate a perf history."""

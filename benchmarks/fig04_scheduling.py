@@ -24,7 +24,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, merge_into_last_run, time_fn
+from benchmarks.common import (assert_clean_teardown, emit,
+                               merge_into_last_run, time_fn)
 from repro.configs import ARCH_IDS, SHAPES, get_config, reduced
 from repro.core import autotune, tuner
 from repro.models import moe
@@ -111,6 +112,7 @@ def slo_scheduling_comparison(n_req: int = 24, seed: int = 11) -> dict:
 
     fifo, ls_fifo, toks_fifo = run("fifo")
     slo, ls_slo, toks_slo = run("slo")
+    fifo_reqs, slo_reqs = list(fifo.finished), list(slo.finished)
 
     def cls(ls, name, key):
         c = ls["classes"].get(name)
@@ -162,6 +164,8 @@ def slo_scheduling_comparison(n_req: int = 24, seed: int = 11) -> dict:
         slo._drain(toks)
     rec["slo_decode_sync_free"] = sync_free
     rec.update(_pool_telemetry(slo, "slo_"))
+    assert_clean_teardown(fifo, fifo_reqs, label="slo_mix_fifo")
+    assert_clean_teardown(slo, slo_reqs, label="slo_mix_slo")
 
     emit("fig04.slo_interactive_ttft_p99",
          rec["slo_interactive_ttft_p99"],
@@ -176,6 +180,108 @@ def slo_scheduling_comparison(n_req: int = 24, seed: int = 11) -> dict:
     return rec
 
 
+def trace_report(n_req: int = 24, seed: int = 11) -> dict:
+    """``--trace-report``: lifecycle-trace diagnostics on the SLO mix.
+
+    Replays the same seeded mixed-class trace as ``--slo-mix`` on a
+    **traced** SLO engine under a ``VirtualClock`` and renders the
+    tracer's view into gated ``trep_*`` keys: per-class phase-time
+    breakdown (seconds queued / running / requeued, summed over
+    requests — the "where did my TTFT go" answer), the preemption
+    timeline length, Chrome-trace schema validity
+    (``benchmarks/check_trace.validate`` on ``Engine.export_trace``),
+    and byte-determinism of the trace fingerprint across two replays
+    (virtual timestamps flow into the events, so a replayed experiment
+    reproduces its trace exactly).  Gated by check_serve_regression:
+    schema valid, deterministic fingerprint, zero dropped events,
+    >= 1 preemption observed in the trace, all phase totals present."""
+    from benchmarks.check_trace import validate as validate_trace
+    from benchmarks.fig14_dispatch_overhead import _pool_telemetry
+    from repro.configs import get_config, reduced
+    from repro.models import model_defs
+    from repro.models import module as m
+    from repro.serve import traffic
+    from repro.serve.engine import Engine
+    from repro.serve.trace import _lifecycle_phases
+
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    gen_kw = dict(rate=100.0, process="poisson",
+                  class_mix={"interactive": 0.4, "batch": 0.4,
+                             "best_effort": 0.2})
+    trace = traffic.TrafficGenerator(seed, **gen_kw).generate(n_req)
+    kw = dict(slots=4, max_len=64, page_size=8, num_pages=12,
+              sync_interval=4, prefix_sharing=False, seed=0)
+
+    def run_traced():
+        clk = traffic.VirtualClock(dt=0.05)
+        eng = Engine(cfg, params, policy="slo", clock=clk, trace=True,
+                     **kw)
+        eng.warmup()
+        traffic.replay(eng, trace, clock=clk)
+        return eng
+
+    eng = run_traced()
+    reqs = list(eng.finished)
+    fp = eng.tracer.fingerprint()
+    deterministic = fp == run_traced().tracer.fingerprint()
+
+    evs = eng.tracer.events()
+    cls_of = {e.rid: e.attrs.get("slo_class", "best_effort")
+              for e in evs if e.kind == "submit"}
+    by_rid = {}
+    for e in evs:
+        if e.rid is not None:
+            by_rid.setdefault(e.rid, []).append(e)
+    phase_s = {}                    # (class, phase) -> summed seconds
+    for rid, revs in by_rid.items():
+        for name, a, b, _slot in _lifecycle_phases(revs):
+            end = revs[-1].ts if b is None else b
+            key = (cls_of.get(rid, "best_effort"), name)
+            phase_s[key] = phase_s.get(key, 0.0) + (end - a)
+    preempts = [e for e in evs if e.kind == "preempt"]
+    preempt_by_cls = {}
+    for e in preempts:
+        c = cls_of.get(e.rid, "best_effort")
+        preempt_by_cls[c] = preempt_by_cls.get(c, 0) + 1
+
+    failures = validate_trace(eng.export_trace())
+    for f in failures:
+        print(f"# trace schema failure: {f}")
+    # a preempted request's explain must render its full causal chain
+    sample = preempts[0].rid if preempts else reqs[0].rid
+    txt = eng.explain(sample)
+    explain_ok = "phase durations:" in txt and "terminal:" in txt
+
+    rec = {
+        "trep_requests": n_req,
+        "trep_trace_seed": seed,
+        "trep_events": len(eng.tracer),
+        "trep_dropped": eng.tracer.dropped,
+        "trep_fingerprint_deterministic": deterministic,
+        "trep_schema_valid": not failures,
+        "trep_preemptions": len(preempts),
+        "trep_explain_ok": explain_ok,
+    }
+    for c in ("interactive", "batch", "best_effort"):
+        for phase in ("queued", "running", "requeued"):
+            rec[f"trep_{c}_{phase}_s"] = phase_s.get((c, phase), 0.0)
+        rec[f"trep_{c}_preemptions"] = preempt_by_cls.get(c, 0)
+    rec.update(_pool_telemetry(eng, "trep_"))
+    assert_clean_teardown(eng, reqs, label="trace_report")
+
+    emit("fig04.trep_schema_valid", float(rec["trep_schema_valid"]),
+         f"events={rec['trep_events']},dropped={rec['trep_dropped']},"
+         f"deterministic={deterministic}")
+    emit("fig04.trep_interactive_queued_s",
+         rec["trep_interactive_queued_s"],
+         f"running={rec['trep_interactive_running_s']:.3f}s,"
+         f"batch_queued={rec['trep_batch_queued_s']:.3f}s,"
+         f"preempts={rec['trep_preemptions']}")
+    return rec
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -184,10 +290,19 @@ if __name__ == "__main__":
                     help="run the SLO-vs-FIFO serving workload and merge "
                          "its slo_* record into the last BENCH_serve.json "
                          "run instead of the MoE/cost-model figures")
+    ap.add_argument("--trace-report", action="store_true",
+                    help="replay the SLO mix on a traced engine and merge "
+                         "trep_* lifecycle diagnostics (per-class phase "
+                         "times, preemption timeline, schema validity, "
+                         "fingerprint determinism) into the last "
+                         "BENCH_serve.json run")
     args, _ = ap.parse_known_args()
     if args.slo_mix:
         path = merge_into_last_run("BENCH_serve.json",
                                    slo_scheduling_comparison())
         print(f"# slo workload merged into {path}", flush=True)
-    else:
+    if args.trace_report:
+        path = merge_into_last_run("BENCH_serve.json", trace_report())
+        print(f"# trace report merged into {path}", flush=True)
+    if not (args.slo_mix or args.trace_report):
         main()

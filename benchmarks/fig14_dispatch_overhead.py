@@ -71,12 +71,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, write_bench_json
+from benchmarks.common import assert_clean_teardown, emit, write_bench_json
 
 N_TASKS = 1000
 
 
-def _serve_workload(eng, n_req: int, max_new: int):
+def _serve_workload(eng, n_req: int, max_new: int, track=None):
     from repro.serve.engine import Request
 
     for i in range(n_req):
@@ -89,6 +89,8 @@ def _serve_workload(eng, n_req: int, max_new: int):
     dt = time.perf_counter() - t0
     assert len(done) == n_req
     toks = sum(len(r.out_tokens) for r in done)
+    if track is not None:
+        track.extend(done)
     eng.finished = []
     return dt, toks
 
@@ -111,6 +113,8 @@ def shared_prefix_comparison(n_req: int = 12, max_new: int = 16) -> dict:
                            jnp.float32)
     prefix = [(3 * j) % 200 + 1 for j in range(16)]
 
+    seen = {}
+
     def load(eng):
         for i in range(n_req):
             tail = [(7 * i + j) % 150 + 1 for j in range(1 + i % 4)]
@@ -122,6 +126,7 @@ def shared_prefix_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         assert len(done) == n_req
         toks = sum(len(r.out_tokens) for r in done)
         out = {r.rid: r.out_tokens for r in done}
+        seen.setdefault(id(eng), []).extend(done)
         eng.finished = []
         return out, toks / dt
 
@@ -189,6 +194,8 @@ def shared_prefix_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         eng._drain(toks)
     rec["prefix_decode_sync_free"] = sync_free
     rec.update(_pool_telemetry(eng, "prefix_"))
+    assert_clean_teardown(excl, seen[id(excl)], label="prefix_exclusive")
+    assert_clean_teardown(eng, seen[id(eng)], label="prefix_shared")
 
     emit("fig14.prefix_hit_rate", rec["prefix_hit_rate"],
          f"tokens_skipped={rec['prefill_tokens_skipped']},"
@@ -282,6 +289,8 @@ def paged_kernel_comparison(n_req: int = 12, max_new: int = 16) -> dict:
               sync_interval=16, prefix_sharing=False,
               chunked_prefill=False)    # legacy-pinned trajectory
 
+    seen = {}
+
     def load(eng):
         for i in range(n_req):
             plen = 2 + (5 * i) % 11
@@ -294,6 +303,7 @@ def paged_kernel_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         assert len(done) == n_req
         toks = sum(len(r.out_tokens) for r in done)
         out = {r.rid: r.out_tokens for r in done}
+        seen.setdefault(id(eng), []).extend(done)
         eng.finished = []
         return out, toks / dt
 
@@ -357,6 +367,8 @@ def paged_kernel_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         "paged_kernel_table_blocks": paged.spec.max_blocks,
     }
     rec.update(_pool_telemetry(paged, "paged_kernel_"))
+    assert_clean_teardown(gather, seen[id(gather)], label="paged_gather")
+    assert_clean_teardown(paged, seen[id(paged)], label="paged_kernel")
     emit("fig14.paged_kernel_speedup", rec["paged_kernel_speedup"],
          f"paged={paged_tps:.0f}tok/s,gather={gather_tps:.0f}tok/s,"
          f"backend={rec['paged_kernel_backend']}")
@@ -402,6 +414,8 @@ def speculative_comparison(max_new: int = 48) -> dict:
               prefix_sharing=False,
               chunked_prefill=False)    # legacy-pinned trajectory
 
+    seen = {}
+
     def load(eng):
         for i, t in enumerate(toks):
             eng.submit(Request(rid=i, prompt=[t] * 20,
@@ -412,6 +426,7 @@ def speculative_comparison(max_new: int = 48) -> dict:
         assert len(done) == len(toks)
         n = sum(len(r.out_tokens) for r in done)
         out = {r.rid: r.out_tokens for r in done}
+        seen.setdefault(id(eng), []).extend(done)
         eng.finished = []
         return out, n / dt
 
@@ -488,6 +503,10 @@ def speculative_comparison(max_new: int = 48) -> dict:
         "spec_admit_compiles": spec.admit_compiles,
     }
     rec.update(_pool_telemetry(spec, "spec_"))
+    # base_d / spec_d deliberately hold live slots (steady-state decode
+    # window) and are excluded from the drained-teardown contract
+    assert_clean_teardown(base, seen[id(base)], label="spec_baseline")
+    assert_clean_teardown(spec, seen[id(spec)], label="spec_engine")
     emit("fig14.spec_acceptance", rec["spec_acceptance_rate"],
          f"tokens_per_step={rec['spec_tokens_per_step']:.2f},"
          f"match={outputs_match}")
@@ -539,6 +558,8 @@ def fault_tolerance_comparison(n_req: int = 8, max_new: int = 16) -> dict:
     prompts = [[(3 * i + j) % 250 + 1 for j in range(2 + (5 * i) % 11)]
                for i in range(n_req)]
 
+    seen = {}
+
     def load(eng, ttl=None, doomed=False):
         for i, p in enumerate(prompts):
             assert eng.submit(Request(rid=i, prompt=list(p),
@@ -556,6 +577,7 @@ def fault_tolerance_comparison(n_req: int = 8, max_new: int = 16) -> dict:
                if r.status == RequestStatus.FINISHED}
         statuses = {r.rid: r.status for r in done}
         preempted = sorted(r.rid for r in done if r.preemptions > 0)
+        seen.setdefault(id(eng), []).extend(done)
         eng.finished = []
         return out, statuses, preempted
 
@@ -608,6 +630,8 @@ def fault_tolerance_comparison(n_req: int = 8, max_new: int = 16) -> dict:
         "ft_decode_sync_free": sync_free,
     }
     rec.update(_pool_telemetry(eng, "ft_"))
+    assert_clean_teardown(calm, seen[id(calm)], label="ft_calm")
+    assert_clean_teardown(eng, seen[id(eng)], label="ft_oversubscribed")
     emit("fig14.ft_goodput", goodput,
          f"preemptions={fs['preemptions']},"
          f"resumes={fs['resumes']},"
@@ -652,6 +676,7 @@ def chunked_prefill_comparison(n_arrivals: int = 3,
               prefix_sharing=False, seed=0)
     arrival_gap = 10                       # chunks between arrivals
     warm_chunks = 2                        # untimed settle-in chunks
+    seen = {}
 
     def long_prompt(r):
         return [(3 * r + j) % 250 + 1 for j in range(prompt_len)]
@@ -695,6 +720,7 @@ def chunked_prefill_comparison(n_arrivals: int = 3,
             assert chunk < 500, "arrival window failed to drain"
         done = eng.run(max_steps=200_000)
         out = {r.rid: list(r.out_tokens) for r in done}
+        seen.setdefault(id(eng), []).extend(done)
         eng.finished = []
         return out, chunk_times, [ttft[r] for r in sorted(ttft)]
 
@@ -767,6 +793,8 @@ def chunked_prefill_comparison(n_arrivals: int = 3,
         "cp_fused_gather_free": gather_free,
     }
     rec.update(_pool_telemetry(fused, "cp_"))
+    assert_clean_teardown(legacy, seen[id(legacy)], label="cp_legacy")
+    assert_clean_teardown(fused, seen[id(fused)], label="cp_fused")
     emit("fig14.cp_p99_ratio", p99_ratio,
          f"fused_p99={fused_p99:.2f}ms,legacy_p99={legacy_p99:.2f}ms,"
          f"match={outputs_match}")
@@ -843,12 +871,15 @@ def quantized_pool_comparison(n_req: int = 8, max_new: int = 48) -> dict:
     kw = dict(slots=4, max_len=256, page_size=8, sync_interval=8,
               prefix_sharing=False)
 
+    seen = {}
+
     def load(eng, reqs, ttl=None):
         for rid, p, mn in reqs:
             eng.submit(Request(rid=rid, prompt=list(p), max_new_tokens=mn,
                                ttl=ttl))
         done = eng.run(max_steps=200_000)
         out = {r.rid: list(r.out_tokens) for r in done}
+        seen.setdefault(id(eng), []).extend(done)
         eng.finished = []
         return out
 
@@ -988,6 +1019,10 @@ def quantized_pool_comparison(n_req: int = 8, max_new: int = 48) -> dict:
         "qp_decode_sync_free": sync_free,
     }
     rec.update(_pool_telemetry(quant, "qp_"))
+    for e, lbl in ((base, "qp_fp32"), (quant, "qp_int8"),
+                   (cap, "qp_capacity"), (pre, "qp_preempt"),
+                   (share, "qp_cow"), (excl, "qp_exclusive")):
+        assert_clean_teardown(e, seen[id(e)], label=lbl)
     emit("fig14.qp_greedy_match", greedy_match,
          f"exact={exact}/{n_req},logit_err={max_logit_err:.4f},"
          f"loss={train_loss:.3f}")
@@ -1012,7 +1047,7 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
                            jnp.float32)
 
-    def timed_trials(eng, trials: int = 3):
+    def timed_trials(eng, trials: int = 3, track=None):
         """Best tokens/sec + steps/sec over ``trials`` runs (overhead
         benchmarks take the min time; the tail is scheduler noise).
         Tokens/sec is the fair cross-engine metric: the fused engine's
@@ -1021,7 +1056,7 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         best_tps, best_sps, syncs_per_step = 0.0, 0.0, 0.0
         for _ in range(trials):
             steps0, syncs0 = eng.steps, eng.host_syncs
-            dt, toks = _serve_workload(eng, n_req, max_new)
+            dt, toks = _serve_workload(eng, n_req, max_new, track=track)
             if toks / dt > best_tps:
                 best_tps = toks / dt
                 best_sps = (eng.steps - steps0) / dt
@@ -1045,7 +1080,8 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     eng.run(max_steps=100_000)
     eng.finished = []
 
-    eng_tps, eng_sps, eng_syncs = timed_trials(eng)
+    tracked = []
+    eng_tps, eng_sps, eng_syncs = timed_trials(eng, track=tracked)
 
     # steady-state decode is sync-free two ways: (a) the engine's own
     # accounting — exactly one batched drain per sync_interval steps; (b)
@@ -1065,6 +1101,57 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
     assert sync_free, "decode chunk performed a device->host transfer"
     assert abs(eng_syncs - 1.0 / eng.sync_interval) < 1e-9, eng_syncs
     mem_end = eng.memory_stats()
+    assert_clean_teardown(eng, tracked, label="serve_engine")
+
+    # --- tracing overhead on the SAME baseline workload: a traced twin
+    # engine runs identical best-of-3 trials; the tracer records one
+    # host-side event per lifecycle transition at chunk boundaries, so
+    # throughput must stay within 5% (gated by check_serve_regression)
+    # and the chunk must remain one sync-free executable.
+    from benchmarks.check_trace import validate as validate_trace
+    from repro.serve.trace import TERMINAL_KINDS
+
+    traced = Engine(cfg, params, slots=4, max_len=64, sync_interval=16,
+                    chunked_prefill=False, trace=True)
+    traced.warmup()
+    _serve_workload(traced, n_req, max_new)       # host-path warm
+    traced_reqs = []
+    trace_tps, _, _ = timed_trials(traced, track=traced_reqs)
+
+    trace_sync_free = True
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            toks = traced.step_chunk()
+    except Exception as e:  # noqa: BLE001 - classify, don't swallow
+        if "transfer" not in str(e).lower():
+            raise
+        trace_sync_free = False
+    else:
+        traced._drain(toks)
+    assert_clean_teardown(traced, traced_reqs, label="serve_engine_traced")
+
+    trace_obj = traced.export_trace()
+    trace_failures = validate_trace(trace_obj)
+    term_events = [e for e in traced.tracer.events()
+                   if e.kind in TERMINAL_KINDS]
+    # every terminal request left a complete submit->terminal chain —
+    # 4 workload runs (1 warm + 3 timed) of n_req requests each
+    chains_complete = not any("without" in f for f in trace_failures) \
+        and len(term_events) >= 4 * n_req \
+        and {e.rid for e in term_events} >= set(range(n_req))
+
+    rec_trace = {
+        "trace_tokens_per_s": trace_tps,
+        "trace_overhead_ratio": trace_tps / eng_tps,
+        "trace_decode_sync_free": trace_sync_free,
+        "trace_decode_compiles": traced.decode_compiles,
+        "trace_events": len(traced.tracer),
+        "trace_dropped": traced.tracer.dropped,
+        "trace_schema_valid": not trace_failures,
+        "trace_complete_chains": chains_complete,
+    }
+    for f in trace_failures:
+        print(f"# trace schema failure: {f}")
 
     rec = {
         "arch": cfg.name,
@@ -1099,6 +1186,11 @@ def serve_engine_comparison(n_req: int = 12, max_new: int = 16) -> dict:
         "kv_dtype": mem_end["kv_dtype"],
         "peak_live_slots": mem_end["peak_live_slots"],
     }
+    rec.update(rec_trace)
+    emit("fig14.trace_overhead_ratio", rec["trace_overhead_ratio"],
+         f"traced={trace_tps:.0f}tok/s,untraced={eng_tps:.0f}tok/s,"
+         f"events={rec['trace_events']},"
+         f"schema_valid={rec['trace_schema_valid']}")
     emit("fig14.engine_ref_steps_per_s", 1e6 / rec["ref_steps_per_s"],
          f"syncs_per_step={rec['ref_host_syncs_per_step']:.2f}")
     emit("fig14.engine_new_steps_per_s", 1e6 / rec["new_steps_per_s"],

@@ -36,6 +36,13 @@ budget throttling; ``--slo-class`` tags the synthetic workload, and
 seeded deterministic mixed-class arrival trace (serve/traffic.py) on a
 virtual clock instead, printing per-class TTFT/TPOT percentiles and
 goodput from ``Engine.latency_stats()``.
+
+``--trace out.json`` turns on the request-lifecycle tracer
+(serve/trace.py): every submit/admit/preempt/resume/finish transition
+is recorded host-side at chunk boundaries (zero added device syncs)
+and exported as a Chrome-trace/Perfetto timeline — per-slot tracks,
+flow arrows following each request across preemption, and counter
+tracks for pool occupancy and queue depth.  See docs/observability.md.
 """
 
 import argparse
@@ -146,6 +153,16 @@ def main() -> None:
                          "TTFT/TPOT percentiles + goodput)")
     ap.add_argument("--traffic-rate", type=float, default=8.0,
                     help="arrivals per virtual clock unit for --traffic")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record request-lifecycle trace events "
+                         "(serve/trace.py ring buffer; zero added device "
+                         "syncs) and export a Chrome-trace/Perfetto "
+                         "timeline JSON here at exit — open it in "
+                         "ui.perfetto.dev or chrome://tracing; also "
+                         "prints the unified Engine.observe() metric "
+                         "snapshot and an Engine.explain() causal chain "
+                         "for one request.  benchmarks/check_trace.py "
+                         "validates the exported schema in CI")
     args = ap.parse_args()
 
     import jax
@@ -194,7 +211,8 @@ def main() -> None:
                  chunked_prefill={"auto": "auto", "on": True,
                                   "off": False}[args.chunked_prefill],
                  prefill_budget=args.prefill_budget,
-                 kv_dtype=args.kv_dtype)
+                 kv_dtype=args.kv_dtype,
+                 trace=args.trace is not None)
     if eng.kv_dtype != eng.requested_kv_dtype:
         print(f"kv-dtype: '{eng.requested_kv_dtype}' unsupported on this "
               f"toolchain -> fp32 pools")
@@ -309,6 +327,15 @@ def main() -> None:
               f"{ps['cow_copies']} CoW copies, "
               f"{ps['radix_evictions']} evictions, "
               f"{ps['radix_pages']} pages indexed")
+    if args.trace is not None:
+        eng.export_trace(args.trace)
+        obs = eng.observe(spec=False)
+        print(f"trace: {obs['trace.events']} lifecycle events "
+              f"({obs['trace.dropped']} dropped) over "
+              f"{obs['engine.chunks']} chunks -> {args.trace} "
+              f"(open in ui.perfetto.dev)")
+        if done:
+            print(eng.explain(min(r.rid for r in done)))
 
 
 if __name__ == "__main__":

@@ -57,6 +57,11 @@ class ChaosMonkey:
         self.garbage_drafter = bool(garbage_drafter)
         self.max_faults = max_faults
         self._stalled: Set[int] = set()
+        # Optional observer hook: the Engine points this at its tracer
+        # so every injected fault lands in the request-lifecycle trace
+        # (repro.serve.trace).  Called host-side at chunk boundaries
+        # only, with (fault_name, **attrs); None disables it.
+        self.on_event = None
         self.counters: Dict[str, int] = {
             "admission_denials": 0,
             "forced_preemptions": 0,
@@ -82,11 +87,16 @@ class ChaosMonkey:
             return False
         return bool(self._rng.random() < p)
 
+    def _emit(self, fault: str, **attrs) -> None:
+        if self.on_event is not None:
+            self.on_event(fault, **attrs)
+
     def deny_admission(self) -> bool:
         """One boundary's admissions are refused (simulated pool
         exhaustion at admission time)."""
         if self._fire(self.p_deny_admission):
             self.counters["admission_denials"] += 1
+            self._emit("admission_denial")
             return True
         return False
 
@@ -94,7 +104,9 @@ class ChaosMonkey:
         """Slots to forcibly preempt this boundary (at most one)."""
         if live_slots and self._fire(self.p_preempt):
             self.counters["forced_preemptions"] += 1
-            return [int(self._rng.choice(live_slots))]
+            victim = int(self._rng.choice(live_slots))
+            self._emit("forced_preemption", slot=victim)
+            return [victim]
         return []
 
     def tick(self, live_slots: List[int]) -> None:
@@ -103,8 +115,10 @@ class ChaosMonkey:
         calls ``clear_stall``), so the only exit is the recovery path."""
         fresh = [s for s in live_slots if s not in self._stalled]
         if fresh and self._fire(self.p_stall):
-            self._stalled.add(int(self._rng.choice(fresh)))
+            victim = int(self._rng.choice(fresh))
+            self._stalled.add(victim)
             self.counters["stalls_started"] += 1
+            self._emit("stall_started", slot=victim)
 
     def stalled(self, slot: int) -> bool:
         """True while the drain must pretend ``slot`` reported nothing."""
@@ -121,6 +135,7 @@ class ChaosMonkey:
         CoW/splice failure)."""
         if self._fire(self.p_sharing_fault):
             self.counters["sharing_faults"] += 1
+            self._emit("sharing_fault")
             return True
         return False
 

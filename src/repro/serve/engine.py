@@ -43,6 +43,7 @@ per-token-sync loop as the measurement baseline and equivalence oracle for
 from __future__ import annotations
 
 import contextlib
+import json
 import math
 import time
 from typing import Any, Callable, Dict, List, Optional
@@ -57,7 +58,9 @@ from repro.models import (forward_decode, forward_prefill, forward_verify,
 from repro.models import module as m
 from repro.parallel import sharding as sh
 from repro.serve import cache as cache_mod
+from repro.serve import metrics as metrics_mod
 from repro.serve import sampling
+from repro.serve import trace as trace_mod
 from repro.serve.cache import CacheSpec, empty_batch_cache  # noqa: F401
 from repro.serve.chaos import ChaosMonkey, GarbageDrafter  # noqa: F401
 from repro.serve.scheduler import (SLO_CLASSES, Admission,  # noqa: F401
@@ -754,6 +757,7 @@ class Engine:
                  clock: Optional[Callable[[], float]] = None,
                  stall_patience: int = 0,
                  chaos: Optional[ChaosMonkey] = None,
+                 trace: Any = None,
                  chunked_prefill: Any = "auto",
                  prefill_budget: int = 32,
                  kv_dtype: str = "auto"):
@@ -958,8 +962,31 @@ class Engine:
                              f"got {shed_policy!r}")
         self.shed_policy = shed_policy
         self._clock = clock if clock is not None else time.monotonic
+        # ---- observability (serve/trace.py, serve/metrics.py): a
+        # bounded lifecycle tracer recorded at chunk boundaries only.
+        # None/False disables it entirely (the default: zero overhead);
+        # True builds a default-capacity Tracer, an int sets the ring
+        # capacity, and a Tracer instance is used as-is.
+        if trace in (None, False):
+            self.tracer = None
+        elif isinstance(trace, trace_mod.Tracer):
+            self.tracer = trace
+        elif trace is True:
+            self.tracer = trace_mod.Tracer()
+        elif isinstance(trace, int):
+            self.tracer = trace_mod.Tracer(capacity=trace)
+        else:
+            raise TypeError(f"trace must be None/bool/int/Tracer, "
+                            f"got {trace!r}")
+        # chunk sequence number: incremented once per drain, stamped on
+        # every drained token (Request.token_chunks), every admission
+        # (admission_log 5th element), and every trace event at the
+        # boundary — the cross-reference key between all three.
+        self.chunks = 0
         self.chaos = chaos
         self.scheduler.chaos = chaos
+        if chaos is not None and self.tracer is not None:
+            chaos.on_event = self._chaos_event
         if chaos is not None and chaos.p_stall > 0 and stall_patience <= 0:
             stall_patience = 4   # a stall must end in watchdog recovery
         self.stall_patience = int(stall_patience)
@@ -1104,6 +1131,56 @@ class Engine:
                                 if steps else 0.0),
         }
 
+    # ------------------------------------------------------ observability
+    def _trace(self, kind: str, rid: Optional[int] = None,
+               slot: Optional[int] = None, ts: Optional[float] = None,
+               **attrs: Any) -> None:
+        """Record one lifecycle event when tracing is on.  Host-only:
+        called at chunk boundaries with the boundary's existing clock
+        read where one exists (``ts``), so the decode chunk stays
+        sync-free and traced runs stay token-identical."""
+        if self.tracer is None:
+            return
+        self.tracer.record(kind, self._clock() if ts is None else ts,
+                           rid=rid, slot=slot, **attrs)
+
+    def _chaos_event(self, fault: str, **attrs: Any) -> None:
+        slot = attrs.pop("slot", None)
+        self._trace("chaos", slot=slot, fault=fault, **attrs)
+
+    def observe(self, *, spec: bool = True) -> Dict[str, Any]:
+        """One flat snapshot of every stats surface — ``memory_stats`` /
+        ``fault_stats`` / ``latency_stats`` / ``spec_stats`` /
+        ``prefix_stats`` — under the stable dotted metric names declared
+        in ``repro.serve.metrics`` (``pool.pages_in_use``,
+        ``sched.preemptions.pressure``, ``spec.acceptance``, ...).
+        ``spec=False`` skips the one device read behind
+        ``spec_stats``."""
+        return metrics_mod.snapshot(self, spec=spec)
+
+    def export_trace(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """Chrome-trace / Perfetto JSON of the buffered lifecycle events
+        (per-slot tracks, per-request flow arrows across preempt/resume,
+        counter tracks for pool occupancy and queue depth).  Writes to
+        ``path`` when given; returns the trace object either way.
+        ``benchmarks/check_trace.py`` validates the schema in CI."""
+        if self.tracer is None:
+            raise ValueError("tracing is disabled; construct the Engine "
+                             "with trace=True (or a capacity / Tracer)")
+        obj = trace_mod.to_chrome_trace(self.tracer.events())
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(obj, f)
+        return obj
+
+    def explain(self, rid: int) -> str:
+        """Per-request text explain: the causal chain from submit to
+        terminal with per-phase durations, from the lifecycle trace."""
+        if self.tracer is None:
+            raise ValueError("tracing is disabled; construct the Engine "
+                             "with trace=True (or a capacity / Tracer)")
+        return trace_mod.explain(self.tracer.events(), rid)
+
     # ------------------------------------------------------------ serving
     def submit(self, req: Request) -> Optional[RequestRejected]:
         """Enqueue a request, or shed it with a typed result.
@@ -1154,6 +1231,9 @@ class Engine:
             req.submit_time = self._clock()   # resume keeps the original
         if req.deadline is None and req.ttl is not None:
             req.deadline = self._clock() + req.ttl
+        self._trace("submit", rid=req.rid, ts=req.submit_time,
+                    slo_class=req.slo_class, plen=len(req.prompt),
+                    max_new=req.max_new_tokens)
         if self.queue_limit is not None \
                 and len(self.scheduler.queue) >= self.queue_limit:
             shed = self._shed(req)
@@ -1172,6 +1252,8 @@ class Engine:
         self.fault_counters["rejected"] += 1
         self.fault_counters[f"rejected_{kind}"] += 1
         self.rejected.append(req)
+        self._trace("reject", rid=req.rid, ts=req.finish_time,
+                    why=kind, status=req.status)
         return RequestRejected(req=req, kind=kind, reason=reason)
 
     def _shed(self, req: Request) -> Optional[RequestRejected]:
@@ -1478,6 +1560,8 @@ class Engine:
         elif status == RequestStatus.CANCELLED:
             self.fault_counters["cancelled"] += 1
         self.finished.append(req)
+        self._trace("finish", rid=req.rid, ts=req.finish_time,
+                    status=req.status, tokens=len(req.out_tokens))
 
     def _evict_slot(self, slot: int, status: str) -> None:
         req = self._slot_req[slot]
@@ -1507,6 +1591,8 @@ class Engine:
                 r.slo_class for s2, r in enumerate(self._slot_req)
                 if r is not None and s2 != slot
                 and r.preemptions < r.max_preemptions]})
+        self._trace("preempt", rid=req.rid, slot=slot, why=why,
+                    preemptions=req.preemptions)
         upto = None
         if self.chunked_prefill \
                 and self._slot_seen_len[slot] < self._slot_plen[slot]:
@@ -1531,6 +1617,9 @@ class Engine:
 
         for req in [r for r in self.scheduler.queue if dead(r)]:
             self.scheduler.queue.remove(req)
+            self._trace("reap", rid=req.rid, ts=now,
+                        why="cancelled" if req.cancel_requested
+                        else "timed_out")
             self._finish_terminal(
                 req, RequestStatus.CANCELLED if req.cancel_requested
                 else RequestStatus.TIMED_OUT)
@@ -1538,6 +1627,9 @@ class Engine:
             req = self._slot_req[slot]
             if req is None or not dead(req):
                 continue
+            self._trace("reap", rid=req.rid, slot=slot, ts=now,
+                        why="cancelled" if req.cancel_requested
+                        else "timed_out")
             self._evict_slot(
                 slot, RequestStatus.CANCELLED if req.cancel_requested
                 else RequestStatus.TIMED_OUT)
@@ -1552,10 +1644,30 @@ class Engine:
             pend.clear()
             pvalid.clear()
 
-        for adm in self.scheduler.admissions(free, now=self._clock()):
+        # stamp this boundary's admissions with the current chunk id so
+        # the admission_log cross-references token_chunks / trace events
+        self.scheduler.current_chunk = self.chunks
+        now = self._clock()
+        for adm in self.scheduler.admissions(free, now=now):
             req, slot = adm.req, adm.slot
             prompt = req.effective_prompt   # resume: replay emitted tail
             plen = len(prompt)
+            if self.tracer is not None:
+                resume = req.preemptions > 0
+                if adm.suffix_start > 0:
+                    self._trace("radix_hit", rid=req.rid, slot=slot,
+                                ts=now, matched_tokens=adm.suffix_start,
+                                resume=resume)
+                if adm.cow is not None:
+                    self._trace("cow", rid=req.rid, slot=slot, ts=now,
+                                src_page=adm.cow[1], dst_page=adm.cow[2])
+                if resume:
+                    self._trace("resume", rid=req.rid, slot=slot, ts=now,
+                                preemptions=req.preemptions)
+                self._trace("admit", rid=req.rid, slot=slot, ts=now,
+                            chunk=self.chunks,
+                            suffix_start=adm.suffix_start, plen=plen,
+                            resume=resume)
             if self.chunked_prefill:
                 # fused chunked prefill: no prefill dispatch at all.  The
                 # admission stages the prompt and rewinds the slot's len
@@ -1721,6 +1833,13 @@ class Engine:
             cache_len = None
         self.host_syncs += 1
         now = self._clock()   # one host clock read stamps every token
+        self.chunks += 1      # chunk sequence number for this drain
+        if self.tracer is not None:
+            self._trace("chunk", ts=now, chunk=self.chunks,
+                        queue_depth=len(self.scheduler.queue),
+                        pages_in_use=self.scheduler.pages_in_use,
+                        live_slots=sum(r is not None
+                                       for r in self._slot_req))
         watchdog: List[int] = []
         for slot in range(self.slots):
             req = self._slot_req[slot]
@@ -1746,6 +1865,10 @@ class Engine:
                     progressed = True   # mid-prefill progress ≠ a stall
                     prev = self._slot_seen_len[slot]
                     self._slot_seen_len[slot] = seen
+                    if prev < plen0:
+                        self._trace("prefill", rid=req.rid, slot=slot,
+                                    ts=now, seen=seen, plen=plen0,
+                                    chunk=self.chunks)
                     if prev < plen0 <= seen:
                         # prefill completed this chunk: NOW every prompt
                         # page is written, so the prompt becomes visible
@@ -1756,6 +1879,7 @@ class Engine:
                 # out_tokens, so presence of output cannot gate this)
                 req.out_tokens.append(int(firsts[slot][0]))
                 req.token_times.append(now)
+                req.token_chunks.append(self.chunks)
                 if req.first_token_time is None:
                     req.first_token_time = now
                 self._slot_first_pending[slot] = False
@@ -1768,6 +1892,7 @@ class Engine:
                 assert len(vals) <= k, (slot, len(vals), k)
                 req.out_tokens.extend(vals[-k:])
                 req.token_times.extend([now] * len(vals[-k:]))
+                req.token_chunks.extend([self.chunks] * len(vals[-k:]))
                 if req.first_token_time is None and req.token_times:
                     # TTFT from the ORIGINAL submit_time — a request
                     # preempted mid-prefill and resumed later keeps its
@@ -1784,6 +1909,9 @@ class Engine:
                 req.done = True
                 req.finish_time = now
                 self.finished.append(req)
+                self._trace("finish", rid=req.rid, slot=slot, ts=now,
+                            status=req.status,
+                            tokens=len(req.out_tokens))
                 self._slot_req[slot] = None
                 self._slot_first_tok[slot] = None
                 self._slot_first_pending[slot] = False

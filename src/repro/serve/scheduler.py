@@ -136,6 +136,12 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     token_times: List[float] = dataclasses.field(default_factory=list)
+    # Parallel to token_times: the engine chunk sequence number whose
+    # drain emitted each token.  Tokens drained by the same chunk share
+    # one host clock read, so token_times alone aliases them — the
+    # chunk id disambiguates TPOT attribution and cross-references the
+    # admission_log / trace events (repro.serve.trace).
+    token_chunks: List[int] = dataclasses.field(default_factory=list)
     _seq: int = 0   # scheduler-assigned arrival order (slack tiebreak)
 
     def cancel(self) -> None:
@@ -471,10 +477,15 @@ class Scheduler:
         self.resume_recovered_tokens = 0
         self.resume_replayed_tokens = 0
         # arrival-order sequence for slack ties + admission-order log
-        # [(boundary, rid, priority, slack)] the property tests replay
+        # [(boundary, rid, priority, slack, chunk)] the property tests
+        # replay; ``chunk`` is the engine chunk sequence number current
+        # at the boundary (Engine sets ``current_chunk`` before calling
+        # admissions), cross-referencing trace events and the per-token
+        # ``Request.token_chunks`` telemetry.
         self._seq = 0
         self._boundary = 0
-        self.admission_log: List[Tuple[int, int, int, float]] = []
+        self.current_chunk = 0
+        self.admission_log: List[Tuple[int, int, int, float, int]] = []
 
     # ------------------------------------------------------------ compat
     @property
@@ -686,7 +697,7 @@ class Scheduler:
             self.queue.remove(head)
             self.admission_log.append(
                 (self._boundary, head.rid, head.priority,
-                 head.ttft_slack(now)))
+                 head.ttft_slack(now), self.current_chunk))
             adm.slot = free_slots.pop(0)
             self._leases[adm.slot] = adm.lease
             self._rows[adm.slot] = adm.rows

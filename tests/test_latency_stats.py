@@ -214,7 +214,7 @@ def test_engine_slo_policy_admits_interactive_first_and_throttles():
     assert vec == [S] * eng.spec.slots
     # the interactive rid was admitted before the two still-queued
     # batch rids despite arriving after them
-    admits = [rid for _, rid, _, _ in eng.scheduler.admission_log]
+    admits = [rid for _, rid, _, _, _ in eng.scheduler.admission_log]
     assert admits.index(10) < admits.index(2)
     assert admits.index(10) < admits.index(3)
     assert eng.leaked_pages() == 0

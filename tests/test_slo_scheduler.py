@@ -156,7 +156,7 @@ def test_slo_admissions_in_slack_order_within_boundary(ops):
             h.now += op[1]
     h.drain()
     by_boundary = {}
-    for boundary, rid, prio, slack in h.sched.admission_log:
+    for boundary, rid, prio, slack, _chunk in h.sched.admission_log:
         by_boundary.setdefault(boundary, []).append((prio, slack, rid))
     for boundary, entries in by_boundary.items():
         keys = [(p, s) for p, s, _ in entries]

@@ -1,0 +1,259 @@
+"""Observability invariants: tracing on vs off is token-identical with
+identical compile counts and a sync-free decode chunk (tracing records
+host-side at chunk boundaries only); the bounded ring evicts oldest
+non-terminal events while terminal events survive by contract; seeded
+``TrafficGenerator`` replays under a ``VirtualClock`` produce
+byte-identical trace fingerprints; ``Engine.observe()`` emits only
+registry-known dotted names; ``export_trace`` / ``explain`` render
+complete submit->terminal chains."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model_defs
+from repro.models import module as m
+from repro.serve import metrics
+from repro.serve.engine import Engine, Request
+from repro.serve.trace import TERMINAL_KINDS, Tracer, to_chrome_trace
+from repro.serve.traffic import TrafficGenerator, VirtualClock, replay
+
+
+def _model(arch, **kw):
+    cfg = reduced(get_config(arch), **kw)
+    params = m.init_params(model_defs(cfg), jax.random.PRNGKey(0),
+                           jnp.float32)
+    return cfg, params
+
+
+def _workload(eng, n=6):
+    for i in range(n):
+        plen = 2 + (3 * i) % 7
+        eng.submit(Request(rid=i, prompt=[(i + j) % 150 + 1
+                                          for j in range(plen)],
+                           max_new_tokens=4 + i % 3))
+    return eng.run(max_steps=50_000)
+
+
+# ---------------------------------------------------------------------------
+# Tracing on vs off: token parity, compile parity, sync freedom
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "gemma2-2b"])
+def test_tracing_is_invisible_to_outputs_and_compiles(arch):
+    """Tracing must be a pure host-side observer: identical tokens and
+    identical executable counts with and without it."""
+    cfg, params = _model(arch)
+    runs = {}
+    for traced in (False, True):
+        eng = Engine(cfg, params, slots=2, max_len=64,
+                     prefix_sharing=False, trace=traced)
+        done = _workload(eng)
+        runs[traced] = ({r.rid: list(r.out_tokens) for r in done},
+                        (eng.prefill_compiles, eng.suffix_prefill_compiles,
+                         eng.decode_compiles, eng.admit_compiles))
+        if traced:
+            evs = eng.tracer.events()
+            assert {e.kind for e in evs} >= {"submit", "admit", "chunk",
+                                             "finish"}
+            assert eng.tracer.dropped == 0
+    assert runs[False][0] == runs[True][0]
+    assert runs[False][1] == runs[True][1]
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "gemma2-2b"])
+def test_traced_decode_chunk_stays_sync_free(arch):
+    """With tracing on, the fused decode chunk still performs zero
+    device->host transfers (events are recorded by the host drain at
+    chunk boundaries, from the drain's one clock read)."""
+    cfg, params = _model(arch)
+    eng = Engine(cfg, params, slots=2, max_len=64,
+                 prefix_sharing=False, trace=True)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=32))
+    eng.submit(Request(rid=1, prompt=[4, 5], max_new_tokens=32))
+    eng._admit()
+    with jax.transfer_guard_device_to_host("disallow"):
+        toks = eng.step_chunk()
+        toks2 = eng.step_chunk()
+    eng._drain(jnp.concatenate([toks, toks2]))
+    assert eng.host_syncs == 1 and eng.steps == 2 * eng.sync_interval
+    assert eng.decode_compiles == 1
+    assert len(eng.tracer.events()) > 0
+
+
+def test_token_chunks_parallel_to_token_times():
+    """Satellite bugfix: every emitted token carries the chunk sequence
+    number it was drained in, parallel to token_times, and admission_log
+    entries carry the chunk id for cross-referencing."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, sync_interval=4,
+                 prefix_sharing=False)
+    done = _workload(eng, n=4)
+    for r in done:
+        assert len(r.token_chunks) == len(r.token_times) \
+            == len(r.out_tokens)
+        assert r.token_chunks == sorted(r.token_chunks)  # monotone
+        # tokens drained in the same chunk share the same timestamp;
+        # distinct chunk ids disambiguate them for TPOT attribution
+        for i in range(1, len(r.token_chunks)):
+            if r.token_chunks[i] == r.token_chunks[i - 1]:
+                assert r.token_times[i] == r.token_times[i - 1]
+    assert len({c for r in done for c in r.token_chunks}) > 1
+    for entry in eng.scheduler.admission_log:
+        assert len(entry) == 5
+        assert entry[4] >= 0                             # the chunk id
+
+
+# ---------------------------------------------------------------------------
+# Ring buffer: bounded, oldest-first eviction, terminal retention
+# ---------------------------------------------------------------------------
+
+def test_ring_evicts_oldest_but_never_terminal_events():
+    tr = Tracer(capacity=8)
+    for i in range(6):
+        tr.record("chunk", float(i), chunk=i)
+    tr.record("finish", 6.0, rid=0, status="FINISHED")
+    tr.record("reject", 7.0, rid=1, why="queue_full")
+    assert len(tr) == 8 and tr.dropped == 0
+    for i in range(20):
+        tr.record("prefill", 8.0 + i, rid=2, slot=0)
+    # ring stayed bounded; evicted chunk/prefill events were counted
+    # (2 of the 8 retained are the pinned terminals, so 6 of the 26
+    # non-terminal events survive and 20 were dropped)
+    assert len(tr) == tr.capacity
+    assert tr.dropped == 20
+    kinds = [e.kind for e in tr.events()]
+    assert kinds.count("finish") == 1 and kinds.count("reject") == 1
+    # events() stays seq-ordered even with pinned terminals interleaved
+    seqs = [e.seq for e in tr.events()]
+    assert seqs == sorted(seqs)
+
+
+def test_ring_terminal_events_may_exceed_capacity():
+    """Terminal events are never dropped, even if that means holding
+    more than ``capacity`` events."""
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.record("finish", float(i), rid=i, status="FINISHED")
+    assert len(tr) == 10 and tr.dropped == 0
+    assert all(e.kind in TERMINAL_KINDS for e in tr.events())
+    with pytest.raises(ValueError):
+        Tracer(capacity=0)
+
+
+def test_engine_trace_capacity_and_eviction_end_to_end():
+    """A tiny engine-side ring still retains every terminal event after
+    a workload that overflows it many times over."""
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, sync_interval=2,
+                 prefix_sharing=False, trace=8)
+    done = _workload(eng, n=6)
+    assert len(done) == 6
+    assert eng.tracer.dropped > 0
+    terms = [e for e in eng.tracer.events() if e.kind in TERMINAL_KINDS]
+    assert sorted(e.rid for e in terms) == list(range(6))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fingerprints under VirtualClock replay
+# ---------------------------------------------------------------------------
+
+def test_replayed_traffic_yields_identical_fingerprints():
+    """Two virtual-clock replays of one seeded trace produce
+    byte-identical trace fingerprints (the property fig04
+    --trace-report gates); a different traffic seed changes them."""
+    cfg, params = _model("internlm2-1.8b")
+
+    def once(seed):
+        trace = TrafficGenerator(seed, rate=3.0,
+                                 process="bursty").generate(8)
+        clk = VirtualClock(dt=0.05)
+        eng = Engine(cfg, params, slots=2, max_len=64, page_size=8,
+                     num_pages=10, sync_interval=4, policy="slo",
+                     prefix_sharing=False, clock=clk, trace=True)
+        replay(eng, trace, clock=clk)
+        assert eng.leaked_pages() == 0
+        return eng.tracer.fingerprint()
+
+    fp1, fp2 = once(5), once(5)
+    assert fp1 == fp2
+    assert fp1 != once(6)
+
+
+# ---------------------------------------------------------------------------
+# observe() registry discipline + exporters
+# ---------------------------------------------------------------------------
+
+def test_observe_emits_only_registered_names():
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, trace=True)
+    _workload(eng, n=3)
+    obs = eng.observe()
+    assert obs, "observe() returned nothing"
+    for name, value in obs.items():
+        assert metrics.kind_of(name) is not None, name
+        assert isinstance(value, (int, float, bool)), (name, value)
+    # the registry's headline names are present
+    for name in ("engine.chunks", "engine.host_syncs",
+                 "pool.pages_in_use", "pool.peak_pages_in_use",
+                 "sched.admissions", "sched.preemptions.total",
+                 "latency.goodput", "trace.events", "trace.dropped"):
+        assert name in obs, name
+    # metric names are stable API: renaming one must raise loudly
+    with pytest.raises(KeyError):
+        metrics._put({}, "engine.not_a_metric", 1)
+
+
+def test_export_trace_and_explain_complete_chains(tmp_path):
+    cfg, params = _model("internlm2-1.8b")
+    eng = Engine(cfg, params, slots=2, max_len=64, trace=True)
+    done = _workload(eng, n=4)
+    path = tmp_path / "trace.json"
+    obj = eng.export_trace(str(path))
+    assert json.loads(path.read_text()) == obj
+    evs = obj["traceEvents"]
+    # every finished rid has a submit instant, a terminal instant, and
+    # a flow chain (s ... f) linking them
+    for r in done:
+        inst = [e for e in evs if e["ph"] == "i"
+                and e.get("args", {}).get("rid") == r.rid]
+        assert any(e["name"] == "submit" for e in inst), r.rid
+        assert any(e["name"] == "finish" for e in inst), r.rid
+        flows = [e for e in evs if e["ph"] in ("s", "t", "f")
+                 and e.get("id") == str(r.rid)]
+        assert [e["ph"] for e in flows][:1] == ["s"]
+        assert [e["ph"] for e in flows][-1:] == ["f"]
+        txt = eng.explain(r.rid)
+        assert "submit" in txt and "terminal: FINISHED" in txt
+        assert "queued:" in txt and "running:" in txt
+    assert eng.explain(9999) == "rid 9999: no trace events recorded"
+    # untraced engines refuse rather than silently returning nothing
+    bare = Engine(cfg, params, slots=1, max_len=64)
+    with pytest.raises(ValueError):
+        bare.export_trace()
+    with pytest.raises(ValueError):
+        bare.explain(0)
+
+
+def test_chrome_trace_preempt_flow_spans_slot_hop():
+    """A preempted-and-resumed request's flow chain hops across slot
+    tracks and its wait phases include a requeued span."""
+    tr = Tracer()
+    tr.record("submit", 0.0, rid=7)
+    tr.record("admit", 1.0, rid=7, slot=0, chunk=1)
+    tr.record("preempt", 2.0, rid=7, slot=0, why="pressure")
+    tr.record("admit", 3.0, rid=7, slot=1, chunk=3, resume=True)
+    tr.record("finish", 4.0, rid=7, slot=1, status="FINISHED")
+    obj = to_chrome_trace(tr.events())
+    evs = obj["traceEvents"]
+    flows = [e for e in evs if e["ph"] in ("s", "t", "f")]
+    assert [e["ph"] for e in flows] == ["s", "t", "t", "t", "f"]
+    assert flows[-1]["bp"] == "e"
+    assert len({e["tid"] for e in flows}) == 3     # queue + both slots
+    waits = [e for e in evs if e["ph"] == "b"]
+    assert [w["args"]["phase"] for w in waits] == ["queued", "requeued"]
+    runs = [e for e in evs if e["ph"] == "X"]
+    assert len(runs) == 2 and all(e["dur"] > 0 for e in runs)
